@@ -1,0 +1,21 @@
+"""Shared benchmark utilities.  Every bench prints `name,us_per_call,derived`
+CSV rows (derived = the paper-relevant quantity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, out          # microseconds
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

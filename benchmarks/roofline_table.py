@@ -1,0 +1,39 @@
+"""Roofline table generator — reads experiments/dryrun_*.json (produced by
+launch/dryrun.py) and emits the per-(arch x shape x mesh) roofline rows for
+EXPERIMENTS.md §Roofline.  CSV derived column = dominant term + seconds.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+EXP = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def load(mesh="single"):
+    p = EXP / f"dryrun_{mesh}.json"
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def main():
+    for mesh in ("single", "multi"):
+        data = load(mesh)
+        for key, rec in sorted(data.items()):
+            if not rec.get("ok"):
+                row(f"roofline_{mesh}_{key}", 0.0, "FAILED")
+                continue
+            r = rec["roofline"]
+            ratio = rec.get("model_vs_hlo_flops")
+            row(f"roofline_{mesh}_{key}", 0.0,
+                f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+                f"collective_s={r['collective_s']:.4f};dom={r['dominant']};"
+                f"useful_flops_ratio={ratio if ratio is None else round(ratio, 3)}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

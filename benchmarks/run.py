@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.row).
+
+  building_blocks — Table 1 (R / W / R+W / BigBird MLM ablation)
+  scaling         — Sec. 1-2 linear-complexity + 8x-longer-sequence claims
+  blockify        — App. D blockified-vs-gather-vs-dense implementation
+  encdec_parity   — Sec. 4.1 sparse-encoder seq2seq parity (Tab. 4/20)
+  context_length  — Fig. 8 / Tab. 5: longer context helps MLM
+  roofline_table  — §Roofline rows from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["scaling", "blockify", "building_blocks", "encdec_parity",
+           "context_length", "roofline_table"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    names = args.only or BENCHES
+    failures = []
+    for name in names:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception as e:  # pragma: no cover - report and continue
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR:{type(e).__name__}")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,110 @@
+"""Paper Sec. 5 — Genomics: DNA MLM pretraining + promoter-region prediction
+(Tables 5 & 6), offline reproduction on a synthetic genome with planted
+promoter motifs.
+
+    PYTHONPATH=src python examples/genomics_mlm.py
+
+Pipeline (mirrors App. F):
+  1. synthesize a GRCh37-like genome with TATA-box/CpG promoter motifs,
+  2. build a subword tokenizer (~the paper's 8.78 bp/token sentencepiece),
+  3. MLM-pretrain a BigBird encoder over long DNA contexts,
+  4. fine-tune a [CLS] head for promoter classification; report F1.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionSpec
+from repro.data import dna
+from repro.launch import steps as S
+from repro.models import model as M
+
+t0 = time.time()
+print("[1/4] synthesizing genome...")
+genome, sites = dna.synthesize_genome(dna.GenomeConfig(length=400_000))
+tok = dna.DnaTokenizer(genome, vocab_size=1024)
+print(f"    genome=400kb, promoters={len(sites)}, vocab={tok.vocab_size}, "
+      f"~{400_000/len(tok.encode(genome[:50_000]))/8:.1f} bp/token")
+
+print("[2/4] MLM pretraining (BigBird encoder over DNA)...")
+bigbird = AttentionSpec(kind="bigbird", causal=False, block_size=16,
+                        num_window_blocks=3, num_global_blocks=1,
+                        num_random_blocks=2, impl="blockified")
+cfg = M.ModelConfig(name="dna", d_model=96, num_layers=3, num_heads=4,
+                    num_kv_heads=4, d_ff=256, vocab_size=tok.vocab_size,
+                    attn=bigbird, dtype=jnp.float32, loss_chunk=64)
+opt = S.make_optimizer(schedule="cosine", peak_lr=2e-3, warmup=10, total=120)
+ts = jax.jit(S.make_train_step(cfg, opt), donate_argnums=(0,))
+params = M.init(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+gen = dna.mlm_batches(genome, tok, batch=8, seq_len=256)
+first = last = None
+for step in range(120):
+    batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+    state, m = ts(state, batch)
+    if first is None:
+        first = float(m["loss"])
+    last = float(m["loss"])
+bpc = last / np.log(2) / 8.78        # nats/token -> bits/char (Tab. 5 metric)
+print(f"    MLM loss {first:.3f} -> {last:.3f}  (~{bpc:.3f} BPC)")
+
+print("[3/4] promoter fine-tune (full-model, [CLS] head — paper App. F.2)...")
+X, y = dna.promoter_dataset(genome, sites, tok, n_examples=512, frag=240,
+                            seq_len=64)
+# prepend [CLS] (paper: prediction from the CLS position)
+X = np.concatenate([np.full((len(X), 1), tok.cls, np.int32), X[:, :-1]], 1)
+Xt, yt = X[:384], y[:384]
+Xe, ye = X[384:], y[384:]
+
+clf = {"trunk": state["params"],
+       "head": {"w": jnp.zeros((cfg.d_model, 2), jnp.float32),
+                "b": jnp.zeros((2,), jnp.float32)}}
+
+
+def clf_logits(clf, xb):
+    h, _ = M.hidden_states(clf["trunk"], cfg, {"tokens": xb, "labels": xb})
+    return h[:, 0].astype(jnp.float32) @ clf["head"]["w"] + clf["head"]["b"]
+
+
+def clf_loss(clf, xb, yb):
+    logits = clf_logits(clf, xb)
+    onehot = jax.nn.one_hot(yb, 2)
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), -1))
+
+
+from repro.optim import optimizers as Opt, schedules
+ft_opt = Opt.adamw(schedules.constant(5e-4), weight_decay=0.0)
+ft_state = ft_opt.init(clf)
+
+
+@jax.jit
+def ft_step(clf, ft_state, step, xb, yb):
+    l, g = jax.value_and_grad(clf_loss)(clf, xb, yb)
+    clf, ft_state, _ = ft_opt.update(g, ft_state, clf, step)
+    return clf, ft_state, l
+
+
+step_ctr = jnp.zeros((), jnp.int32)
+for epoch in range(8):
+    perm = np.random.default_rng(epoch).permutation(len(Xt))
+    for i in range(0, len(Xt), 32):
+        sl = perm[i:i + 32]
+        clf, ft_state, l = ft_step(clf, ft_state, step_ctr,
+                                   jnp.asarray(Xt[sl]), jnp.asarray(yt[sl]))
+        step_ctr = step_ctr + 1
+
+print("[4/4] evaluating...")
+pred = np.asarray(jnp.argmax(clf_logits(clf, jnp.asarray(Xe)), -1))
+tp = int(((pred == 1) & (ye == 1)).sum())
+fp = int(((pred == 1) & (ye == 0)).sum())
+fn = int(((pred == 0) & (ye == 1)).sum())
+prec = tp / max(tp + fp, 1)
+rec = tp / max(tp + fn, 1)
+f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+print(f"    promoter F1 = {f1:.3f}  (precision {prec:.3f}, recall {rec:.3f})"
+      f"  [{time.time()-t0:.0f}s total]")
+assert f1 > 0.8, "promoter classification should be strong on planted motifs"
+print("OK — Sec. 5 pipeline reproduced end-to-end (synthetic genome).")

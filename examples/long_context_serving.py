@@ -1,0 +1,59 @@
+"""End-to-end serving driver: a ~25M-parameter BigBird LM serving BATCHED
+requests with long prompts, demonstrating the bounded-decode property —
+per-token cache reads are O((g+w+r)*b), independent of context length.
+
+    PYTHONPATH=src python examples/long_context_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionSpec
+from repro.models import decode as D
+from repro.models import model as M
+
+bigbird = AttentionSpec(kind="bigbird", causal=True, block_size=64,
+                        num_window_blocks=3, num_global_blocks=1,
+                        num_random_blocks=2, impl="blockified")
+cfg = M.ModelConfig(name="serve25m", d_model=256, num_layers=8, num_heads=8,
+                    num_kv_heads=4, d_ff=1024, vocab_size=8192, attn=bigbird,
+                    dtype=jnp.float32, loss_chunk=256)
+
+params = M.init(cfg, jax.random.PRNGKey(0))
+n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+print(f"[serve] model: {n/1e6:.1f}M params, bounded BigBird decode")
+
+B, PROMPT, GEN, MAXLEN = 4, 1024, 48, 2048
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 4,
+                            cfg.vocab_size)
+
+prefill = jax.jit(lambda p, b: D.prefill(p, cfg, b, MAXLEN))
+step = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
+
+t0 = time.time()
+logits, cache = jax.block_until_ready(
+    prefill(params, {"tokens": prompt, "labels": prompt}))
+t_prefill = time.time() - t0
+print(f"[serve] prefill {B}x{PROMPT} tokens: {t_prefill:.2f}s "
+      f"({B*PROMPT/t_prefill:.0f} tok/s)")
+
+tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+t0 = time.time()
+outs = [tok]
+for i in range(GEN - 1):
+    logits, cache = step(params, cache, tok, PROMPT + i)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    outs.append(tok)
+jax.block_until_ready(tok)
+t_dec = time.time() - t0
+print(f"[serve] decoded {B}x{GEN} tokens: {t_dec:.2f}s "
+      f"({B*GEN/t_dec:.1f} tok/s, {t_dec/GEN*1e3:.0f} ms/step batched)")
+
+# bounded-read property: per-token attention reads (g+w+r)*b keys per layer,
+# independent of the 1024-token context
+reads = (1 + 3 + 2) * 64
+print(f"[serve] per-token cache reads/layer: {reads} keys "
+      f"(vs {PROMPT} for full attention — {PROMPT/reads:.1f}x fewer)")
+print("OK — batched long-context serving with bounded decode.")

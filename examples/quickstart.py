@@ -1,0 +1,60 @@
+"""Quickstart: build a BigBird LM, train it, generate from it — in 2 minutes
+on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as S
+from repro.models import decode as D
+from repro.models import model as M
+
+# --- 1. a BigBird attention spec: the paper's three components -------------
+bigbird = AttentionSpec(
+    kind="bigbird", causal=True,
+    block_size=16,           # App. D blockification
+    num_window_blocks=3,     # locality  (w)
+    num_global_blocks=1,     # star graph (g) — the theory's key ingredient
+    num_random_blocks=2,     # expander  (r)
+    impl="blockified",       # paper-faithful XLA path ("pallas" on TPU)
+)
+
+# --- 2. a model using it ----------------------------------------------------
+cfg = M.ModelConfig(
+    name="quickstart", d_model=128, num_layers=4, num_heads=4, num_kv_heads=2,
+    d_ff=512, vocab_size=512, attn=bigbird, dtype=jnp.float32,
+    loss_chunk=128)
+
+# --- 3. train ---------------------------------------------------------------
+opt = S.make_optimizer(schedule="cosine", peak_lr=3e-3, warmup=10, total=60)
+train_step = jax.jit(S.make_train_step(cfg, opt), donate_argnums=(0,))
+data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                              batch_size=8, seed=0))
+
+params = M.init(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+for step in range(60):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+    state, metrics = train_step(state, batch)
+    if step % 10 == 0 or step == 59:
+        print(f"step {step:3d}  loss {float(metrics['loss']):.3f}  "
+              f"lr {float(metrics['lr']):.1e}")
+
+# --- 4. generate (bounded BigBird decode: O(1) cache reads per token) -------
+prompt = jnp.asarray(data.batch(999)["tokens"][:1, :64])
+_, cache = jax.jit(lambda p, b: D.prefill(p, cfg, b, 128))(
+    state["params"], {"tokens": prompt, "labels": prompt})
+tok = prompt[:, -1:]
+out = []
+step_fn = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
+for i in range(24):
+    logits, cache = step_fn(state["params"], cache, tok, 64 + i)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out.append(int(tok[0, 0]))
+print("generated:", out)
+print("OK — loss fell and the model generates; see examples/genomics_mlm.py "
+      "and examples/summarize_encdec.py for the paper's applications.")

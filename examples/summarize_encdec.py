@@ -1,0 +1,93 @@
+"""Paper Sec. 4.1 — document summarization with a SPARSE ENCODER and a full
+decoder (the BigBird-RoBERTa/Pegasus recipe).
+
+Task: lead-summarization — the summary is the document's lead (first S_DEC
+tokens), the classic "Lead" baseline of the summarization literature
+(paper Tab. 20 row 1).  The decoder must cross-attend into the
+BigBird-encoded document with monotone alignment; teacher-forced loss
+falls well below the unigram baseline within the CPU budget and keeps
+dropping (full convergence needs more steps than a CPU affords — the
+machinery, not the wall-clock, is the point here).
+
+    PYTHONPATH=src python examples/summarize_encdec.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionSpec
+from repro.launch import steps as S
+from repro.models import decode as D
+from repro.models import model as M
+
+S_ENC, S_DEC, V, BOS = 128, 16, 256, 5
+STEPS = 800
+t0 = time.time()
+
+sparse_encoder = AttentionSpec(kind="bigbird", causal=False, block_size=16,
+                               num_window_blocks=3, num_global_blocks=1,
+                               num_random_blocks=1, impl="blockified")
+cfg = M.ModelConfig(name="summ", kind="encdec", d_model=64, num_layers=2,
+                    enc_layers=2, num_heads=4, num_kv_heads=4, d_ff=128,
+                    vocab_size=V, dec_len=S_DEC, enc_attn=sparse_encoder,
+                    dtype=jnp.float32, scan_layers=False, remat="none",
+                    loss_chunk=16, frontend="audio")
+
+
+def make_batch(step, B=16):
+    rng = np.random.default_rng(step)
+    doc = rng.integers(8, V, size=(B, S_ENC)).astype(np.int32)
+    tgt = doc[:, :S_DEC]
+    dec_in = np.concatenate([np.full((B, 1), BOS), tgt[:, :-1]],
+                            axis=1).astype(np.int32)
+    return doc, dec_in, tgt
+
+
+opt = S.make_optimizer(schedule="constant", peak_lr=5e-3)
+ts = jax.jit(S.make_train_step(cfg, opt), donate_argnums=(0,))
+params = M.init(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params),
+         "step": jnp.zeros((), jnp.int32)}
+
+print(f"[summarize] BigBird encoder ({S_ENC}) -> full decoder ({S_DEC})")
+first = None
+for step in range(STEPS):
+    doc, dec_in, tgt = make_batch(step)
+    frames = jnp.take(state["params"]["embed"]["table"], jnp.asarray(doc),
+                      axis=0)
+    batch = {"frames": frames, "tokens": jnp.asarray(dec_in),
+             "labels": jnp.asarray(tgt)}
+    state, m = ts(state, batch)
+    if first is None:
+        first = float(m["loss"])
+    if step % 100 == 0 or step == STEPS - 1:
+        print(f"  step {step:3d} loss {float(m['loss']):.3f}", flush=True)
+last = float(m["loss"])
+assert last < first - 1.0, "teacher-forced loss should fall substantially"
+
+# held-out: teacher-forced token accuracy + incremental greedy decode
+doc, dec_in, tgt = make_batch(999_999, B=8)
+frames = jnp.take(state["params"]["embed"]["table"], jnp.asarray(doc), axis=0)
+batch = {"frames": frames, "tokens": jnp.asarray(dec_in),
+         "labels": jnp.asarray(tgt)}
+tf_logits = M.logits_fn(state["params"], cfg, batch)
+tf_acc = float((jnp.argmax(tf_logits, -1) == jnp.asarray(tgt)).mean())
+
+bos = jnp.full((8, 1), BOS, jnp.int32)
+step_fn = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
+logits, cache = jax.jit(lambda p, b: D.prefill(p, cfg, b, cfg.dec_len))(
+    state["params"], {"frames": frames, "tokens": bos, "labels": bos})
+tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+hyp = [tok]
+for i in range(S_DEC - 1):
+    logits, cache = step_fn(state["params"], cache, tok, 1 + i)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    hyp.append(tok)
+greedy_acc = float((np.asarray(jnp.concatenate(hyp, 1)) == tgt).mean())
+
+print(f"[summarize] loss {first:.2f} -> {last:.2f}; held-out teacher-forced "
+      f"acc {tf_acc:.2%}, greedy acc {greedy_acc:.2%} [{time.time()-t0:.0f}s]")
+print("OK — sparse encoder + full decoder (paper's summarization recipe): "
+      "training converging, prefill+incremental decode exercised.")

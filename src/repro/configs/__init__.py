@@ -1,0 +1,118 @@
+"""Architecture registry + assigned input shapes.
+
+10 assigned archs x 4 shapes = 40 dry-run cells, plus the paper's own
+bigbird-base config.  ``input_specs`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.model import ModelConfig
+
+_MODULES = {
+    "internvl2-26b": "internvl2_26b",
+    "whisper-base": "whisper_base",
+    "minicpm-2b": "minicpm_2b",
+    "gemma3-4b": "gemma3_4b",
+    "yi-6b": "yi_6b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "grok-1-314b": "grok_1_314b",
+    "rwkv6-7b": "rwkv6_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "bigbird-base": "bigbird_base",
+}
+
+ARCHS = tuple(k for k in _MODULES if k != "bigbird-base")
+
+# assigned LM shapes: (seq_len, global_batch, mode)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+def optimizer_for(name: str) -> str:
+    return getattr(_module(name), "optimizer", "adamw")
+
+
+def schedule_for(name: str) -> str:
+    return getattr(_module(name), "schedule", "cosine")
+
+
+def config_for_cell(name: str, shape: str) -> ModelConfig:
+    """Config for an (arch, shape) dry-run cell.
+
+    long_500k swaps quadratic attention for the BigBird pattern
+    (DESIGN.md §Arch-applicability); all other cells use the reference config.
+    """
+    cfg = get(name)
+    if shape == "long_500k" and not common.is_subquadratic(cfg):
+        cfg = common.bigbird_variant(cfg)
+    return cfg
+
+
+def input_specs(name: str, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: token batch (+ frontend stubs).
+    decode: (cache, tokens, pos) — cache shapes via models.decode.cache_spec.
+    Returns (mode, dict | tuple) — see launch.steps for consumption.
+    """
+    from repro.models import decode as Dec
+
+    cfg = config_for_cell(name, shape)
+    seq, batch, mode = SHAPES[shape]
+    i32 = jnp.int32
+
+    if mode in ("train", "prefill"):
+        if cfg.kind == "encdec":
+            specs = {
+                "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((batch, cfg.dec_len), i32),
+                "labels": jax.ShapeDtypeStruct((batch, cfg.dec_len), i32),
+            }
+        else:
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            }
+            if cfg.frontend == "patch":
+                specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.frontend_len, cfg.d_model), cfg.dtype)
+        return mode, specs
+
+    # decode: one new token against a seq-length cache
+    if cfg.kind == "encdec":
+        cache = Dec.cache_spec(cfg, batch, cfg.dec_len, enc_len=seq)
+    else:
+        cache = Dec.cache_spec(cfg, batch, seq)
+    return mode, {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((batch, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def all_cells():
+    return [(a, s) for a in ARCHS for s in SHAPES]

@@ -1,0 +1,35 @@
+"""BigBird-base — the paper's own pretraining configuration (Tab. 8).
+
+12L d_model=768 12H d_ff=3072 vocab=50358, seq 4096, MLM objective,
+block 64, g = 2 blocks (ITC), w = 3 blocks, r = 3 blocks.
+BIGBIRD-ETC variant prepends 256 learned global tokens (g_etc).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "paper Tab. 8 (BIGBIRD-ITC-base); MLM objective"
+
+ITC = AttentionSpec(kind="bigbird", causal=False, block_size=64,
+                    num_window_blocks=3, num_global_blocks=2,
+                    num_random_blocks=3, impl="blockified")
+
+CONFIG = ModelConfig(
+    name="bigbird-base",
+    d_model=768, num_layers=12, num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab_size=50358,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=ITC, tie_embeddings=True,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512,
+    attn=dataclasses.replace(ITC, block_size=16, num_window_blocks=3,
+                             num_global_blocks=1, num_random_blocks=1),
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

@@ -1,0 +1,69 @@
+"""Shared helpers for architecture configs.
+
+Each assigned arch file defines:
+  CONFIG — the exact published configuration (full scale),
+  SMOKE  — a reduced same-family config for CPU smoke tests,
+  notes  — provenance string.
+
+`long_500k` policy (DESIGN.md §Arch-applicability): archs whose reference
+attention is quadratic get a **BigBird variant** for that cell —
+`bigbird_variant(cfg)` swaps every full-attention layer to the paper's
+pattern (b=64, w=3, g=2, r=3, causal) and leaves everything else identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+FULL_CAUSAL = AttentionSpec(kind="full", causal=True)
+
+# the paper's base sparse pattern (Tab. 8: block 64, g=2b, w=3b, r=3b)
+BIGBIRD_CAUSAL = AttentionSpec(
+    kind="bigbird", causal=True, block_size=64,
+    num_window_blocks=3, num_global_blocks=2, num_random_blocks=3,
+    impl="blockified")
+
+BIGBIRD_ENCODER = dataclasses.replace(BIGBIRD_CAUSAL, causal=False)
+
+
+def bigbird_variant(cfg: ModelConfig) -> ModelConfig:
+    """Swap full-attention layers to the BigBird pattern (long-context cells).
+
+    encdec: ONLY the encoder goes sparse — the decoder (and its short
+    self-attention) stays full, exactly the paper's seq2seq recipe (§4.1:
+    "sparse attention mechanism for the encoder and full self-attention for
+    the decoder").
+    """
+    if cfg.kind == "encdec":
+        if cfg.enc_attn is None or cfg.enc_attn.kind == "full":
+            return dataclasses.replace(cfg, enc_attn=BIGBIRD_ENCODER)
+        return cfg
+
+    def swap(spec):
+        if spec is None or spec.kind == "full":
+            return dataclasses.replace(
+                BIGBIRD_CAUSAL if (spec is None or spec.causal) else BIGBIRD_ENCODER)
+        return spec
+
+    pattern = tuple(
+        dataclasses.replace(ls, attn=swap(ls.attn)) if ls.kind == "attn" else ls
+        for ls in cfg.layer_pattern)
+    new = dataclasses.replace(cfg, layer_pattern=pattern)
+    if cfg.attn.kind == "full":
+        new = dataclasses.replace(new, attn=swap(cfg.attn))
+    return new
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    """True if no layer in the reference config does full attention."""
+    def full(spec):
+        return spec is None or spec.kind == "full"
+
+    if cfg.kind == "encdec" and full(cfg.enc_attn):
+        return False
+    for ls in cfg.layer_pattern:
+        if ls.kind == "attn" and full(ls.attn if ls.attn else cfg.attn):
+            return False
+    return True

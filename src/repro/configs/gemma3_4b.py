@@ -1,0 +1,46 @@
+"""gemma3-4b [dense] — 5:1 local:global interleave, 128k context
+[hf:google/gemma-3-1b-pt; unverified].
+
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
+Every 6th layer is global attention; the rest are 1024-token sliding-window
+(the BigBird window component, block-granular).  34 is not a multiple of 6,
+so the layer list is written out explicitly (scan disabled; 34 distinct
+layers — matches how the released model ends on local layers).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[hf:google/gemma-3-1b-pt; unverified] — 5 local : 1 global, SWA=1024"
+
+LOCAL = AttentionSpec(kind="window", causal=True, block_size=64,
+                      window_tokens=1024, impl="blockified")
+
+_pattern = tuple(
+    LayerSpec(kind="attn", attn=(FULL_CAUSAL if (i + 1) % 6 == 0 else LOCAL))
+    for i in range(34))
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    d_model=2560, num_layers=34, num_heads=8, num_kv_heads=4, head_dim=256,
+    d_ff=10240, vocab_size=262144,
+    layer_pattern=_pattern,
+    attn=FULL_CAUSAL, tie_embeddings=True,
+    rope_theta=1e6,
+    dtype=jnp.bfloat16, remat="full", scan_layers=False, max_seq=131072,
+)
+
+_smoke_pattern = tuple(
+    LayerSpec(kind="attn", attn=(
+        FULL_CAUSAL if (i + 1) % 6 == 0 else
+        dataclasses.replace(LOCAL, block_size=16, window_tokens=32)))
+    for i in range(6))
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=6, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, layer_pattern=_smoke_pattern,
+    dtype=jnp.float32, remat="none", loss_chunk=64, max_seq=256)

@@ -1,0 +1,31 @@
+"""grok-1-314b [moe] — 8 experts top-2 [hf:xai-org/grok-1; unverified].
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072.
+Optimizer recipe: Adafactor (optim state must fit 16 GB/chip at 314B).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.layers import MoEConfig
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[hf:xai-org/grok-1; unverified] — MoE 8e top-2; adafactor recipe"
+optimizer = "adafactor"
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    d_model=6144, num_layers=64, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072,
+    layer_pattern=(LayerSpec(kind="attn", moe=True),),
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff=32768),
+    attn=FULL_CAUSAL, tie_embeddings=False,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=8192,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, moe=MoEConfig(num_experts=4, top_k=2, d_ff=128),
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

@@ -1,0 +1,36 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; hf].
+
+24L d_model=2560 32H (GQA kv=8) d_ff=6912 vocab=32000.  SWA (mistral-style,
+4096-token window) is exactly the BigBird window component at block
+granularity (DESIGN.md §Arch-applicability).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2401.16818; hf] — SWA 4096 == BigBird window component"
+
+SWA = AttentionSpec(kind="window", causal=True, block_size=64,
+                    window_tokens=4096, impl="blockified")
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    d_model=2560, num_layers=24, num_heads=32, num_kv_heads=8, head_dim=80,
+    d_ff=6912, vocab_size=32000,
+    layer_pattern=(LayerSpec(kind="attn", attn=SWA),),
+    attn=SWA, tie_embeddings=False,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=16384,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512,
+    layer_pattern=(LayerSpec(kind="attn", attn=dataclasses.replace(
+        SWA, block_size=16, window_tokens=48)),),
+    attn=dataclasses.replace(SWA, block_size=16, window_tokens=48),
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

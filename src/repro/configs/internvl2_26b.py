@@ -1,0 +1,30 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821; hf].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+The ViT frontend is a STUB: input_specs provide precomputed patch embeddings
+(B, 256, d_model) spliced over the first 256 token positions.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2404.16821; hf] — LM backbone exact; ViT stubbed per assignment"
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    d_model=6144, num_layers=48, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=92553,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=FULL_CAUSAL,
+    rope_theta=1e6, tie_embeddings=False,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True,
+    frontend="patch", frontend_len=256, max_seq=32768,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, frontend_len=16, max_seq=256,
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64)

@@ -1,0 +1,45 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e
+top-2 [arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536.
+Period of 8 layers: attention at position 4, Mamba elsewhere; MoE on odd
+positions (every other layer).  BigBird applies to the 1-in-8 attention
+layers for the long-context cells; Mamba layers are already linear.
+Optimizer recipe: Adafactor (398B optimizer state must fit).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.layers import MoEConfig
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2403.19887; hf] — 1:7 attn:mamba, MoE every 2nd layer"
+optimizer = "adafactor"
+
+_pattern = tuple(
+    LayerSpec(kind=("attn" if i == 4 else "mamba"), moe=(i % 2 == 1))
+    for i in range(8))
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    d_model=8192, num_layers=72, num_heads=64, num_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=65536,
+    layer_pattern=_pattern,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=24576),
+    attn=FULL_CAUSAL, tie_embeddings=False,
+    mamba_d_state=16, mamba_expand=2, mamba_conv=4,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=262144,
+)
+
+_smoke_pattern = tuple(
+    LayerSpec(kind=("attn" if i == 2 else "mamba"), moe=(i % 2 == 1))
+    for i in range(4))
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=4, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, layer_pattern=_smoke_pattern,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff=128),
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

@@ -1,0 +1,31 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16 experts top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.layers import MoEConfig
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] — all-MoE, top-1"
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    d_model=5120, num_layers=48, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    layer_pattern=(LayerSpec(kind="attn", moe=True),),
+    moe=MoEConfig(num_experts=16, top_k=1, d_ff=8192),
+    attn=FULL_CAUSAL, tie_embeddings=False,
+    rope_theta=5e5,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=8192,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, moe=MoEConfig(num_experts=4, top_k=1, d_ff=128),
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

@@ -1,0 +1,29 @@
+"""minicpm-2b [dense] — llama-like, WSD schedule [arXiv:2404.06395; hf].
+
+40L d_model=2304 36H (kv=36, i.e. MHA) d_ff=5760 vocab=122753.
+The WSD (warmup-stable-decay) schedule lives in optim/schedules.py and is
+selected by the training recipe for this arch.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2404.06395; hf] — arch=llama-like; WSD schedule in optim"
+schedule = "wsd"
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    d_model=2304, num_layers=40, num_heads=36, num_kv_heads=36, head_dim=64,
+    d_ff=5760, vocab_size=122753,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=FULL_CAUSAL, tie_embeddings=True,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=72, num_layers=2, num_heads=4, num_kv_heads=4, head_dim=18,
+    d_ff=144, vocab_size=512, dtype=jnp.float32, scan_layers=False,
+    remat="none", loss_chunk=64, max_seq=256)

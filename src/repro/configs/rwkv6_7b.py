@@ -1,0 +1,30 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892; hf].
+
+32L d_model=4096 d_ff=14336 vocab=65536.  BigBird is inapplicable (no
+attention graph to sparsify — DESIGN.md §Arch-applicability); the WKV6
+recurrence has its own Pallas kernel (kernels/wkv6.py).  Natively O(n):
+long_500k runs the reference config.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2404.05892; hf] — attention-free; BigBird inapplicable"
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    d_model=4096, num_layers=32, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536,
+    layer_pattern=(LayerSpec(kind="rwkv"),),
+    rwkv_head_dim=64, tie_embeddings=False,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=524288,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=512, rwkv_head_dim=16,
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64,
+    max_seq=256)

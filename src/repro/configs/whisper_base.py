@@ -1,0 +1,35 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865.  Encoder consumes
+precomputed frame embeddings (B, S, 512) from the stub frontend; decoder is
+causal with cross-attention.  This is the paper's own seq2seq recipe
+(Sec. 4.1): sparse BigBird encoder + full decoder — enabled for the
+long-context cells via bigbird_variant.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2212.04356; unverified] — 6L+6L enc-dec, conv frontend stubbed"
+
+CONFIG = ModelConfig(
+    name="whisper-base", kind="encdec",
+    d_model=512, num_layers=6, enc_layers=6,
+    num_heads=8, num_kv_heads=8, head_dim=64,
+    d_ff=2048, vocab_size=51865, dec_len=448,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=FULL_CAUSAL,
+    enc_attn=AttentionSpec(kind="full", causal=False),
+    tie_embeddings=True,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True,
+    frontend="audio", max_seq=32768,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, enc_layers=2, num_heads=4, num_kv_heads=4,
+    head_dim=16, d_ff=128, vocab_size=512, dec_len=32, max_seq=256,
+    dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=32)

@@ -1,0 +1,27 @@
+"""yi-6b [dense] — llama-arch GQA [arXiv:2403.04652; hf].
+
+32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.common import FULL_CAUSAL
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "[arXiv:2403.04652; hf]"
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    d_model=4096, num_layers=32, num_heads=32, num_kv_heads=4, head_dim=128,
+    d_ff=11008, vocab_size=64000,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=FULL_CAUSAL, tie_embeddings=False,
+    rope_theta=5e6,
+    dtype=jnp.bfloat16, remat="full", scan_layers=True, max_seq=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=64, num_layers=2, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, dtype=jnp.float32, scan_layers=False,
+    remat="none", loss_chunk=64, max_seq=256)

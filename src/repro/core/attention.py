@@ -1,0 +1,112 @@
+"""Unified attention dispatch — the paper's "generalized attention mechanism
+described by a directed graph D" (Sec. 2), at block granularity.
+
+Every attention-bearing layer in the model zoo calls `attention(...)` with an
+`AttentionSpec`; the spec chooses the graph (full / sliding-window / BigBird)
+and the implementation path:
+
+  impl = "reference"   O(n^2) dense-mask oracle      (tests, tiny shapes)
+         "blockified"  paper-faithful App-D XLA path (dry-run baseline)
+         "pallas"      fused Pallas kernel           (TPU production)
+         "chunked"     double-chunked XLA flash      (full attention only)
+
+Sliding-window attention (SWA archs) is expressed as the BigBird *window
+component alone* (r=0, g=0) at block granularity — the paper's own framing of
+SWA as a subgraph.  Window width is rounded up to whole blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import blockified, chunked_full, patterns, ref_attention
+
+__all__ = ["AttentionSpec", "attention"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    kind: str = "full"                 # full | bigbird | window
+    causal: bool = True
+    # bigbird / window parameters (blocks)
+    block_size: int = 64
+    num_window_blocks: int = 3
+    num_global_blocks: int = 2
+    num_random_blocks: int = 3
+    window_tokens: Optional[int] = None   # SWA: token window, rounded to blocks
+    seed: int = 0
+    impl: str = "blockified"           # reference | blockified | pallas | chunked
+
+    def bigbird_config(self, seq_len: int) -> patterns.BigBirdConfig:
+        if self.kind == "window":
+            assert self.window_tokens is not None
+            wb = -(-self.window_tokens // self.block_size)     # ceil
+            if not self.causal and wb % 2 == 0:
+                wb += 1
+            wb = min(wb, seq_len // self.block_size)
+            return patterns.BigBirdConfig(
+                block_size=self.block_size, num_window_blocks=wb,
+                num_global_blocks=0, num_random_blocks=0,
+                causal=self.causal, seed=self.seed)
+        return patterns.BigBirdConfig(
+            block_size=self.block_size,
+            num_window_blocks=self.num_window_blocks,
+            num_global_blocks=self.num_global_blocks,
+            num_random_blocks=self.num_random_blocks,
+            causal=self.causal, seed=self.seed)
+
+
+def attention(q, k, v, spec: AttentionSpec, layer: int = 0):
+    """q (B,Hq,S,d); k,v (B,Hkv,S,d) -> (B,Hq,S,d)."""
+    S = q.shape[2]
+    if spec.kind == "full":
+        if spec.impl == "reference":
+            return ref_attention.full_attention_reference(q, k, v, causal=spec.causal)
+        return chunked_full.chunked_full_attention(q, k, v, causal=spec.causal)
+
+    if spec.kind == "window" and spec.causal:
+        from repro.dist.annotate import opt_level
+        if spec.impl == "banded" or opt_level() >= 1:
+            # beyond-paper: banded window attention (see core/banded.py).
+            # Token-exact window (not block-rounded).
+            from repro.core.banded import banded_window_attention
+            W = spec.window_tokens
+            if W is not None and W < S and S % min(512, S) == 0:
+                return banded_window_attention(q, k, v, W)
+
+    if spec.kind in ("bigbird", "window"):
+        cfg = spec.bigbird_config(S)
+        b = cfg.block_size
+        pad = (-S) % b
+        if pad and not spec.causal:
+            # non-causal (encoder) callers must pad to block multiples at the
+            # data layer (as the paper does); fall back to exact full attn.
+            return chunked_full.chunked_full_attention(q, k, v, causal=False)
+        if pad:
+            # causal: pad the tail — padded keys are in the future of every
+            # real query, so causality masks them; padded query rows are
+            # sliced off.  Pattern rows are prefix-stable (see patterns.py),
+            # so this matches bounded decode against a longer cache.
+            zeros = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            q, k, v = zeros(q), zeros(k), zeros(v)
+        Sp = S + pad
+        nb = Sp // b
+        if (cfg.num_global_blocks + cfg.num_window_blocks
+                + cfg.num_random_blocks) > nb:
+            # pattern covers the whole (small) sequence: exact full attention
+            return chunked_full.chunked_full_attention(
+                q[:, :, :S], k[:, :, :S], v[:, :, :S], causal=spec.causal)
+        if spec.impl == "reference":
+            out = ref_attention.bigbird_attention_reference(q, k, v, cfg,
+                                                            layer=layer)
+        elif spec.impl == "pallas":
+            from repro.kernels import ops                  # lazy import
+            out = ops.bigbird_attention_fused(q, k, v, cfg, layer=layer)
+        else:
+            out = blockified.bigbird_attention_blockified(q, k, v, cfg,
+                                                          layer=layer)
+        return out[:, :, :S]
+
+    raise ValueError(f"unknown attention kind: {spec.kind}")

@@ -1,0 +1,59 @@
+"""Banded sliding-window attention (beyond-paper optimization, §Perf).
+
+The paper's blockified window (App. D) materializes w rolled copies of the
+key tensor — fine for w=3 blocks, but SWA archs carry windows of 16+ blocks
+(gemma3: 1024 tokens / 64 = 16), so K''/V'' duplicate the cache 16x.  This
+implementation scans query chunks and dynamic-slices ONE contiguous key band
+per chunk: each key is read ~(1 + W/q_chunk) times instead of w times, and
+no packed tensor is materialized.
+
+Exactly equivalent to the token-level sliding window mask
+(qpos - kpos in [0, W)), causal.  Used when AttentionSpec.impl == "banded"
+or opt_level >= 1 for kind == "window".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ref_attention import NEG_INF, repeat_kv
+
+__all__ = ["banded_window_attention"]
+
+
+def banded_window_attention(q, k, v, window: int, *, q_chunk: int = 512):
+    """q (B,Hq,S,d); k,v (B,Hkv,S,d); causal window: qpos-kpos in [0, window)."""
+    B, Hq, S, d = q.shape
+    k = repeat_kv(k, Hq)
+    v = repeat_kv(v, Hq)
+    q_chunk = min(q_chunk, S)
+    assert S % q_chunk == 0
+    nq = S // q_chunk
+    band = min(q_chunk + window, S)          # static band width
+    scale = 1.0 / np.sqrt(d)
+
+    qs = q.reshape(B, Hq, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        start = jnp.clip(qi * q_chunk + q_chunk - band, 0, S - band)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc, kb,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        kpos = start + jnp.arange(band)
+        delta = qpos[:, None] - kpos[None, :]
+        mask = (delta >= 0) & (delta < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(qc.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return None, (out / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, S, d)

@@ -1,0 +1,115 @@
+"""Paper-faithful blockified BigBird attention (App. D) in pure XLA.
+
+This is the implementation the paper ships: pack, per query block, the
+(g + w + r) key blocks into a dense tensor K'' and run one batched matmul.
+
+  * window  — w rolled copies of the key-block tensor (jnp.roll == two static
+              slices + concat; no gather),
+  * global  — a fixed slice of the first g blocks, broadcast over query blocks,
+  * random  — the only gather, with *static* (compile-time) indices.
+
+Global query rows (first g blocks) are recomputed densely and overwrite the
+kernel rows, exactly as in the paper ("the first row-block ... is computed by
+direct multiplication").
+
+This file is the **paper-faithful baseline**; `repro.kernels.bigbird_attn` is
+the beyond-paper fused Pallas kernel.  Both must match
+`repro.core.ref_attention.bigbird_attention_reference`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+from repro.core.ref_attention import NEG_INF, masked_softmax_attention
+
+__all__ = ["bigbird_attention_blockified"]
+
+
+def _pack_slots(xb, pat: patterns.BlockPattern):
+    """xb: (B, Hkv, nb, b, d) -> packed (B, Hkv, nb, L, b, d) via roll/slice/take."""
+    cfg = pat.cfg
+    g, w, r = cfg.num_global_blocks, cfg.num_window_blocks, cfg.num_random_blocks
+    nb = pat.num_blocks
+    parts = []
+    # global: fixed slice, broadcast over query blocks
+    if g:
+        gl = xb[:, :, :g]                                    # (B,Hkv,g,b,d)
+        gl = jnp.broadcast_to(gl[:, :, None], xb.shape[:2] + (nb, g) + xb.shape[3:])
+        parts.append(gl)
+    # window: rolled copies (paper Fig. 5). roll(shift=-off) puts block j+off at j.
+    if w:
+        offs = patterns._window_offsets(cfg)
+        rolled = [jnp.roll(xb, shift=-int(off), axis=2) for off in offs]
+        parts.append(jnp.stack(rolled, axis=3))              # (B,Hkv,nb,w,b,d)
+    # random: static-index gather
+    if r:
+        idx = jnp.asarray(pat.key_blocks[:, g + w:])         # (nb, r)
+        parts.append(jnp.take(xb, idx, axis=2))              # (B,Hkv,nb,r,b,d)
+    return jnp.concatenate(parts, axis=3)
+
+
+def _slot_masks(pat: patterns.BlockPattern):
+    """Returns (block_mask (nb, L*b) bool, diag_refine (b, L*b) bool)."""
+    cfg = pat.cfg
+    b = cfg.block_size
+    block_mask = pat.token_level_slot_mask()                 # (nb, L*b)
+    L = pat.slots
+    diag = np.ones((b, L * b), dtype=bool)
+    if cfg.causal:
+        # the offset-0 window slot is the last window slot for causal patterns
+        dslot = cfg.num_global_blocks + cfg.num_window_blocks - 1
+        diag[:, dslot * b:(dslot + 1) * b] = np.tril(np.ones((b, b), dtype=bool))
+    return jnp.asarray(block_mask), jnp.asarray(diag)
+
+
+def bigbird_attention_blockified(q, k, v, cfg: patterns.BigBirdConfig,
+                                 layer: int = 0):
+    """q: (B, Hq, S, d); k, v: (B, Hkv, S, d) -> (B, Hq, S, d).
+
+    GQA kv heads are broadcast to Hq up front so the head dim shards cleanly
+    under tensor parallelism (see chunked_full for rationale).
+    """
+    from repro.core.ref_attention import repeat_kv
+    B, Hq, S, d = q.shape
+    k = repeat_kv(k, Hq)
+    v = repeat_kv(v, Hq)
+    b = cfg.block_size
+    pat = patterns.build_pattern(cfg, S, layer=layer)
+    nb, L = pat.num_blocks, pat.slots
+    g = cfg.num_global_blocks
+    scale = 1.0 / np.sqrt(d)
+
+    qb = q.reshape(B, Hq, nb, b, d)
+    kb = k.reshape(B, Hq, nb, b, d)
+    vb = v.reshape(B, Hq, nb, b, d)
+
+    kk = _pack_slots(kb, pat).reshape(B, Hq, nb, L * b, d)   # K''
+    vv = _pack_slots(vb, pat).reshape(B, Hq, nb, L * b, d)   # V''
+
+    logits = jnp.einsum("bhnqd,bhnkd->bhnqk", qb, kk,
+                        preferred_element_type=jnp.float32) * scale
+    block_mask, diag = _slot_masks(pat)
+    mask = block_mask[:, None, :] & diag[None, :, :]          # (nb, b, L*b)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs * mask[None, None]
+    denom = jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhnqk,bhnkd->bhnqd",
+                     (probs / denom).astype(q.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, Hq, S, d).astype(q.dtype)
+
+    # ---- dense recompute of global query rows (first g blocks) -------------
+    if g:
+        ng = g * b
+        qg = q[:, :, :ng]                                     # (B,Hq,ng,d)
+        if cfg.causal:
+            m = jnp.arange(ng)[:, None] >= jnp.arange(S)[None, :]
+        else:
+            m = jnp.ones((ng, S), dtype=bool)
+        og = masked_softmax_attention(qg, k, v, m, scale=scale)
+        out = out.at[:, :, :ng].set(og.astype(out.dtype))
+    return out

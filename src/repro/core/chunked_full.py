@@ -1,0 +1,82 @@
+"""Memory-efficient full attention in pure XLA (double-chunked online softmax).
+
+Dense archs (yi, minicpm, internvl2, llama4, grok) need full attention at
+train_4k / prefill_32k; materializing (B, H, S, S) scores would OOM a 16 GB
+chip at 32k.  This computes the same result with O(S * chunk) live memory via
+a scan over query chunks (rematted: jax.checkpoint, so backward recomputes
+the inner scan instead of saving per-chunk probs/masks) with an inner scan
+over key chunks carrying flash-style (m, l, acc) accumulators.
+
+GQA note: kv heads are broadcast to the full Hq head dim *before* the scans.
+Keeping a (Hkv, group) split would make both dims unshardable when
+Hkv < model-axis (e.g. yi: kv=4 on model=16); broadcasting keeps the head
+dim = Hq, which shards cleanly, at negligible local kv cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ref_attention import NEG_INF, repeat_kv
+
+__all__ = ["chunked_full_attention"]
+
+
+def chunked_full_attention(q, k, v, *, causal: bool = False,
+                           q_chunk: int = 1024, k_chunk: int = 1024):
+    """q (B,Hq,Sq,d); k,v (B,Hkv,Sk,d) -> (B,Hq,Sq,d).  Sq != Sk allowed
+    (cross-attention); causal requires Sq == Sk."""
+    B, Hq, Sq, d = q.shape
+    k = repeat_kv(k, Hq)
+    v = repeat_kv(v, Hq)
+    Sk = k.shape[2]
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+    if causal:
+        assert Sq == Sk
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = 1.0 / np.sqrt(d)
+
+    qs = q.reshape(B, Hq, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(B, Hq, nk, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hq, nk, k_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc                                    # qc: (B,Hq,qcnk,d)
+
+        def k_step(carry, ki_kc):
+            m, l, acc = carry
+            ki, kc, vc = ki_kc
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * k_chunk + jnp.arange(k_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            # no post-exp re-mask needed: every query row sees >= 1 visible
+            # key in its first k-chunk (causal: the diagonal; full: all), so
+            # m_new > NEG_INF and exp underflows to exactly 0 on masked keys.
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(qc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hq, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: (nq, B, Hq, qc, d) -> (B, Hq, Sq, d)
+    return outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Sq, d)

@@ -1,0 +1,191 @@
+"""Block-sparse attention pattern algebra for BigBird.
+
+The paper (Sec. 2, App. D) defines attention as a directed graph D over token
+positions; BigBird "blockifies" it: the sequence is split into ``nb = n / b``
+blocks and the pattern is expressed block-to-block.  Three components:
+
+  * window  — query block j attends key blocks j-(w-1)/2 .. j+(w-1)/2
+              (circular, matching the paper's rolled key tensor, Fig. 5);
+              causal variant: key blocks j-w+1 .. j, clamped at 0.
+  * global  — the first g blocks attend to everything and are attended by
+              everything (ITC).  ETC is realised at the model level by
+              prepending g*b learned tokens and running ITC on the result.
+  * random  — each query block attends to r random key blocks, sampled once
+              per (layer, head) with a fixed seed, avoiding window/global/self
+              so no key block is duplicated inside the packed tensor.
+
+Everything here is **static** (numpy, host-side): patterns are compile-time
+constants, which is what makes the TPU kernel gather-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+__all__ = [
+    "BigBirdConfig",
+    "BlockPattern",
+    "build_pattern",
+    "dense_mask",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BigBirdConfig:
+    """Static description of a BigBird attention pattern.
+
+    Counts are in *blocks*, following App. D (paper base config:
+    block 64, g = 2 blocks, w = 3 blocks, r = 3 blocks).
+    """
+
+    block_size: int = 64
+    num_window_blocks: int = 3      # total window width in blocks (odd if not causal)
+    num_global_blocks: int = 2      # ITC: first g blocks are global
+    num_random_blocks: int = 3
+    causal: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.causal and self.num_window_blocks % 2 == 0:
+            raise ValueError("non-causal window must be odd (w/2 each side)")
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+
+    def validate(self, seq_len: int) -> None:
+        if seq_len % self.block_size != 0:
+            raise ValueError(
+                f"seq_len {seq_len} not divisible by block {self.block_size}")
+        nb = seq_len // self.block_size
+        if self.num_global_blocks + self.num_window_blocks + self.num_random_blocks > nb:
+            raise ValueError(
+                f"pattern ({self.num_global_blocks}+{self.num_window_blocks}+"
+                f"{self.num_random_blocks} blocks) larger than sequence ({nb} blocks); "
+                "use full attention instead")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPattern:
+    """Materialised pattern for one (seq_len, config) pair.
+
+    ``key_blocks[j, t]``  : index of the t-th key block for query block j.
+    ``key_mask[j, t]``    : False where the slot is a duplicate / out of range
+                            (masked out of the softmax).
+    Slot layout along t: [g globals | w window | r random].
+    Global *query* rows (j < g) additionally attend to every block; they are
+    recomputed densely by the caller (paper: "the first row-block ... computed
+    by direct multiplication").
+    """
+
+    cfg: BigBirdConfig
+    seq_len: int
+    num_blocks: int
+    key_blocks: np.ndarray     # (nb, L) int32
+    key_mask: np.ndarray       # (nb, L) bool
+
+    @property
+    def slots(self) -> int:
+        return self.key_blocks.shape[1]
+
+    def token_level_slot_mask(self) -> np.ndarray:
+        """(nb, L*b) mask expanded to key positions inside each slot."""
+        b = self.cfg.block_size
+        return np.repeat(self.key_mask, b, axis=1)
+
+
+def _window_offsets(cfg: BigBirdConfig) -> np.ndarray:
+    w = cfg.num_window_blocks
+    if cfg.causal:
+        return np.arange(-(w - 1), 1)          # j-w+1 .. j
+    half = w // 2
+    return np.arange(-half, half + 1)          # j-w/2 .. j+w/2
+
+
+@functools.lru_cache(maxsize=256)
+def build_pattern(cfg: BigBirdConfig, seq_len: int,
+                  layer: int = 0, head: int = 0) -> BlockPattern:
+    """Build the static block pattern (cached: it is pure and reused often)."""
+    cfg.validate(seq_len)
+    b = cfg.block_size
+    nb = seq_len // b
+    g, w, r = cfg.num_global_blocks, cfg.num_window_blocks, cfg.num_random_blocks
+    offs = _window_offsets(cfg)
+
+    key_blocks = np.zeros((nb, g + w + r), dtype=np.int32)
+    key_mask = np.zeros((nb, g + w + r), dtype=bool)
+
+    # --- global slots -------------------------------------------------------
+    key_blocks[:, :g] = np.arange(g)[None, :]
+    key_mask[:, :g] = True
+
+    # --- window slots -------------------------------------------------------
+    j = np.arange(nb)[:, None]
+    win = j + offs[None, :]                    # (nb, w)
+    if cfg.causal:
+        win_valid = win >= 0
+        win_idx = np.clip(win, 0, nb - 1)
+    else:
+        win_valid = np.ones_like(win, dtype=bool)
+        win_idx = win % nb                     # circular roll (paper Fig. 5)
+    # dedup: window slot that lands on a global block is masked (global slot wins)
+    win_valid &= win_idx >= g
+    key_blocks[:, g:g + w] = win_idx
+    key_mask[:, g:g + w] = win_valid
+
+    # --- random slots -------------------------------------------------------
+    # Seeded PER ROW (not per total length): causal patterns are then
+    # *prefix-stable* — build_pattern(cfg, S1) rows agree with
+    # build_pattern(cfg, S2) rows for every shared block.  This is what makes
+    # prefill (prompt length) and bounded decode (cache length) attend the
+    # same random graph.
+    if r > 0:
+        for jj in range(nb):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([cfg.seed, layer, head, jj]))
+            forbidden = set(range(g)) | {int(x) for x in win_idx[jj]} | {jj}
+            hi = jj if cfg.causal else nb          # sample in [g, hi)
+            n_free = max(hi - g - sum(1 for f in forbidden if g <= f < hi), 0)
+            take = min(r, n_free)
+            if take == 0:
+                continue
+            if hi - g <= 4 * (r + len(forbidden)):
+                # small range: explicit candidate list
+                cand = np.array([c for c in range(g, hi) if c not in forbidden])
+                pick = rng.choice(cand, size=take, replace=False)
+            else:
+                # large range: rejection sampling, O(r) expected
+                picks: list = []
+                seen = set(forbidden)
+                while len(picks) < take:
+                    for c in rng.integers(g, hi, size=2 * take):
+                        ci = int(c)
+                        if ci not in seen:
+                            seen.add(ci)
+                            picks.append(ci)
+                            if len(picks) == take:
+                                break
+                pick = np.array(picks)
+            key_blocks[jj, g + w:g + w + take] = pick
+            key_mask[jj, g + w:g + w + take] = True
+    return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
+                        key_blocks=key_blocks, key_mask=key_mask)
+
+
+def dense_mask(pat: BlockPattern) -> np.ndarray:
+    """(n, n) boolean adjacency A[i, j'] — the oracle the kernels must match.
+
+    Includes the global-rows rule (query rows in global blocks attend to all)
+    and, if causal, the intersection with the causal mask.
+    """
+    cfg, b, nb, n = pat.cfg, pat.cfg.block_size, pat.num_blocks, pat.seq_len
+    g = cfg.num_global_blocks
+    A = np.zeros((nb, nb), dtype=bool)
+    for j in range(nb):
+        A[j, pat.key_blocks[j][pat.key_mask[j]]] = True
+    A[:g, :] = True                      # global rows attend everywhere
+    A[:, :g] = True                      # everyone attends to global blocks
+    M = np.kron(A, np.ones((b, b), dtype=bool))
+    if cfg.causal:
+        M &= np.tril(np.ones((n, n), dtype=bool))
+    return M

@@ -1,0 +1,78 @@
+"""Pure-jnp dense-mask oracle for BigBird attention.
+
+O(n^2) memory — used only by tests and tiny benchmarks.  This is the ground
+truth: the blockified XLA path and the Pallas kernel must match it bitwise
+(up to float tolerance) for every pattern.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+
+NEG_INF = -1e30
+
+
+def masked_softmax_attention(q, k, v, mask, scale=None):
+    """q (..., Sq, d), k/v (..., Sk, d), mask (Sq, Sk) or broadcastable."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    logits = jnp.where(mask, logits, NEG_INF)
+    # rows with no visible key (can happen for padded blocks) -> zeros
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs * mask
+    denom = jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("...qk,...kd->...qd", probs / denom, v)
+
+
+def repeat_kv(k, num_q_heads):
+    """GQA: broadcast kv heads (..., Hkv, S, d) -> (..., Hq, S, d)."""
+    hkv = k.shape[-3]
+    if hkv == num_q_heads:
+        return k
+    group = num_q_heads // hkv
+    return jnp.repeat(k, group, axis=-3)
+
+
+def bigbird_attention_reference(q, k, v, cfg: patterns.BigBirdConfig,
+                                layer: int = 0):
+    """Oracle BigBird attention.
+
+    q: (B, Hq, S, d); k, v: (B, Hkv, S, d).  Pattern is shared across heads
+    within a layer (paper: random blocks fixed per layer); GQA broadcast done
+    densely here.
+    """
+    b_, hq, s, d = q.shape
+    pat = patterns.build_pattern(cfg, s, layer=layer)
+    mask = jnp.asarray(patterns.dense_mask(pat))
+    k = repeat_kv(k, hq)
+    v = repeat_kv(v, hq)
+    return masked_softmax_attention(q, k, v, mask)
+
+
+def full_attention_reference(q, k, v, causal: bool = False):
+    b_, hq, sq, d = q.shape
+    sk = k.shape[2]
+    k = repeat_kv(k, hq)
+    v = repeat_kv(v, hq)
+    if causal:
+        assert sq == sk
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool))
+    else:
+        mask = jnp.ones((sq, sk), dtype=bool)
+    return masked_softmax_attention(q, k, v, mask)
+
+
+def sliding_window_reference(q, k, v, window: int, causal: bool = True):
+    """Token-level sliding window (SWA archs): |i-j| < window, j<=i if causal."""
+    b_, hq, s, d = q.shape
+    k = repeat_kv(k, hq)
+    v = repeat_kv(v, hq)
+    i = np.arange(s)[:, None]
+    j = np.arange(s)[None, :]
+    mask = np.abs(i - j) < window
+    if causal:
+        mask &= j <= i
+    return masked_softmax_attention(q, k, v, jnp.asarray(mask))

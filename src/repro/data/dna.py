@@ -1,0 +1,148 @@
+"""Genomics data (paper Sec. 5 reproduction, offline).
+
+Synthetic "reference genome" with planted structure:
+  * background: order-0 ACGT with GC-bias drift,
+  * motifs: planted TATA-box / CpG-island-like promoter motifs upstream of
+    "gene" sites — giving the promoter-prediction task (Tab. 6) real signal,
+  * BPE-ish tokenizer: greedy longest-match over a frequency-built merge
+    table (the paper uses sentencepiece at ~8.78 bp/token; we build an
+    equivalent fixed-size subword table over ACGT).
+
+Tasks mirrored from the paper:
+  * MLM pretraining over long DNA contexts (Tab. 5: BPC),
+  * promoter region classification (Tab. 6): fragment -> {promoter, not}.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+BASES = np.array(list("ACGT"))
+PROMOTER_MOTIF = "TATAAA"          # TATA box
+CPG = "CGCGCG"
+
+
+@dataclasses.dataclass(frozen=True)
+class GenomeConfig:
+    length: int = 1_000_000
+    promoter_rate: float = 0.0005
+    seed: int = 7
+
+
+def synthesize_genome(cfg: GenomeConfig):
+    """Returns (genome string, promoter site indices)."""
+    rng = np.random.default_rng(cfg.seed)
+    # GC-content drift: mixture of two base distributions over segments
+    n = cfg.length
+    seg = rng.integers(2000, 10000)
+    probs_at = np.array([0.3, 0.2, 0.2, 0.3])
+    probs_gc = np.array([0.2, 0.3, 0.3, 0.2])
+    out = []
+    pos = 0
+    while pos < n:
+        ln = int(rng.integers(2000, 10000))
+        p = probs_at if rng.random() < 0.5 else probs_gc
+        out.append(rng.choice(4, size=ln, p=p))
+        pos += ln
+    genome = np.concatenate(out)[:n]
+    # plant promoters: motif + CpG island upstream of random sites
+    sites = rng.choice(n - 200, size=int(n * cfg.promoter_rate), replace=False)
+    motif = np.array([_b2i(c) for c in PROMOTER_MOTIF + CPG])
+    for s in sites:
+        genome[s:s + len(motif)] = motif
+    return "".join(BASES[genome]), np.sort(sites)
+
+
+def _b2i(c):
+    return "ACGT".index(c)
+
+
+class DnaTokenizer:
+    """Greedy longest-match subword tokenizer over ACGT (BPE-equivalent)."""
+
+    def __init__(self, genome: str, vocab_size: int = 4096, max_len: int = 8):
+        # count frequent k-mers, keep the most frequent as vocab
+        counts: dict = {}
+        step = 16
+        for k in (2, 3, 4, 6, 8):
+            if k > max_len:
+                continue
+            for i in range(0, min(len(genome) - k, 400_000), step):
+                w = genome[i:i + k]
+                counts[w] = counts.get(w, 0) + 1
+        best = sorted(counts, key=lambda w: (-len(w) * counts[w]))
+        pieces = ["<pad>", "<mask>", "<cls>", "<sep>", "A", "C", "G", "T"]
+        pieces += [w for w in best if len(w) > 1][:vocab_size - len(pieces)]
+        self.vocab = {w: i for i, w in enumerate(pieces)}
+        self.inv = pieces
+        self.max_len = max(len(w) for w in pieces)
+        self.pad, self.mask, self.cls, self.sep = 0, 1, 2, 3
+
+    @property
+    def vocab_size(self):
+        return len(self.inv)
+
+    def encode(self, s: str) -> np.ndarray:
+        out = []
+        i = 0
+        n = len(s)
+        while i < n:
+            for ln in range(min(self.max_len, n - i), 0, -1):
+                tid = self.vocab.get(s[i:i + ln])
+                if tid is not None:
+                    out.append(tid)
+                    i += ln
+                    break
+            else:
+                i += 1            # unknown char: skip
+        return np.array(out, dtype=np.int32)
+
+
+def promoter_dataset(genome: str, sites: np.ndarray, tok: DnaTokenizer,
+                     n_examples: int = 512, frag: int = 1000, seed: int = 3,
+                     seq_len: int = 256):
+    """Balanced fragments -> (tokens (N, seq_len), labels (N,)).
+
+    Positives are centered on planted promoter sites; negatives are random
+    fragments (paper: EPDnew-style construction)."""
+    rng = np.random.default_rng(seed)
+    half = n_examples // 2
+    X = np.zeros((n_examples, seq_len), dtype=np.int32)
+    y = np.zeros(n_examples, dtype=np.int32)
+    pos_sites = rng.choice(sites, size=half, replace=len(sites) < half)
+    for i, s in enumerate(pos_sites):
+        start = max(0, int(s) - frag // 2)
+        toks = tok.encode(genome[start:start + frag])[:seq_len]
+        X[i, :len(toks)] = toks
+        y[i] = 1
+    for i in range(half, n_examples):
+        while True:
+            start = int(rng.integers(0, len(genome) - frag))
+            if not ((sites > start) & (sites < start + frag)).any():
+                break
+        toks = tok.encode(genome[start:start + frag])[:seq_len]
+        X[i, :len(toks)] = toks
+    perm = rng.permutation(n_examples)
+    return X[perm], y[perm]
+
+
+def mlm_batches(genome: str, tok: DnaTokenizer, batch: int, seq_len: int,
+                seed: int = 11):
+    """Infinite MLM batch generator over the genome."""
+    rng = np.random.default_rng(seed)
+    enc_cache = tok.encode(genome[:600_000])
+    step = 0
+    while True:
+        B = batch
+        tokens = np.zeros((B, seq_len), dtype=np.int32)
+        for b in range(B):
+            o = int(rng.integers(0, len(enc_cache) - seq_len - 1))
+            tokens[b] = enc_cache[o:o + seq_len]
+        labels = tokens.copy()
+        mask = rng.random((B, seq_len)) < 0.15
+        inp = tokens.copy()
+        inp[mask] = tok.mask
+        yield {"tokens": inp, "labels": labels,
+               "loss_mask": mask.astype(np.float32)}
+        step += 1

@@ -1,0 +1,163 @@
+"""Data pipeline: deterministic synthetic corpora, document packing, host
+sharding, and background prefetch.
+
+The container is offline, so corpora are synthetic but *structured* (Zipfian
+unigrams + a k-th order Markov chain) so models have something learnable —
+losses drop well below the unigram entropy, which the examples assert.
+
+Determinism & fault tolerance: every batch is a pure function of
+(seed, host_id, num_hosts, step), so a restarted or replaced host resumes
+exactly the stream it owned — no data loss, no duplication (straggler /
+elastic-restart story, see ft/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 32000
+    seq_len: int = 1024
+    batch_size: int = 8              # per-host
+    seed: int = 1234
+    markov_order: int = 2
+    zipf_a: float = 1.2
+    num_hosts: int = 1
+    host_id: int = 0
+    mlm: bool = False                # MLM masking (the paper's objective)
+    mlm_rate: float = 0.15
+    mask_token: int = 3
+    doc_len_range: tuple = (64, 512)
+    pad_token: int = 0
+    # long-range structure: documents carry a topic-head token that selects
+    # the bigram successor table — predicting a token then requires BOTH the
+    # previous token (local) and the document head (long-range reach).  This
+    # is the mechanism behind the paper's Table-1 ordering (W < R+W < R+W+G)
+    # and Fig-8 (longer context resolves more heads).
+    num_topics: int = 0
+    single_doc_rows: bool = False    # True: one doc/row, head at position 0
+
+
+class SyntheticLM:
+    """Markov-chain token stream with document packing."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        root = np.random.SeedSequence([cfg.seed])
+        rng = np.random.default_rng(root)
+        v = cfg.vocab_size
+        # Zipfian unigram over a capped alphabet for tractable transitions
+        self._alpha = min(v, 4096)
+        ranks = np.arange(1, self._alpha + 1, dtype=np.float64)
+        self._unigram = ranks ** (-cfg.zipf_a)
+        self._unigram /= self._unigram.sum()
+        # deterministic "hash" transition: next ~ f(prev tokens) + noise
+        self._mix = rng.integers(1, 2**31 - 1, size=cfg.markov_order)
+
+    def _doc(self, rng, topic: int = 0) -> np.ndarray:
+        lo, hi = self.cfg.doc_len_range
+        n = int(rng.integers(lo, hi + 1))
+        toks = np.empty(n, dtype=np.int64)
+        prev = int(rng.choice(self._alpha, p=self._unigram))
+        # 85% deterministic bigram successor + 15% Zipf noise: cheap to
+        # generate, genuinely learnable (a bigram table), with ~1.0 nat of
+        # irreducible entropy so loss curves look like real LM training.
+        det = rng.random(n) < 0.85
+        noise = rng.choice(self._alpha, size=n, p=self._unigram)
+        mix = 31 + 13 * topic                # topic-dependent successor fn
+        for i in range(n):
+            toks[i] = ((prev * mix + 7) % self._alpha) if det[i] else noise[i]
+            prev = int(toks[i])
+        toks = toks % self.cfg.vocab_size
+        lo = 4 + self.cfg.num_topics         # reserve specials + topic heads
+        toks[toks < lo] += lo
+        return toks
+
+    def batch(self, step: int) -> dict:
+        """Pure function of (cfg, step): packed (B, S) tokens + labels."""
+        cfg = self.cfg
+        rng = np.random.default_rng(np.random.SeedSequence(
+            [cfg.seed, cfg.host_id, cfg.num_hosts, step]))
+        B, S = cfg.batch_size, cfg.seq_len
+        out = np.full((B, S + 1), cfg.pad_token, dtype=np.int32)
+
+        def one_doc(rng):
+            if cfg.num_topics > 0:
+                topic = int(rng.integers(cfg.num_topics))
+                head = np.array([4 + (topic % (cfg.vocab_size - 4))],
+                                dtype=np.int64)
+                return np.concatenate([head, self._doc(rng, topic)])
+            return self._doc(rng)
+
+        for b in range(B):
+            if cfg.single_doc_rows and cfg.num_topics > 0:
+                doc = one_doc(rng)
+                while len(doc) < S + 1:
+                    topic = int(doc[0]) - 4
+                    doc = np.concatenate([doc, self._doc(rng, topic)])
+                out[b] = doc[:S + 1]
+                continue
+            filled = 0
+            first = True
+            while filled < S + 1:
+                doc = one_doc(rng)
+                if first:
+                    # rows start mid-document (sliding-window packing): the
+                    # first doc's head may be cut off — short contexts then
+                    # often cannot resolve it (Fig-8 mechanism)
+                    doc = doc[int(rng.integers(0, max(len(doc) - 8, 1))):]
+                    first = False
+                take = min(len(doc), S + 1 - filled)
+                out[b, filled:filled + take] = doc[:take]
+                filled += take
+        if cfg.mlm:
+            tokens = out[:, :S].copy()
+            labels = out[:, :S].copy()
+            mask = rng.random((B, S)) < cfg.mlm_rate
+            # BERT 80/10/10 corruption
+            r = rng.random((B, S))
+            tokens[mask & (r < 0.8)] = cfg.mask_token
+            rnd = rng.integers(4, cfg.vocab_size, size=(B, S))
+            repl = mask & (r >= 0.8) & (r < 0.9)
+            tokens[repl] = rnd[repl]
+            return {"tokens": tokens, "labels": labels,
+                    "loss_mask": mask.astype(np.float32)}
+        return {"tokens": out[:, :S], "labels": out[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch (the host-side input pipeline)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put(source.batch(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def next(self) -> dict:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

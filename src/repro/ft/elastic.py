@@ -1,0 +1,75 @@
+"""Elastic scaling + failure handling.
+
+The recovery contract at 1000+ nodes:
+
+  1. A node failure kills the SPMD step (collective timeout / coordinator
+     eviction).  The launcher (launch/train.py) catches it, re-forms the
+     device set, and calls `replan` here.
+  2. `replan` rebuilds the mesh for the surviving device count (largest
+     (data, model) factorization that keeps model parallelism intact),
+     re-derives every PartitionSpec through dist.sharding (all rules are
+     divisibility-checked, so a smaller mesh degrades to replication rather
+     than failing), and reshards the restored checkpoint onto it.
+  3. Data determinism: pipeline batches are pure functions of
+     (seed, host_id, num_hosts, step), so re-assigned hosts resume exactly
+     the right stream — no sample is lost or duplicated.
+
+Straggler mitigation (`straggler.py`): deterministic per-step deadlines with
+a skip-list — a host that misses the deadline k times is evicted and
+treated as a failure (same replan path), which bounds tail latency instead
+of letting one slow host gate every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+
+    def build(self):
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              pods: int = 1) -> MeshPlan:
+    """Largest mesh for `n_devices`, preserving TP degree when possible.
+
+    Drops to smaller model-parallel degrees (powers of two) when the device
+    count is not divisible — elastic *downscale* after failures.
+    """
+    per_pod = n_devices // pods
+    mp = model_parallel
+    while mp > 1 and per_pod % mp != 0:
+        mp //= 2
+    data = per_pod // mp
+    if pods > 1:
+        return MeshPlan((pods, data, mp), ("pod", "data", "model"))
+    return MeshPlan((data, mp), ("data", "model"))
+
+
+def usable_device_count(n_devices: int, *, model_parallel: int = 16,
+                        pods: int = 1) -> int:
+    """Devices actually used after replanning (rest idle until repair)."""
+    plan = plan_mesh(n_devices, model_parallel=model_parallel, pods=pods)
+    return int(np.prod(plan.shape))
+
+
+def reshard_state(state, cfg, opt, new_mesh):
+    """Re-place a host-restored state tree onto a (possibly different) mesh."""
+    from repro.launch import steps as S
+    from repro.models.params import map_leaves
+    from jax.sharding import NamedSharding
+
+    ps = S.state_pspec_tree(cfg, opt, new_mesh)
+
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(place, state, ps,
+                        is_leaf=lambda x: isinstance(x, (np.ndarray, jax.Array)))

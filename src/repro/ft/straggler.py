@@ -1,0 +1,78 @@
+"""Straggler detection and mitigation (host-side policy).
+
+Synchronous SPMD training is gated by the slowest participant.  At 1000+
+nodes, persistent stragglers (thermal throttling, failing HBM, noisy
+neighbors on DCN) dominate tail step time.  Policy implemented here:
+
+  * per-step wall-clock EWMA with deviation tracking;
+  * a host flagged when its step time exceeds mean + `k_sigma` * sigma for
+    `patience` consecutive steps;
+  * flagged hosts are *evicted* (returned by `to_evict`) and the launcher
+    replans the mesh without them (ft/elastic.py) — trading a little
+    capacity for bounded step time;
+  * data ownership transfers deterministically (pipeline is a pure function
+    of host_id/num_hosts/step), so eviction loses no samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    k_sigma: float = 3.0
+    patience: int = 5
+    ewma: float = 0.9
+    min_steps: int = 10
+
+
+class StragglerDetector:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.mean = defaultdict(float)
+        self.var = defaultdict(float)
+        self.strikes = defaultdict(int)
+        self.steps = defaultdict(int)
+
+    def observe(self, host_id: int, step_time: float):
+        c = self.cfg
+        m, v = self.mean[host_id], self.var[host_id]
+        if self.steps[host_id] == 0:
+            self.mean[host_id], self.var[host_id] = step_time, 0.0
+        else:
+            delta = step_time - m
+            self.mean[host_id] = m + (1 - c.ewma) * delta
+            self.var[host_id] = c.ewma * (v + (1 - c.ewma) * delta * delta)
+        self.steps[host_id] += 1
+
+    def is_straggling(self, host_id: int, step_time: float,
+                      fleet_mean: float, fleet_sigma: float) -> bool:
+        c = self.cfg
+        if self.steps[host_id] < c.min_steps or fleet_sigma <= 0:
+            return False
+        if step_time > fleet_mean + c.k_sigma * fleet_sigma:
+            self.strikes[host_id] += 1
+        else:
+            self.strikes[host_id] = 0
+        return self.strikes[host_id] >= c.patience
+
+    def fleet_stats(self, exclude=None):
+        """Leave-one-out stats: a persistent straggler must not inflate the
+        fleet sigma it is judged against."""
+        ms = [m for h, m in self.mean.items() if h != exclude]
+        if not ms:
+            return 0.0, 0.0
+        mean = sum(ms) / len(ms)
+        var = sum((m - mean) ** 2 for m in ms) / max(len(ms) - 1, 1)
+        return mean, max(var ** 0.5, 0.01 * mean)
+
+    def to_evict(self, step_times: dict) -> list:
+        out = []
+        for h, t in step_times.items():
+            self.observe(h, t)
+        for h, t in step_times.items():
+            mean, sigma = self.fleet_stats(exclude=h)
+            if self.is_straggling(h, t, mean, sigma):
+                out.append(h)
+        return out

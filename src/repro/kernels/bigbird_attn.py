@@ -1,0 +1,124 @@
+"""Fused BigBird block-sparse attention — Pallas TPU kernel.
+
+Beyond-paper optimization (the paper materializes the packed key tensor K''
+in HBM, App. D Fig. 6): this kernel fuses the packing, QK^T, softmax and AV
+into one pass.  The packed tensor never exists — key/value blocks are pulled
+HBM->VMEM directly via scalar-prefetched index maps, and a flash-attention
+style streaming softmax keeps only (b, d) accumulators in VMEM.
+
+Grid: (B*Hq, nb, L) — one query block per (bh, j), iterating its L = g+w+r
+key-block slots in the innermost (sequential on TPU) dimension.
+
+Scalar-prefetch operands (compile-time-shaped, data-dependent indexing):
+  idx  (nb, L) int32 — key block index per slot (from core.patterns).
+  msk  (nb, L) int32 — 1 if the slot is live, 0 if duplicate/out-of-range.
+
+VMEM working set per grid cell: q (b,d) + k (b,d) + v (b,d) + acc (b,d)
++ scores (b,b) + m,l (b,1)  ≈ 4*b*d + b*b floats; with b=64, d=128 that is
+~0.16 MB — far under the ~16 MB v5e VMEM budget, leaving room for the
+compiler to double-buffer the k/v streams across slots.
+
+Global *query* rows (blocks 0..g-1) attend to everything; they are recomputed
+densely by the wrapper in `repro.kernels.ops` (paper does the same).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, diag_slot: int,
+            num_slots: int, block_size: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (b, d)
+    k = k_ref[0].astype(jnp.float32)                     # (b, d)
+    v = v_ref[0].astype(jnp.float32)                     # (b, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    j = pl.program_id(1)
+    live = msk_ref[j, t] > 0                             # slot-level validity
+    mask = jnp.full(s.shape, live)
+    if diag_slot >= 0:
+        # causal patterns: the offset-0 window slot needs a triangular mask
+        b = block_size
+        row = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+        tri = row >= col
+        mask = jnp.where(t == diag_slot, mask & tri, mask)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)            # (b, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(t == num_slots - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "grp", "diag_slot", "interpret"))
+def bigbird_attn_pallas(q, k, v, idx, msk, *, block_size: int, grp: int,
+                        diag_slot: int = -1, interpret: bool = False):
+    """q: (BHq, S, d); k, v: (BHkv, S, d); idx/msk: (nb, L) int32.
+
+    ``grp`` = Hq // Hkv (GQA group); query row bh reads kv row bh // grp.
+    Returns (BHq, S, d).  Rows of global query blocks are garbage here and
+    must be overwritten by the caller (see ops.bigbird_attention).
+    """
+    BH, S, d = q.shape
+    b = block_size
+    nb = S // b
+    L = idx.shape[1]
+    scale = 1.0 / np.sqrt(d)
+
+    grid = (BH, nb, L)
+    kernel = functools.partial(_kernel, scale=scale, diag_slot=diag_slot,
+                               num_slots=L, block_size=b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+                pl.BlockSpec((1, b, d),
+                             lambda bh, j, t, idx, msk: (bh // grp, idx[j, t], 0)),
+                pl.BlockSpec((1, b, d),
+                             lambda bh, j, t, idx, msk: (bh // grp, idx[j, t], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((b, 1), jnp.float32),
+                pltpu.VMEM((b, 1), jnp.float32),
+                pltpu.VMEM((b, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(idx, msk, q, k, v)

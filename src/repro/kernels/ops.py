@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op here has a pure-jnp oracle in `repro.kernels.ref` and is swept over
+shapes/dtypes in tests/test_kernels.py.  ``interpret=None`` auto-selects
+interpret mode on CPU so the same call sites run on TPU and in this container.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+from repro.core.ref_attention import masked_softmax_attention
+from repro.kernels import bigbird_attn, wkv6
+
+__all__ = ["bigbird_attention_fused", "wkv6_scan"]
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _overwrite_global_rows(out, q, k, v, cfg, grp):
+    """Dense recompute of the global query rows (paper App. D)."""
+    g, b = cfg.num_global_blocks, cfg.block_size
+    if not g:
+        return out
+    S = q.shape[2]
+    ng = g * b
+    qg = q[:, :, :ng]
+    if cfg.causal:
+        m = jnp.arange(ng)[:, None] >= jnp.arange(S)[None, :]
+    else:
+        m = jnp.ones((ng, S), dtype=bool)
+    kf = jnp.repeat(k, grp, axis=1) if grp > 1 else k
+    vf = jnp.repeat(v, grp, axis=1) if grp > 1 else v
+    og = masked_softmax_attention(qg, kf, vf, m, scale=1.0 / np.sqrt(q.shape[-1]))
+    return out.at[:, :, :ng].set(og.astype(out.dtype))
+
+
+def bigbird_attention_fused(q, k, v, cfg: patterns.BigBirdConfig,
+                            layer: int = 0, interpret=None):
+    """Fused-kernel BigBird attention.  q (B,Hq,S,d); k,v (B,Hkv,S,d)."""
+    interpret = _auto_interpret(interpret)
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    grp = Hq // Hkv
+    pat = patterns.build_pattern(cfg, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks, jnp.int32)
+    msk = jnp.asarray(pat.key_mask.astype(np.int32))
+    diag_slot = (cfg.num_global_blocks + cfg.num_window_blocks - 1
+                 if cfg.causal else -1)
+    out = bigbird_attn.bigbird_attn_pallas(
+        q.reshape(B * Hq, S, d), k.reshape(B * Hkv, S, d),
+        v.reshape(B * Hkv, S, d), idx, msk,
+        block_size=cfg.block_size, grp=grp, diag_slot=diag_slot,
+        interpret=interpret)
+    out = out.reshape(B, Hq, S, d)
+    return _overwrite_global_rows(out, q, k, v, cfg, grp)
+
+
+def wkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret=None):
+    """RWKV6 WKV recurrence.  r,k,v,w: (B,T,H,D); u: (H,D)."""
+    interpret = _auto_interpret(interpret)
+    return wkv6.wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def mamba_scan(u, dt, bmat, cmat, a_log, d_skip, *, chunk: int = 64,
+               di_block: int = 512, interpret=None):
+    """Selective-SSM scan.  u,dt (B,T,di); bmat,cmat (B,T,st); a_log (di,st)."""
+    from repro.kernels import mamba_scan as mk
+    interpret = _auto_interpret(interpret)
+    return mk.mamba_scan_pallas(u, dt, bmat, cmat, a_log, d_skip, chunk=chunk,
+                                di_block=di_block, interpret=interpret)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns
+from repro.core.ref_attention import bigbird_attention_reference
+
+__all__ = ["bigbird_attention_ref", "wkv6_ref", "mamba_scan_ref"]
+
+
+def mamba_scan_ref(u, dt, bmat, cmat, a_log, d_skip):
+    """Sequential-scan oracle for the selective-SSM recurrence."""
+    from repro.models.layers import _mamba_scan
+    y, _ = _mamba_scan(u, dt, a_log, bmat, cmat, d_skip)
+    return y
+
+
+def bigbird_attention_ref(q, k, v, cfg: patterns.BigBirdConfig, layer: int = 0):
+    """Dense-mask oracle (O(n^2)); see core.ref_attention."""
+    return bigbird_attention_reference(q, k, v, cfg, layer=layer)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential-scan oracle for the WKV6 recurrence.
+
+    r,k,v,w: (B, T, H, D); u: (H, D) -> (B, T, H, D).
+    """
+    B, T, H, D = r.shape
+    rf = r.transpose(1, 0, 2, 3).astype(jnp.float32)     # (T, B, H, D)
+    kf = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vf = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    wf = w.transpose(1, 0, 2, 3).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                               # (B, H, D)
+        # y[b,h,dv] = sum_dk rt[b,h,dk] * (s[b,h,dk,dv] + u[h,dk]*kt[b,h,dk]*vt[b,h,dv])
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y += jnp.einsum("bhk,bhv->bhv", rt * uf[None] * kt, vt)
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)

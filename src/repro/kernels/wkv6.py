@@ -1,0 +1,75 @@
+"""RWKV6 (Finch) WKV recurrence — Pallas TPU kernel.
+
+Per head (key dim = value dim = D), with data-dependent decay w_t in (0,1):
+
+    y_t        = r_t · (S_t + diag(u) k_t v_t^T)
+    S_{t+1}    = diag(w_t) S_t + k_t v_t^T
+
+The kernel carries the (D, D) state in VMEM scratch across a sequential grid
+over time chunks — the state never round-trips HBM, which is the TPU analogue
+of the CUDA implementations that keep state in registers/shared memory.
+
+Grid: (B*H, T/chunk); dim 0 outermost so the state reset at chunk==0
+coincides with a new (batch, head) pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                       # (D,)
+
+    def body(t, _):
+        r = r_ref[0, t].astype(jnp.float32)                # (D,)
+        k = k_ref[0, t].astype(jnp.float32)
+        v = v_ref[0, t].astype(jnp.float32)
+        w = w_ref[0, t].astype(jnp.float32)
+        s = s_ref[...]                                     # (D, D) key x value
+        # y = r @ S + (sum_dk r*u*k) * v
+        y = r @ s + jnp.sum(r * u * k) * v
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        s_ref[...] = w[:, None] * s + k[:, None] * v[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (B, T, H, D); u: (H, D) -> (B, T, H, D)."""
+    B, T, H, D = r.shape
+    assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
+
+    def flat(x):  # (B,T,H,D) -> (B*H, T, D)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+    grid = (B * H, T // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, D), lambda bh, c: (bh % H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0)),
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B * H, T, D), r.dtype),
+        interpret=interpret,
+    )(rf, kf, vf, wf, u)
+    return out.reshape(B, H, T, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,214 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective statistics.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --cells yi-6b:train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --all
+
+Results accumulate in experiments/dryrun_<mesh>.json (one JSON object per
+cell) and feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+NOTE: the XLA_FLAGS line below MUST run before any other import — jax locks
+the device count at first init.  Only this entry point sets it; tests and
+benchmarks see the real single device.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments"
+
+# v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link (ICI)
+
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Per-chip collective bytes by op kind, from partitioned HLO.
+
+    Shapes in the post-SPMD module are per-partition, so summing result
+    bytes gives per-chip traffic.  all-reduce counted 2x (ring =
+    reduce-scatter + all-gather); reduce-scatter counted by operand size
+    (= result x group), approximated via the larger operand when printed,
+    else result bytes.  '-done' ops are skipped to avoid double counting.
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3).lower()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dtype]
+        if kind == "all-reduce":
+            b *= 2
+        out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, seq, batch, mode):
+    """Analytic 6*N_active*D (training) or 2*N_active*D (inference fwd)."""
+    from repro.models.params import param_count
+    from repro.models import model as M
+    spec = M.param_spec(cfg)
+    n = param_count(spec)
+    if cfg.moe is not None:
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        moe_layers = sum(1 for ls in cfg.layer_pattern if ls.moe) * cfg.repeats
+        per_moe = cfg.moe.num_experts * 3 * cfg.d_model * cfg.moe.d_ff
+        n_moe = moe_layers * per_moe
+        n = n - n_moe + n_moe * (k / e)
+    tokens = batch * (seq if mode != "decode" else 1)
+    if cfg.kind == "encdec" and mode != "decode":
+        tokens = batch * (seq + cfg.dec_len)
+    mult = 6 if mode == "train" else 2
+    return mult * n * tokens
+
+
+def run_cell(arch, shape, mesh, mesh_name, microbatches=8, opt_level=0):
+    """Lower + compile one cell; derive roofline terms with trip-count-aware
+    HLO accounting (launch/hlo_cost.py — cost_analysis() counts while-loop
+    bodies once, which undercounts scanned layers by ~layers x microbatches).
+    """
+    from repro.launch import hlo_cost
+
+    t0 = time.time()
+    built = steps.build_step(arch, shape, mesh, microbatches=microbatches,
+                             opt_level=opt_level)
+    jf = jax.jit(built["fn"], in_shardings=built["in_shardings"],
+                 out_shardings=built["out_shardings"],
+                 donate_argnums=built["donate"])
+    lowered = jf.lower(*built["abstract_args"])
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    parsed = hlo_cost.analyze(hlo_text)
+
+    chips = mesh.devices.size
+    seq, gbatch, mode = configs.SHAPES[shape]
+    flops_dev = parsed["flops"]
+    bytes_dev = parsed["bytes"]
+    coll = parsed["collectives"]
+    mf = model_flops(built["cfg"], seq, gbatch, mode)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "mode": mode, "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "bytes_per_device": {
+            "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                        (getattr(mem, "argument_size_in_bytes", 0)
+                         + getattr(mem, "output_size_in_bytes", 0)
+                         + getattr(mem, "temp_size_in_bytes", 0))),
+        },
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "xla_cost_analysis_once": {           # uncorrected, for reference
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "model_flops_global": mf,
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll["total"] / LINK_BW,
+        },
+    }
+    r = rec["roofline"]
+    dom = max((k for k in ("compute_s", "memory_s", "collective_s")),
+              key=lambda k: r[k])
+    ideal = mf / chips / PEAK_FLOPS
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    rec["roofline"]["dominant"] = dom
+    rec["roofline"]["ideal_compute_s"] = ideal
+    rec["roofline"]["fraction_of_roofline"] = (ideal / bound) if bound else None
+    rec["model_vs_hlo_flops"] = (mf / (flops_dev * chips)) if flops_dev else None
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--cells", nargs="*", default=None,
+                    help="arch:shape pairs; default = all 40")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--opt", type=int, default=0,
+                    help="beyond-paper optimization level (see §Perf)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    mesh_name = args.mesh + (f"-opt{args.opt}" if args.opt else "") + (
+        f"-{args.tag}" if args.tag else "")
+    cells = ([tuple(c.split(":")) for c in args.cells] if args.cells
+             else configs.all_cells())
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    out_path = RESULTS_DIR / f"dryrun_{mesh_name}.json"
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    for arch, shape in cells:
+        key = f"{arch}:{shape}"
+        print(f"=== {key} on {args.mesh} ({mesh.devices.size} chips) ===",
+              flush=True)
+        try:
+            rec = run_cell(arch, shape, mesh, mesh_name, args.microbatches,
+                           args.opt)
+            r = rec["roofline"]
+            print(f"  ok in {rec['compile_s']}s  peak/dev="
+                  f"{rec['bytes_per_device']['peak']/2**30:.2f}GiB  "
+                  f"compute={r['compute_s']*1e3:.1f}ms "
+                  f"memory={r['memory_s']*1e3:.1f}ms "
+                  f"collective={r['collective_s']*1e3:.1f}ms "
+                  f"dominant={r['dominant']}", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  FAIL: {rec['error']}", flush=True)
+        results[key] = rec
+        out_path.write_text(json.dumps(results, indent=1))
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells green -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""Trip-count-aware cost accounting over compiled (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` counts while-loop bodies ONCE — useless for
+scanned layers / microbatch accumulation / chunked losses.  XLA, however,
+annotates every counted loop with `backend_config={"known_trip_count":...}`.
+This module re-derives the three roofline numerators properly:
+
+  * flops            — 2 * prod(result dims) * prod(contracting dims) for
+                       every `dot` (and convolution), x the product of
+                       enclosing loop trip counts;
+  * bytes            — HBM traffic model: for every *materialized* op
+                       (instructions of the entry / while computations —
+                       fusion internals excluded) operand + result bytes,
+                       x trip counts.  This is an upper-ish bound that
+                       matches XLA's buffer-materialization boundaries;
+  * collective bytes — per-chip bytes by collective kind (shapes in the
+                       partitioned module are per-partition), x trip counts;
+                       all-reduce counted 2x (ring = RS + AG).
+
+All shapes are per-device, so derived seconds are per-chip directly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLLS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _shape_bytes(text):
+    """Sum byte sizes of every TYPE[dims] group in `text`."""
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text):
+    m = _SHAPE.search(text)
+    if not m:
+        return None, None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+class _Comp:
+    __slots__ = ("name", "instrs", "shapes", "_param_reads")
+
+    def __init__(self, name):
+        self.name = name
+        self.instrs = []        # (name, rhs)
+        self.shapes = {}        # instr name -> result-shape string
+        self._param_reads = None
+
+    def param_read_bytes(self):
+        """Effective bytes read per parameter index, accounting for fusion
+        bodies that only dynamic-slice a big operand (e.g. scan-over-layers
+        slicing one layer out of stacked params): charge the slice, not the
+        buffer."""
+        if self._param_reads is not None:
+            return self._param_reads
+        out = {}
+        params = {}
+        for iname, rhs in self.instrs:
+            if " parameter(" in rhs:
+                idx = int(rhs.split(" parameter(", 1)[1].split(")", 1)[0])
+                params[iname] = idx
+                out[idx] = _shape_bytes(rhs.split("(", 1)[0])
+        # find each param's uses
+        for pname, idx in params.items():
+            uses = []
+            for iname, rhs in self.instrs:
+                if iname == pname or "(" not in rhs:
+                    continue
+                args = rhs.split("(", 1)[1].split(")", 1)[0]
+                if pname in _OPND.findall(args):
+                    uses.append((iname, rhs, _OPND.findall(args)))
+            if uses and all(" dynamic-slice(" in rhs for _, rhs, _a in uses):
+                out[idx] = sum(_shape_bytes(rhs.split("(", 1)[0])
+                               for _, rhs, _a in uses)
+            elif uses and all(
+                    " dynamic-update-slice(" in rhs and a and a[0] == pname
+                    for _, rhs, a in uses):
+                # param is only the in-place target of a DUS: no read traffic
+                out[idx] = 0
+        self._param_reads = out
+        return out
+
+    def dus_root_bytes(self):
+        """If the fusion root is (a bitcast/convert of) a dynamic-update-slice,
+        the fusion writes in place: return the update-slice bytes, else None."""
+        dus_updates = []
+        for iname, rhs in self.instrs:
+            if " dynamic-update-slice(" in rhs:
+                args = rhs.split("(", 1)[1].split(")", 1)[0]
+                ops = _OPND.findall(args)
+                if len(ops) >= 2:
+                    dus_updates.append(_shape_bytes(self.shapes.get(ops[1], "")))
+        if dus_updates:
+            return sum(dus_updates)
+        return None
+
+
+def parse_computations(text):
+    comps = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if cur is None or not line.startswith((" ", "\t")):
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Comp(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if mi:
+            name, rhs = mi.group(1), mi.group(2)
+            cur.instrs.append((name, rhs))
+            # result shape(s) = rhs up to the op name: take text before '('
+            head = rhs.split("(", 1)[0]
+            cur.shapes[name] = head
+    return comps, entry
+
+
+def _callees(rhs):
+    """Yield (callee_name, kind) for computations referenced by this instr."""
+    for attr, kind in (("body=", "while_body"), ("condition=", "while_cond"),
+                       ("calls=", "call"), ("to_apply=", "call"),
+                       ("branch_computations=", "call")):
+        i = rhs.find(attr)
+        if i < 0:
+            continue
+        tail = rhs[i + len(attr):]
+        if tail.startswith("{"):
+            names = _OPND.findall(tail[:tail.index("}")])
+        else:
+            m = _OPND.match(tail)
+            names = [m.group(1)] if m else []
+        for n in names:
+            yield n, kind
+
+
+def compute_multipliers(comps, entry):
+    """Computation name -> total execution multiplier (trip-count products)."""
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate to fixpoint over the call DAG (cheap: few hundred comps)
+    for _ in range(64):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if not m:
+                continue
+            for iname, rhs in comp.instrs:
+                trip = 1.0
+                tm = _TRIP.search(rhs)
+                if tm:
+                    trip = float(tm.group(1))
+                for callee, kind in _callees(rhs):
+                    w = trip if kind in ("while_body", "while_cond") else 1.0
+                    new[callee] += m * w
+        new[entry] = 1.0
+        if dict(new) != dict(mult):
+            mult = new
+            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _is_fusion_internal(comps, entry):
+    """Comps reached only via calls= / to_apply= (not materialized bodies)."""
+    internal = set()
+    for comp in comps.values():
+        for _, rhs in comp.instrs:
+            for callee, kind in _callees(rhs):
+                if kind == "call":
+                    internal.add(callee)
+    internal.discard(entry)
+    return internal
+
+
+_SKIP_BYTES_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+                   "bitcast(", "while(", "after-all(", "copy-done(",
+                   "all-gather-done(", "all-reduce-done(",
+                   "collective-permute-done(")
+
+
+def _instr_bytes(comp, comps, rhs):
+    """HBM traffic of one materialized instruction."""
+    if any(op in rhs for op in _SKIP_BYTES_OPS):
+        return 0
+    args = rhs.split("(", 1)[1].split(")", 1)[0] if "(" in rhs else ""
+    opnds = _OPND.findall(args)
+    if " dynamic-update-slice(" in rhs and len(opnds) >= 2:
+        # in-place DUS: traffic = update slice read + write
+        return 2 * _shape_bytes(comp.shapes.get(opnds[1], ""))
+    res_b = _shape_bytes(rhs.split("(", 1)[0])
+    # fusions: use slice-aware per-parameter reads from the fused body
+    callee = None
+    i = rhs.find("calls=")
+    if " fusion(" in rhs and i >= 0:
+        m = _OPND.match(rhs[i + len("calls="):])
+        if m:
+            callee = comps.get(m.group(1))
+    if callee is not None:
+        reads = callee.param_read_bytes()
+        opnd_b = 0
+        for idx, op in enumerate(opnds):
+            full = _shape_bytes(comp.shapes.get(op, ""))
+            opnd_b += min(reads.get(idx, full), full) if full else full
+        dus = callee.dus_root_bytes()
+        if dus is not None:
+            res_b = dus                      # in-place: write only the slice
+        return res_b + opnd_b
+    return res_b + sum(_shape_bytes(comp.shapes.get(op, "")) for op in opnds)
+
+
+def analyze(text):
+    comps, entry = parse_computations(text)
+    mult = compute_multipliers(comps, entry)
+    internal = _is_fusion_internal(comps, entry)
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = defaultdict(float)
+    unknown_loops = 0
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for iname, rhs in comp.instrs:
+            # --- dot flops (counted everywhere, incl. fusion internals) ----
+            if " dot(" in rhs or rhs.startswith("dot("):
+                res_dt, res_dims = _first_shape(rhs.split("(", 1)[0])
+                cm = _CONTRACT.search(rhs)
+                contract = 1
+                if cm:
+                    opnds = _OPND.findall(rhs.split("(", 1)[1].split(")", 1)[0])
+                    if opnds:
+                        lhs_head = comp.shapes.get(opnds[0], "")
+                        _, lhs_dims = _first_shape(lhs_head)
+                        if lhs_dims:
+                            for ci in cm.group(1).split(","):
+                                if ci:
+                                    contract *= lhs_dims[int(ci)]
+                if res_dims is not None:
+                    n = 1
+                    for d in res_dims:
+                        n *= d
+                    flops += m * 2.0 * n * contract
+            # --- collectives ----------------------------------------------
+            for ck in _COLLS:
+                if f" {ck}(" in rhs or f" {ck}-start(" in rhs:
+                    b = _shape_bytes(rhs.split("(", 1)[0])
+                    if ck == "all-reduce":
+                        b *= 2
+                    if ck == "all-gather":
+                        pass        # result already = gathered size
+                    coll[ck] += m * b
+                    break
+            # --- HBM traffic (materialized computations only) --------------
+            if cname not in internal:
+                bytes_hbm += m * _instr_bytes(comp, comps, rhs)
+
+    coll_total = sum(coll.values())
+    return {
+        "flops": flops,
+        "bytes": bytes_hbm,
+        "collectives": dict(coll, total=coll_total),
+        "computations": len(comps),
+    }
+
+
+_META = re.compile(r'op_name="([^"]*)"')
+
+
+def top_dots(text, k=20):
+    """The k largest dot contributors (flops x trip multiplier) with their
+    jax-level op_name metadata — the profiler for §Perf iterations."""
+    comps, entry = parse_computations(text)
+    mult = compute_multipliers(comps, entry)
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for iname, rhs in comp.instrs:
+            if " dot(" not in rhs and not rhs.startswith("dot("):
+                continue
+            res_dt, res_dims = _first_shape(rhs.split("(", 1)[0])
+            cm = _CONTRACT.search(rhs)
+            contract = 1
+            opnds = _OPND.findall(rhs.split("(", 1)[1].split(")", 1)[0])
+            lhs_dims = None
+            if cm and opnds:
+                _, lhs_dims = _first_shape(comp.shapes.get(opnds[0], ""))
+                if lhs_dims:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+            if res_dims is None:
+                continue
+            n = 1
+            for d in res_dims:
+                n *= d
+            meta = _META.search(rhs)
+            rows.append({
+                "flops": m * 2.0 * n * contract, "mult": m,
+                "result": f"{res_dt}{res_dims}", "lhs": str(lhs_dims),
+                "contract": contract, "comp": cname,
+                "op_name": meta.group(1) if meta else "?",
+            })
+    rows.sort(key=lambda r: -r["flops"])
+    return rows[:k]
+
+
+def top_collectives(text, k=20):
+    """The k largest collective ops (bytes x trips) with metadata."""
+    comps, entry = parse_computations(text)
+    mult = compute_multipliers(comps, entry)
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for iname, rhs in comp.instrs:
+            for ck in _COLLS:
+                if f" {ck}(" in rhs or f" {ck}-start(" in rhs:
+                    b = _shape_bytes(rhs.split("(", 1)[0])
+                    if ck == "all-reduce":
+                        b *= 2
+                    meta = _META.search(rhs)
+                    rows.append({
+                        "bytes": m * b, "mult": m, "kind": ck,
+                        "shape": rhs.split("(", 1)[0].strip(),
+                        "op_name": (meta.group(1) if meta else "?")[-110:]})
+                    break
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]
+
+
+def top_bytes(text, k=20):
+    """The k largest HBM-traffic instructions (materialized comps only)."""
+    comps, entry = parse_computations(text)
+    mult = compute_multipliers(comps, entry)
+    internal = _is_fusion_internal(comps, entry)
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0 or cname in internal:
+            continue
+        for iname, rhs in comp.instrs:
+            b = _instr_bytes(comp, comps, rhs)
+            if not b:
+                continue
+            meta = _META.search(rhs)
+            rows.append({"bytes": m * b, "mult": m, "instr": iname,
+                         "comp": cname,
+                         "op_name": (meta.group(1) if meta else "?")[:120]})
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]

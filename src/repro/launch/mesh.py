@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Shapes follow the assignment:
+
+  single pod : (16, 16)      axes (data, model)   — 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16)   axes (pod, data, model) — 512 chips
+
+`pod` is data-parallel across ICI-disjoint pods (gradient sync over DCN);
+`data` is in-pod DP/FSDP (+ sequence sharding for long-context serving);
+`model` is tensor/expert parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,89 @@
+"""Roofline report generator + per-cell HLO profiler.
+
+  PYTHONPATH=src python -m repro.launch.roofline --table
+      -> markdown roofline table from experiments/dryrun_*.json
+
+  PYTHONPATH=src python -m repro.launch.roofline --profile yi-6b:train_4k
+      -> compile that cell (512 fake devices) and print the top dot / byte /
+         collective contributors with trip multipliers — the profile used by
+         the §Perf hypothesis loop.
+"""
+import os
+if "--profile" in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from pathlib import Path
+
+EXP = Path(__file__).resolve().parents[3] / "experiments"
+
+
+def fmt_table(mesh="single"):
+    data = json.loads((EXP / f"dryrun_{mesh}.json").read_text())
+    lines = [
+        "| arch:shape | mode | peak GiB/chip | compute s | memory s | "
+        "collective s | dominant | ideal s | frac-of-roofline | MF/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(data):
+        rec = data[key]
+        if not rec.get("ok"):
+            lines.append(f"| {key} | — | FAILED: {rec['error'][:60]} |")
+            continue
+        r = rec["roofline"]
+        frac = r.get("fraction_of_roofline")
+        mf = rec.get("model_vs_hlo_flops")
+        lines.append(
+            f"| {key} | {rec['mode']} | "
+            f"{rec['bytes_per_device']['peak']/2**30:.2f} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant'][:-2]} | "
+            f"{r.get('ideal_compute_s', 0):.3f} | "
+            f"{'' if frac is None else f'{frac:.3f}'} | "
+            f"{'' if mf is None else f'{mf:.2f}'} |")
+    return "\n".join(lines)
+
+
+def profile(cell, mesh_kind="single", microbatches=8):
+    import jax
+    from repro.launch import hlo_cost, steps
+    from repro.launch.mesh import make_production_mesh
+
+    arch, shape = cell.split(":")
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    built = steps.build_step(arch, shape, mesh, microbatches=microbatches)
+    jf = jax.jit(built["fn"], in_shardings=built["in_shardings"],
+                 out_shardings=built["out_shardings"],
+                 donate_argnums=built["donate"])
+    compiled = jf.lower(*built["abstract_args"]).compile()
+    txt = compiled.as_text()
+    parsed = hlo_cost.analyze(txt)
+    print(f"== {cell} on {mesh_kind} ==")
+    print(f"flops/dev {parsed['flops']:.3e}  bytes/dev {parsed['bytes']:.3e}")
+    print("collectives:", {k: f"{v:.2e}" for k, v in parsed['collectives'].items()})
+    print("\n-- top dots (flops x trips) --")
+    for r in hlo_cost.top_dots(txt, 12):
+        print(f"  {r['flops']:.2e} x{r['mult']:6.0f} {r['result']:30s} "
+              f"K={r['contract']:<7d} {r['op_name'][-75:]}")
+    print("\n-- top HBM traffic --")
+    for r in hlo_cost.top_bytes(txt, 12):
+        print(f"  {r['bytes']:.2e} x{r['mult']:6.0f} {r['op_name'][-85:]}")
+    return txt, parsed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--profile", default=None)
+    ap.add_argument("--microbatches", type=int, default=8)
+    args = ap.parse_args()
+    if args.profile:
+        profile(args.profile, args.mesh, args.microbatches)
+    if args.table or not args.profile:
+        print(fmt_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: batched prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch bigbird-base --smoke \
+        --prompt-len 128 --gen 32 --batch 4
+
+Demonstrates the bounded BigBird-decode path: for sparse-attention archs the
+per-token cache read is O((g+w+r)*b) regardless of context length.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import steps as S
+from repro.models import decode as Dec
+from repro.models import model as M
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bigbird-base")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    B = args.batch
+    prompt = jax.random.randint(key, (B, args.prompt_len), 4, cfg.vocab_size)
+    batch = {"tokens": prompt, "labels": prompt}
+    if cfg.kind == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
+        batch["tokens"] = prompt[:, :min(args.prompt_len, cfg.dec_len)]
+    if cfg.frontend == "patch":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.d_model), cfg.dtype)
+
+    prefill = jax.jit(lambda p, b: Dec.prefill(p, cfg, b, max_len))
+    step = jax.jit(lambda p, c, t, i: Dec.decode_step(p, cfg, c, t, i))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    dec_start = (batch["tokens"].shape[1] if cfg.kind == "encdec"
+                 else args.prompt_len)
+    for i in range(args.gen - 1):
+        logits, cache = step(params, cache, tok, dec_start + i)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] arch={cfg.name} generated {B}x{args.gen} tokens "
+          f"in {dt:.2f}s ({B*args.gen/dt:.1f} tok/s)")
+    print("[serve] sample:", toks[0, :16].tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

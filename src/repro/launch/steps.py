@@ -1,0 +1,194 @@
+"""train_step / serve_step factories with full sharding plumbing.
+
+`build_step(cfg, mesh, mode, ...)` returns (fn, in_shardings, out_shardings,
+abstract_args) ready for `jax.jit(...).lower(*abstract_args).compile()` —
+this is the single entry point the dry-run, the real trainer, and the
+benchmarks all share.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.dist import sharding as Sh
+from repro.models import decode as Dec
+from repro.models import model as M
+from repro.models.params import abstract_params, map_leaves
+from repro.optim import optimizers as Opt
+from repro.optim import schedules
+
+F32 = jnp.float32
+REPL = PartitionSpec()
+
+
+# --------------------------------------------------------------------------
+# train
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: M.ModelConfig, opt: Opt.Optimizer, microbatches: int = 1):
+    def loss_of(params, batch):
+        return M.loss_fn(params, cfg, batch)
+
+    def train_step(state, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        if microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, b):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                gacc = jax.tree.map(lambda a, x: a + x.astype(F32), gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.zeros((), F32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        new_params, new_opt, metrics = opt.update(grads, opt_state, params, step)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_optimizer(cfg_name: str = "", kind: str = "adamw",
+                   schedule: str = "cosine", peak_lr: float = 1e-4,
+                   warmup: int = 10_000, total: int = 100_000):
+    lr_fn = schedules.by_name(schedule, peak_lr, warmup, total)
+    return Opt.by_name(kind, lr_fn)
+
+
+def state_pspec_tree(cfg: M.ModelConfig, opt: Opt.Optimizer, mesh):
+    pspec = M.param_spec(cfg)
+    return {
+        "params": Sh.partition_tree(pspec, mesh),
+        "opt": Sh.partition_tree(opt.state_spec(pspec), mesh),
+        "step": REPL,
+    }
+
+
+def abstract_state(cfg: M.ModelConfig, opt: Opt.Optimizer):
+    pspec = M.param_spec(cfg)
+    return {
+        "params": abstract_params(pspec, cfg.dtype),
+        "opt": abstract_params(opt.state_spec(pspec)),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def batch_pspecs(batch_specs, mesh):
+    return {k: Sh.batch_pspec(v.shape, mesh) for k, v in batch_specs.items()}
+
+
+# --------------------------------------------------------------------------
+# serve (prefill / decode)
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: M.ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return Dec.prefill(params, cfg, batch, max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: M.ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = Dec.decode_step(params, cfg, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+    return serve_step
+
+
+def cache_pspecs(cfg: M.ModelConfig, mesh, B, max_len, enc_len=0):
+    shapes = Dec.cache_spec(cfg, B, max_len, enc_len)
+    axes = Dec.cache_logical_axes(cfg, B, max_len, enc_len)
+    return jax.tree.map(
+        lambda s, ax: Sh.spec_for(s.shape, ax, mesh),
+        shapes, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or (
+            isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)))
+
+
+# --------------------------------------------------------------------------
+# the single entry point used by dryrun / trainer / benchmarks
+# --------------------------------------------------------------------------
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def _with_mesh(fn, mesh, opt_level=0):
+    """Activate the annotation mesh (+ optimization level) during tracing."""
+    from repro.dist.annotate import active_mesh
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        with active_mesh(mesh, opt_level):
+            return fn(*args)
+    return wrapped
+
+
+def build_step(arch: str, shape: str, mesh, *, microbatches: int = 8,
+               donate: bool = True, opt_level: int = 0):
+    """Returns dict(fn, in_shardings, out_shardings, abstract_args, donate)."""
+    from repro import configs
+
+    import dataclasses as _dc
+    cfg = configs.config_for_cell(arch, shape)
+    if opt_level >= 1:
+        # §Perf: pad the vocab to a shardable multiple (kills the per-chunk
+        # unembed all-gather for 50358/92553/122753-sized vocabs)
+        cfg = _dc.replace(cfg, vocab_pad=256)
+    mode, specs = configs.input_specs(arch, shape)
+    seq, gbatch, _ = configs.SHAPES[shape]
+
+    if mode == "train":
+        opt = make_optimizer(kind=configs.optimizer_for(arch),
+                             schedule=configs.schedule_for(arch))
+        mb = max(1, min(microbatches, gbatch))
+        fn = _with_mesh(make_train_step(cfg, opt, microbatches=mb), mesh, opt_level)
+        st_ps = state_pspec_tree(cfg, opt, mesh)
+        b_ps = batch_pspecs(specs, mesh)
+        in_sh = (_ns(mesh, st_ps), _ns(mesh, b_ps))
+        out_sh = (_ns(mesh, st_ps), None)
+        args = (abstract_state(cfg, opt), specs)
+        return dict(fn=fn, in_shardings=in_sh, out_shardings=out_sh,
+                    abstract_args=args, donate=(0,) if donate else (),
+                    cfg=cfg, mode=mode)
+
+    pspec = M.param_spec(cfg)
+    p_ps = Sh.partition_tree(pspec, mesh)
+    p_abs = abstract_params(pspec, cfg.dtype)
+
+    if mode == "prefill":
+        fn = _with_mesh(make_prefill_step(
+            cfg, max_len=(cfg.dec_len if cfg.kind == "encdec" else seq)),
+            mesh, opt_level)
+        b_ps = batch_pspecs(specs, mesh)
+        in_sh = (_ns(mesh, p_ps), _ns(mesh, b_ps))
+        args = (p_abs, specs)
+        return dict(fn=fn, in_shardings=in_sh, out_shardings=None,
+                    abstract_args=args, donate=(), cfg=cfg, mode=mode)
+
+    # decode
+    fn = _with_mesh(make_serve_step(cfg), mesh, opt_level)
+    enc_len = seq if cfg.kind == "encdec" else 0
+    max_len = cfg.dec_len if cfg.kind == "encdec" else seq
+    c_ps = cache_pspecs(cfg, mesh, gbatch, max_len, enc_len)
+    tok_ps = Sh.batch_pspec((gbatch, 1), mesh)
+    in_sh = (_ns(mesh, p_ps), _ns(mesh, c_ps), _ns(mesh, tok_ps),
+             NamedSharding(mesh, REPL))
+    out_sh = (_ns(mesh, Sh.batch_pspec((gbatch,), mesh)), None, _ns(mesh, c_ps))
+    args = (p_abs, specs["cache"], specs["tokens"], specs["pos"])
+    return dict(fn=fn, in_shardings=in_sh, out_shardings=out_sh,
+                abstract_args=args, donate=(1,) if donate else (),
+                cfg=cfg, mode=mode)

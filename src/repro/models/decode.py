@@ -1,0 +1,344 @@
+"""Serving paths: KV/state caches, prefill, and single-token decode.
+
+`decode_step` is what `serve_step` lowers for the decode_32k / long_500k
+dry-run cells.  Attention layers support two cache-read modes:
+
+  * full      — attend to the whole cache up to `pos` (dense archs);
+  * bigbird   — **bounded decode**: the new token reads only the g global
+                blocks + the last w window blocks + r random blocks of the
+                cache (O(1) per token).  This is the paper's pattern applied
+                to autoregressive serving (beyond-paper; see DESIGN.md).
+
+SSM/RWKV layers carry O(1) recurrent state — decode cost independent of
+context length, which is why rwkv6/jamba run long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+from repro.core.attention import AttentionSpec
+from repro.models import layers as L
+from repro.models import model as M
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def _layer_cache_shapes(cfg: M.ModelConfig, ls: M.LayerSpec, B, max_len,
+                        enc_len=0):
+    d, dh, hkv = cfg.d_model, cfg.hd, cfg.num_kv_heads
+    if ls.kind == "attn":
+        c = {"k": ((B, hkv, max_len, dh), cfg.dtype),
+             "v": ((B, hkv, max_len, dh), cfg.dtype)}
+        if cfg.kind == "encdec":
+            c["ck"] = ((B, hkv, enc_len, dh), cfg.dtype)
+            c["cv"] = ((B, hkv, enc_len, dh), cfg.dtype)
+        return c
+    if ls.kind == "mamba":
+        di = cfg.mamba_expand * d
+        return {"h": ((B, di, cfg.mamba_d_state), F32),
+                "conv": ((B, cfg.mamba_conv - 1, di), cfg.dtype)}
+    if ls.kind == "rwkv":
+        nh = d // cfg.rwkv_head_dim
+        return {"tm": ((B, d), cfg.dtype),
+                "s": ((B, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), F32),
+                "cm": ((B, d), cfg.dtype)}
+    raise ValueError(ls.kind)
+
+
+def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True):
+    """Cache tree of ShapeDtypeStructs (abstract) or zeros (concrete)."""
+    make = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+           (lambda s, dt: jnp.zeros(s, dt))
+    pattern, repeats = cfg.layer_pattern, cfg.repeats
+    scanned = cfg.scan_layers and repeats > 1
+    out = {}
+    if scanned:
+        for i, ls in enumerate(pattern):
+            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len)
+            out[f"p{i}"] = {k: make((repeats,) + s, dt)
+                            for k, (s, dt) in shapes.items()}
+    else:
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len)
+            out[f"layer{i}"] = {k: make(s, dt) for k, (s, dt) in shapes.items()}
+    return out
+
+
+def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0):
+    """Logical-axis tree matching cache_spec (for the sharding engine)."""
+    def axes_for(key, ndim, stacked):
+        base = {
+            "k": ("batch", "kv_heads", "seq", None),
+            "v": ("batch", "kv_heads", "seq", None),
+            "ck": ("batch", "kv_heads", "seq", None),
+            "cv": ("batch", "kv_heads", "seq", None),
+            "h": ("batch", "mlp", None),
+            "conv": ("batch", None, "mlp"),
+            "tm": ("batch", "embed"),
+            "s": ("batch", "heads", None, None),
+            "cm": ("batch", "embed"),
+        }[key]
+        return (("layers",) + base) if stacked else base
+
+    spec = cache_spec(cfg, B, max_len, enc_len, abstract=True)
+    scanned = cfg.scan_layers and cfg.repeats > 1
+    return {grp: {k: axes_for(k, v.ndim, scanned) for k, v in leaves.items()}
+            for grp, leaves in spec.items()}
+
+
+# --------------------------------------------------------------------------
+# single-token decode
+# --------------------------------------------------------------------------
+
+def _full_decode_attn(q, kc, vc, pos, *, upto=None):
+    """q (B,Hq,1,dh); kc,vc (B,Hkv,S,dh); attend keys <= pos (or all if None).
+
+    GQA handled with an einsum over (Hkv, grp) WITHOUT materializing the
+    repeated cache (the cache is the big operand at 32k/500k)."""
+    B, Hq, _, dh = q.shape
+    Hkv, S = kc.shape[1], kc.shape[2]
+    grp = Hq // Hkv
+    qf = q.reshape(B, Hkv, grp, 1, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc,
+                        preferred_element_type=F32) / np.sqrt(dh)
+    if pos is not None:
+        mask = jnp.arange(S) <= pos
+        logits = jnp.where(mask[None, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vc.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vc,
+                     preferred_element_type=F32)
+    return out.reshape(B, Hq, 1, dh).astype(q.dtype)
+
+
+def _bigbird_decode_attn(q, kc, vc, pos, bb: patterns.BigBirdConfig, layer):
+    """Bounded decode: gather only the pattern's blocks from the cache."""
+    B, Hq, _, dh = q.shape
+    Hkv, S = kc.shape[1], kc.shape[2]
+    grp = Hq // Hkv
+    b = bb.block_size
+    pat = patterns.build_pattern(bb, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks)          # (nb, Lslots)
+    msk = jnp.asarray(pat.key_mask)
+    jq = pos // b
+    row_idx, row_msk = idx[jq], msk[jq]        # (Ls,)
+    flat = (row_idx[:, None] * b + jnp.arange(b)).reshape(-1)    # (Ls*b,)
+    kg = jnp.take(kc, flat, axis=2)            # (B,Hkv,Ls*b,dh)
+    vg = jnp.take(vc, flat, axis=2)
+    valid = jnp.repeat(row_msk, b) & (flat <= pos)
+    qf = q.reshape(B, Hkv, grp, 1, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kg,
+                        preferred_element_type=F32) / np.sqrt(dh)
+    logits = jnp.where(valid[None, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vg.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vg,
+                     preferred_element_type=F32)
+    return out.reshape(B, Hq, 1, dh).astype(q.dtype)
+
+
+def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
+                       layer, pos):
+    B = x.shape[0]
+    pm = p["mix"]
+    h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    positions = jnp.full((B, 1), pos)
+    q = (h @ pm["wq"]).reshape(B, 1, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ pm["wk"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ pm["wv"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype),
+                                      (0, 0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype),
+                                      (0, 0, pos, 0))
+    use_bb = spec.kind in ("bigbird", "window")
+    if use_bb:
+        S = kc.shape[2]
+        bb = spec.bigbird_config(S)
+        nb = S // bb.block_size if S % bb.block_size == 0 else -1
+        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
+                      + bb.num_random_blocks) > nb:
+            use_bb = False                 # cache too short for the pattern
+    if use_bb:
+        o = _bigbird_decode_attn(q, kc, vc, pos, bb, layer)
+    else:
+        o = _full_decode_attn(q, kc, vc, pos)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, hq * dh)
+    x = x + o @ pm["wo"]
+    new_c = dict(c)
+    new_c["k"], new_c["v"] = kc, vc
+
+    if cfg.kind == "encdec":                      # cross-attention from cache
+        hc = L.rms_norm(p["cross"]["norm"], x, cfg.norm_eps)
+        qx = (hc @ p["cross"]["wq"]).reshape(B, 1, hq, dh).transpose(0, 2, 1, 3)
+        ox = _full_decode_attn(qx, c["ck"], c["cv"], pos=None)
+        ox = ox.transpose(0, 2, 1, 3).reshape(B, 1, hq * dh)
+        x = x + ox @ p["cross"]["wo"]
+    return x, new_c
+
+
+def _decode_mamba_layer(p, c, x, cfg: M.ModelConfig):
+    pm = p["mix"]
+    d_conv, d_state = cfg.mamba_conv, cfg.mamba_d_state
+    dt_rank = max(cfg.d_model // 16, 8)
+    out, (h_last, conv_tail) = L.mamba_block(
+        pm, x, d_state=d_state, d_conv=d_conv, dt_rank=dt_rank,
+        eps=cfg.norm_eps, return_state=True,
+        init_state=(c["h"], c["conv"]))
+    return out, {"h": h_last, "conv": conv_tail.astype(c["conv"].dtype)}
+
+
+def _decode_rwkv_layer(p, c, x, cfg: M.ModelConfig):
+    nh = cfg.d_model // cfg.rwkv_head_dim
+    out, (tm, s, cm) = L.rwkv_block(
+        p["mix"], x, nh, cfg.rwkv_head_dim, eps=cfg.norm_eps,
+        return_state=True, init_state=(c["tm"], c["s"], c["cm"]))
+    return out, {"tm": tm.astype(c["tm"].dtype), "s": s,
+                 "cm": cm.astype(c["cm"].dtype)}
+
+
+def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos):
+    if ls.kind == "attn":
+        x, new_c = _decode_attn_layer(p, c, x, cfg, cfg.attn_spec(ls), layer, pos)
+    elif ls.kind == "mamba":
+        x, new_c = _decode_mamba_layer(p, c, x, cfg)
+    elif ls.kind == "rwkv":
+        x, new_c = _decode_rwkv_layer(p, c, x, cfg)
+        return x, new_c                            # rwkv ffn is inside block
+    else:
+        raise ValueError(ls.kind)
+    if "ffn" in p:
+        if ls.moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, new_c
+
+
+def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos):
+    """tokens (B, 1) int32; pos () int32 -> (logits (B, V) f32, new cache)."""
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    stack = params["decoder"] if cfg.kind == "encdec" else params["layers"]
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, xs):
+            pslice, cslice = xs
+            new_c = {}
+            for i, ls in enumerate(pattern):
+                x, nc = _decode_layer(pslice[f"p{i}"], cslice[f"p{i}"],
+                                      x, cfg, ls, i, pos)
+                new_c[f"p{i}"] = nc
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    else:
+        new_cache = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            x, nc = _decode_layer(stack[f"layer{i}"], cache[f"layer{i}"],
+                                  x, cfg, ls, i, pos)
+            new_cache[f"layer{i}"] = nc
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    logits = (x[:, 0] @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# prefill (forward pass that also fills the caches)
+# --------------------------------------------------------------------------
+
+def _prefill_layer(p, x, cfg, ls, layer, positions, max_len, enc_kv=None):
+    B, S, _ = x.shape
+    if ls.kind == "attn":
+        out, (k, v) = L.attn_block(
+            p["mix"], x, cfg.attn_spec(ls), cfg.num_heads, cfg.num_kv_heads,
+            cfg.hd, positions=positions, theta=cfg.rope_theta, layer=layer,
+            eps=cfg.norm_eps, return_kv=True)
+        pad = max_len - S
+        c = {"k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.dtype),
+             "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.dtype)}
+        if enc_kv is not None:
+            out = L.attn_block(p["cross"], out,
+                               AttentionSpec(kind="full", causal=False),
+                               cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+                               positions=None, eps=cfg.norm_eps,
+                               kv_override=enc_kv)
+            c["ck"], c["cv"] = (enc_kv[0].astype(cfg.dtype),
+                                enc_kv[1].astype(cfg.dtype))
+        x = out
+    elif ls.kind == "mamba":
+        dt_rank = max(cfg.d_model // 16, 8)
+        x, (h_last, tail) = L.mamba_block(
+            p["mix"], x, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_conv,
+            dt_rank=dt_rank, eps=cfg.norm_eps, return_state=True)
+        c = {"h": h_last, "conv": tail.astype(cfg.dtype)}
+    elif ls.kind == "rwkv":
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        x, (tm, s, cm) = L.rwkv_block(p["mix"], x, nh, cfg.rwkv_head_dim,
+                                      eps=cfg.norm_eps, return_state=True)
+        return x, {"tm": tm.astype(cfg.dtype), "s": s, "cm": cm.astype(cfg.dtype)}
+    else:
+        raise ValueError(ls.kind)
+    if "ffn" in p:
+        if ls.moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, c
+
+
+def prefill(params, cfg: M.ModelConfig, batch, max_len):
+    """Run the prompt through the model, returning (last-token logits, cache).
+
+    For encdec, batch must contain "frames" (encoder input) and "tokens"
+    (decoder prompt); cache includes per-layer cross K/V.
+    """
+    enc_h = None
+    if cfg.kind == "encdec":
+        enc_h, _ = M._encoder_hidden(params, cfg, batch["frames"])
+        stack = params["decoder"]
+    else:
+        stack = params["layers"]
+    x = M._embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, pslice):
+            cs = {}
+            for i, ls in enumerate(pattern):
+                enc_kv = (L.cross_kv(pslice[f"p{i}"]["cross"], enc_h,
+                                     cfg.num_kv_heads, cfg.hd)
+                          if enc_h is not None else None)
+                x, c = _prefill_layer(pslice[f"p{i}"], x, cfg, ls, i,
+                                      positions, max_len, enc_kv)
+                cs[f"p{i}"] = c
+            return x, cs
+        x, cache = jax.lax.scan(body, x, stack)
+    else:
+        cache = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            p = stack[f"layer{i}"]
+            enc_kv = (L.cross_kv(p["cross"], enc_h, cfg.num_kv_heads, cfg.hd)
+                      if enc_h is not None else None)
+            x, c = _prefill_layer(p, x, cfg, ls, i, positions, max_len, enc_kv)
+            cache[f"layer{i}"] = c
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    logits = (x[:, -1] @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, cache

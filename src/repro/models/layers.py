@@ -1,0 +1,450 @@
+"""Layer library for the model zoo.
+
+Pure functions over explicit param pytrees (specs from models.params.P).
+Matmuls run in the model dtype (bf16 by default) with f32 accumulation;
+norms/softmax/router run in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns
+from repro.core.attention import AttentionSpec, attention
+from repro.models.params import P
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# norms / rope / embedding
+# --------------------------------------------------------------------------
+
+def rms_norm_spec(d):
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rms_norm(p, x, eps=1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def rope(x, positions, theta=1e4):
+    """x (B, H, S, dh); positions (S,) or (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freq           # (S, half) | (B,S,half)
+    if ang.ndim == 2:
+        ang = ang[None, None]                                # (1,1,S,half)
+    else:
+        ang = ang[:, None]                                   # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def embedding_spec(vocab, d):
+    return {"table": P((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# --------------------------------------------------------------------------
+# attention block
+# --------------------------------------------------------------------------
+
+def attn_block_spec(d, hq, hkv, dh):
+    return {
+        "norm": rms_norm_spec(d),
+        "wq": P((d, hq * dh), ("embed", "heads"), init="scaled"),
+        "wk": P((d, hkv * dh), ("embed", "kv_heads"), init="scaled"),
+        "wv": P((d, hkv * dh), ("embed", "kv_heads"), init="scaled"),
+        "wo": P((hq * dh, d), ("heads", "embed"), init="scaled"),
+    }
+
+
+def _project_qkv(p, x, hq, hkv, dh, positions, theta):
+    from repro.dist.annotate import constrain
+    B, S, d = x.shape
+    q = (x @ p["wq"]).reshape(B, S, hq, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, hkv, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, hkv, dh).transpose(0, 2, 1, 3)
+    q = constrain(q, ("batch", "heads", None, None))
+    k = constrain(k, ("batch", "kv_heads", None, None))
+    v = constrain(v, ("batch", "kv_heads", None, None))
+    if positions is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_block(p, x, spec: AttentionSpec, hq, hkv, dh, *, positions=None,
+               theta=1e4, layer=0, eps=1e-5, kv_override=None,
+               return_kv=False):
+    """Self-attention (or cross-attention via kv_override) block, pre-norm."""
+    B, S, d = x.shape
+    h = rms_norm(p["norm"], x, eps)
+    if kv_override is not None:                     # cross-attn: kv from encoder
+        q = (h @ p["wq"]).reshape(B, S, hq, dh).transpose(0, 2, 1, 3)
+        k, v = kv_override
+    else:
+        q, k, v = _project_qkv(p, h, hq, hkv, dh, positions, theta)
+    o = attention(q, k, v, spec, layer=layer)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, hq * dh)
+    from repro.dist.annotate import constrain
+    o = constrain(o, ("batch", None, "heads"))
+    out = x + o @ p["wo"]
+    out = constrain(out, ("batch", None, "embed"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_kv(p, enc_h, hkv, dh):
+    """Precompute cross-attention K/V from encoder states (decode reuses)."""
+    B, S, d = enc_h.shape
+    k = (enc_h @ p["wk"]).reshape(B, S, hkv, dh).transpose(0, 2, 1, 3)
+    v = (enc_h @ p["wv"]).reshape(B, S, hkv, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# --------------------------------------------------------------------------
+
+def mlp_spec(d, ff):
+    return {
+        "norm": rms_norm_spec(d),
+        "wi": P((d, 2 * ff), ("embed", "mlp"), init="scaled"),   # [gate|up]
+        "wo": P((ff, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def mlp_block(p, x, eps=1e-5):
+    from repro.dist.annotate import constrain
+    h = rms_norm(p["norm"], x, eps)
+    gu = constrain(h @ p["wi"], ("batch", None, "mlp"))
+    gate, up = jnp.split(gu, 2, axis=-1)
+    out = x + (jax.nn.silu(gate) * up) @ p["wo"]
+    return constrain(out, ("batch", None, "embed"))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+
+
+def moe_spec(d, moe: MoEConfig):
+    e, ff = moe.num_experts, moe.d_ff
+    return {
+        "norm": rms_norm_spec(d),
+        "router": P((d, e), ("embed", None), init="small"),
+        "wi": P((e, d, 2 * ff), ("experts", "embed", "mlp"), init="scaled"),
+        "wo": P((e, ff, d), ("experts", "mlp", "embed"), init="scaled"),
+    }
+
+
+def moe_block(p, x, moe: MoEConfig, eps=1e-5):
+    """Top-k routed MoE with static capacity (GShard-style, scatter dispatch).
+
+    Returns (y, aux_loss).  Dropped tokens (over capacity) fall through via
+    the residual connection.
+
+    Beyond-paper optimization (opt_level >= 1, §Perf): *locally-sharded
+    dispatch*.  The baseline computes slot positions with a global cumsum
+    over all tokens, which forces GSPMD to all-gather the full (N, d) token
+    buffer across the mesh before the expert matmuls (the dominant
+    collective in the grok/jamba prefill cells).  With D data shards we
+    instead give every shard its own capacity slice C/D and compute
+    positions with a per-shard cumsum — no cross-shard data dependency, so
+    tokens are dispatched into shard-local capacity and the all-gather
+    disappears.  Same drop semantics per shard; capacity is unchanged in
+    aggregate.
+    """
+    from repro.dist.annotate import data_shards, opt_level
+    B, S, d = x.shape
+    E, K = moe.num_experts, moe.top_k
+    N = B * S
+    D = data_shards() if opt_level() >= 1 else 1
+    if N % D != 0:
+        D = 1
+    Nl = N // D
+    Cl = max(int(np.ceil(Nl * K / E * moe.capacity_factor)), 1)
+    C = Cl * D
+
+    h = rms_norm(p["norm"], x, eps).reshape(N, d)
+    logits = (h.astype(F32) @ p["router"].astype(F32))        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                       # (N, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), F32).at[topi.reshape(-1)].add(
+        jnp.ones((N * K,), F32)) / (N * K)
+    aux = E * jnp.sum(me * ce)
+
+    from repro.dist.annotate import constrain
+    if D > 1:
+        # --- locally-sharded dispatch (opt_level >= 1) -------------------
+        # batch-parallel scatter/gather via vmap over the shard dim: the
+        # shard dim of operands, updates and indices all carry the same
+        # "capacity" sharding, so GSPMD lowers them with NO collectives
+        # (the baseline's partitioned scatter all-reduces the full buffer).
+        oh = jax.nn.one_hot(topi.reshape(D, Nl * K), E, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=1) - oh                      # (D, Nl*K, E)
+        local = jnp.sum(pos * oh, axis=-1)                     # (D, Nl*K)
+        keep = local < Cl
+        slot = jnp.where(keep, local, 0)
+        ti = topi.reshape(D, Nl * K)
+        hx = jnp.repeat(h.reshape(D, Nl, d), K, axis=1)        # (D, Nl*K, d)
+        upd = hx * keep[..., None].astype(h.dtype)
+
+        buf = jax.vmap(
+            lambda u, t, s: jnp.zeros((E, Cl, d), h.dtype).at[t, s].add(
+                u, mode="drop"))(upd, ti, slot)                # (D, E, Cl, d)
+        buf = constrain(buf, ("capacity", "experts", None, "embed"))
+        gu = jnp.einsum("xecd,edf->xecf", buf, p["wi"])
+        gu = constrain(gu, ("capacity", "experts", None, "mlp"))
+        gate, up = jnp.split(gu, 2, axis=-1)
+        act = jax.nn.silu(gate) * up
+        out = jnp.einsum("xecf,efd->xecd", act, p["wo"])
+        out = constrain(out, ("capacity", "experts", None, "embed"))
+        y = jax.vmap(lambda o, t, s: o[t, s])(out, ti, slot)   # (D, Nl*K, d)
+        y = y * keep[..., None].astype(out.dtype)
+        y = y * topv.reshape(D, Nl * K, 1).astype(out.dtype)
+        y = y.reshape(N, K, d).sum(axis=1)
+        return x + y.reshape(B, S, d), aux
+
+    # --- baseline global dispatch ---------------------------------------
+    ti = topi.reshape(N * K)
+    onehot = jax.nn.one_hot(ti, E, dtype=jnp.int32)            # (N*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)                # exclusive
+    slot = jnp.sum(pos * onehot, axis=-1)                      # (N*K,)
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+
+    hx = jnp.repeat(h, K, axis=0)                              # (N*K, d)
+    buf = jnp.zeros((E, C, d), h.dtype).at[ti, slot].add(
+        hx * keep[:, None].astype(h.dtype), mode="drop")
+    buf = constrain(buf, ("experts", None, "embed"))
+    gu = jnp.einsum("ecd,edf->ecf", buf, p["wi"])              # (E, C, 2ff)
+    gu = constrain(gu, ("experts", None, "mlp"))
+    gate, up = jnp.split(gu, 2, axis=-1)
+    act = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", act, p["wo"])             # (E, C, d)
+    out = constrain(out, ("experts", None, "embed"))
+
+    y = out[ti, slot] * keep[:, None].astype(out.dtype)        # (N*K, d)
+    y = y * topv.reshape(N * K, 1).astype(out.dtype)
+    y = y.reshape(N, K, d).sum(axis=1)
+    return x + y.reshape(B, S, d), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba (selective SSM) block
+# --------------------------------------------------------------------------
+
+def mamba_spec(d, d_inner, d_state, d_conv, dt_rank):
+    return {
+        "norm": rms_norm_spec(d),
+        "in_proj": P((d, 2 * d_inner), ("embed", "mlp"), init="scaled"),
+        "conv_w": P((d_conv, d_inner), (None, "mlp"), init="scaled"),
+        "conv_b": P((d_inner,), ("mlp",), init="zeros"),
+        "x_proj": P((d_inner, dt_rank + 2 * d_state), ("mlp", None), init="scaled"),
+        "dt_proj": P((dt_rank, d_inner), (None, "mlp"), init="scaled"),
+        "dt_bias": P((d_inner,), ("mlp",), init="zeros"),
+        "a_log": P((d_inner, d_state), ("mlp", None), init="ones"),
+        "d_skip": P((d_inner,), ("mlp",), init="ones"),
+        "out_proj": P((d_inner, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _mamba_scan(u, dt, a, bmat, cmat, d_skip, h0=None, unroll=8):
+    """Sequential selective scan.  u,dt (B,S,di); a (di,st); bmat,cmat (B,S,st).
+
+    Perf notes (§Perf, jamba hillclimb): the naive version materialized
+    da = exp(dt*A) of shape (B,S,di,st) BEFORE the scan — 4.3 GB/layer at
+    32k prefill and the dominant HBM term of every jamba/mamba cell.  Here
+    da/db are recomputed per step from (B,S,di)-sized scan inputs
+    (st x less traffic), and `unroll` steps share one state round-trip.
+    """
+    B, S, di = u.shape
+    st = a.shape[-1]
+    neg_a = -jnp.exp(a.astype(F32))                            # (di, st)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs                               # (B,di)/(B,st)
+        da = jnp.exp(dt_t[..., None] * neg_a[None])            # (B,di,st)
+        h = da * h + (dt_t * u_t.astype(F32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h_init = jnp.zeros((B, di, st), F32) if h0 is None else h0
+    h_last, ys = jax.lax.scan(
+        step, h_init,
+        (u.transpose(1, 0, 2), dt.astype(F32).transpose(1, 0, 2),
+         bmat.astype(F32).transpose(1, 0, 2),
+         cmat.astype(F32).transpose(1, 0, 2)),
+        unroll=min(unroll, S))
+    y = ys.transpose(1, 0, 2) + u.astype(F32) * d_skip[None, None].astype(F32)
+    return y, h_last
+
+
+def mamba_block(p, x, *, d_state, d_conv, dt_rank, eps=1e-5,
+                return_state=False, init_state=None):
+    from repro.dist.annotate import constrain
+    B, S, d = x.shape
+    h = rms_norm(p["norm"], x, eps)
+    xz = constrain(h @ p["in_proj"], ("batch", None, "mlp"))
+    u, z = jnp.split(xz, 2, axis=-1)                           # (B,S,di)
+    # causal depthwise conv1d; init_state = (h0, conv_tail (B, d_conv-1, di))
+    conv_tail_in = (init_state[1] if init_state is not None else
+                    jnp.zeros((B, d_conv - 1, u.shape[-1]), u.dtype))
+    upad = jnp.concatenate([conv_tail_in, u], axis=1)
+    uc = sum(upad[:, i:i + S] * p["conv_w"][i][None, None]
+             for i in range(d_conv)) + p["conv_b"][None, None]
+    uc = jax.nn.silu(uc)
+    xdbc = uc @ p["x_proj"]
+    dt, bmat, cmat = jnp.split(
+        xdbc, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"][None, None]).astype(F32)
+    h0 = init_state[0] if init_state is not None else None
+    y, h_last = _mamba_scan(uc, dt, p["a_log"], bmat, cmat, p["d_skip"], h0=h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = x + y @ p["out_proj"]
+    if return_state:
+        conv_tail = upad[:, -(d_conv - 1):] if d_conv > 1 else conv_tail_in
+        return out, (h_last, conv_tail)
+    return out
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) block
+# --------------------------------------------------------------------------
+
+def rwkv_spec(d, ff, n_heads, head_dim, lora=64):
+    return {
+        "norm_tm": rms_norm_spec(d),
+        "norm_cm": rms_norm_spec(d),
+        "mu": P((5, d), (None, "embed"), init="small"),        # r,k,v,w,g shift mix
+        "wr": P((d, d), ("embed", "heads"), init="scaled"),
+        "wk": P((d, d), ("embed", "heads"), init="scaled"),
+        "wv": P((d, d), ("embed", "heads"), init="scaled"),
+        "wg": P((d, d), ("embed", "heads"), init="scaled"),
+        "w0": P((d,), ("embed",), init="zeros"),
+        "w_lora_a": P((d, lora), ("embed", None), init="small"),
+        "w_lora_b": P((lora, d), (None, "embed"), init="small"),
+        "u": P((n_heads, head_dim), ("heads", None), init="small"),
+        "ln_x": P((d,), ("embed",), init="ones"),
+        "wo": P((d, d), ("heads", "embed"), init="scaled"),
+        "mu_cm": P((d,), ("embed",), init="small"),
+        "cm_k": P((d, ff), ("embed", "mlp"), init="scaled"),
+        "cm_v": P((ff, d), ("mlp", "embed"), init="scaled"),
+        "cm_r": P((d, d), ("embed", "embed2"), init="scaled"),
+    }
+
+
+def _token_shift(x, prev=None):
+    """x (B,S,d) -> previous-token x (zeros or `prev` at position 0)."""
+    sx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        sx = sx.at[:, 0].set(prev)
+    return sx
+
+
+def rwkv_time_mix(p, x, n_heads, head_dim, *, eps=1e-5, wkv_impl="ref",
+                  prev_x=None, state=None):
+    """Returns (y, (last_x, last_state)).  state (B,H,D,D)."""
+    from repro.kernels import ref as kref
+    B, S, d = x.shape
+    h = rms_norm(p["norm_tm"], x, eps)
+    sx = _token_shift(h, prev_x) - h
+    from repro.dist.annotate import constrain
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = (h + sx * mu[i][None, None] for i in range(5))
+    r = constrain((xr @ p["wr"]).reshape(B, S, n_heads, head_dim),
+                  ("batch", None, "heads", None))
+    k = constrain((xk @ p["wk"]).reshape(B, S, n_heads, head_dim),
+                  ("batch", None, "heads", None))
+    v = constrain((xv @ p["wv"]).reshape(B, S, n_heads, head_dim),
+                  ("batch", None, "heads", None))
+    g = jax.nn.silu(xg @ p["wg"])
+    w_raw = p["w0"][None, None] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(F32))).reshape(B, S, n_heads, head_dim)
+
+    if wkv_impl == "pallas":
+        from repro.kernels import ops as kops
+        y = kops.wkv6_scan(r, k, v, w.astype(r.dtype), p["u"])
+        last_state = None                      # pallas path: training only
+    else:
+        y, last_state = _wkv6_with_state(r, k, v, w, p["u"], state)
+    y = y.reshape(B, S, d).astype(F32)
+    # per-head group norm
+    yh = y.reshape(B, S, n_heads, head_dim)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + eps)
+    y = yh.reshape(B, S, d) * p["ln_x"].astype(F32)[None, None]
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, (h[:, -1], last_state)
+
+
+def _wkv6_with_state(r, k, v, w, u, state0):
+    B, S, H, D = r.shape
+    rf = r.astype(F32).transpose(1, 0, 2, 3)
+    kf = k.astype(F32).transpose(1, 0, 2, 3)
+    vf = v.astype(F32).transpose(1, 0, 2, 3)
+    wf = w.astype(F32).transpose(1, 0, 2, 3)
+    uf = u.astype(F32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y += jnp.einsum("bhk,bhv->bhv", rt * uf[None] * kt, vt)
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    s0 = jnp.zeros((B, H, D, D), F32) if state0 is None else state0
+    # NOTE (§Perf, refuted hypothesis): unrolling this scan (unroll=8) was
+    # predicted to cut state HBM round-trips 8x but MEASURED 9% worse on the
+    # rwkv6 train cell — the (B,T,H,D) xs slices dominate, not the state.
+    # The real fix is the Pallas wkv6 kernel (state lives in VMEM).
+    s_last, ys = jax.lax.scan(step, s0, (rf, kf, vf, wf))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_last
+
+
+def rwkv_channel_mix(p, x, *, eps=1e-5, prev_x=None):
+    h = rms_norm(p["norm_cm"], x, eps)
+    sx = _token_shift(h, prev_x) - h
+    xk = h + sx * p["mu_cm"][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    r = jax.nn.sigmoid(h @ p["cm_r"])
+    return r * (k @ p["cm_v"]), h[:, -1]
+
+
+def rwkv_block(p, x, n_heads, head_dim, *, eps=1e-5, wkv_impl="ref",
+               return_state=False, init_state=None):
+    """init_state/return_state: (tm_shift (B,d), wkv (B,H,D,D), cm_shift (B,d))."""
+    tm_prev, wkv0, cm_prev = init_state if init_state is not None else (None,) * 3
+    y, (tm_last, s_last) = rwkv_time_mix(
+        p, x, n_heads, head_dim, eps=eps,
+        wkv_impl="ref" if return_state else wkv_impl,
+        prev_x=tm_prev, state=wkv0)
+    x = x + y
+    y, cm_last = rwkv_channel_mix(p, x, eps=eps, prev_x=cm_prev)
+    out = x + y
+    if return_state:
+        return out, (tm_last, s_last, cm_last)
+    return out

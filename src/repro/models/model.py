@@ -1,0 +1,382 @@
+"""Unified model assembly: decoder LMs (dense / MoE / SSM / hybrid) and
+encoder-decoder models, with scan-over-layer-groups, remat, chunked CE loss,
+and decode (serving) paths.
+
+A model is a `ModelConfig` + pure functions.  Layer heterogeneity (gemma 5:1
+local:global, jamba 1:7 attn:mamba, MoE interleave) is expressed by
+`layer_pattern`: a period of LayerSpecs that is scanned `num_layers/period`
+times (params stacked on a leading "layers" axis).
+
+Note on random-attention seeds under scan: random blocks vary per *position
+in the period* but are shared across repeats (a static-pattern requirement of
+the scanned representation; deviation from the paper noted in DESIGN.md).
+With scan_layers=False (small/smoke configs) every layer gets its own blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionSpec
+from repro.models import layers as L
+from repro.models.params import P, abstract_params, init_params, map_leaves
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = "attn"                     # attn | mamba | rwkv
+    attn: Optional[AttentionSpec] = None   # None -> model default
+    moe: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    d_model: int = 512
+    num_layers: int = 4
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 0                      # 0 -> d_model // num_heads
+    d_ff: int = 2048
+    vocab_size: int = 32000
+    layer_pattern: tuple = (LayerSpec(),)
+    attn: AttentionSpec = AttentionSpec(kind="full", causal=True)
+    moe: Optional[L.MoEConfig] = None
+    kind: str = "lm"                       # lm | encdec
+    enc_layers: int = 0
+    enc_attn: Optional[AttentionSpec] = None
+    dec_len: int = 448                     # encdec decoder length
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"                    # none | full | dots
+    scan_layers: bool = True
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+    rwkv_head_dim: int = 64
+    frontend: Optional[str] = None         # None | patch | audio
+    frontend_len: int = 256
+    max_seq: int = 4096
+    loss_chunk: int = 512
+    aux_loss_weight: float = 0.01
+    vocab_pad: int = 1       # pad vocab to a multiple (shardability, §Perf)
+
+    @property
+    def padded_vocab(self):
+        return -(-self.vocab_size // self.vocab_pad) * self.vocab_pad
+
+    @property
+    def hd(self):
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self):
+        return len(self.layer_pattern)
+
+    @property
+    def repeats(self):
+        assert self.num_layers % self.period == 0
+        return self.num_layers // self.period
+
+    def attn_spec(self, ls: LayerSpec) -> AttentionSpec:
+        return ls.attn if ls.attn is not None else self.attn
+
+
+# --------------------------------------------------------------------------
+# param spec construction
+# --------------------------------------------------------------------------
+
+def _ffn_spec(cfg: ModelConfig, ls: LayerSpec):
+    if ls.moe:
+        assert cfg.moe is not None
+        return L.moe_spec(cfg.d_model, cfg.moe)
+    return L.mlp_spec(cfg.d_model, cfg.d_ff)
+
+
+def _layer_spec_tree(cfg: ModelConfig, ls: LayerSpec, cross: bool = False):
+    d = cfg.d_model
+    if ls.kind == "attn":
+        tree = {"mix": L.attn_block_spec(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd),
+                "ffn": _ffn_spec(cfg, ls)}
+        if cross:
+            tree["cross"] = L.attn_block_spec(d, cfg.num_heads, cfg.num_kv_heads, cfg.hd)
+        return tree
+    if ls.kind == "mamba":
+        di = cfg.mamba_expand * d
+        dt_rank = max(d // 16, 8)
+        return {"mix": L.mamba_spec(d, di, cfg.mamba_d_state, cfg.mamba_conv, dt_rank),
+                "ffn": _ffn_spec(cfg, ls)}
+    if ls.kind == "rwkv":
+        nh = d // cfg.rwkv_head_dim
+        return {"mix": L.rwkv_spec(d, cfg.d_ff, nh, cfg.rwkv_head_dim)}
+    raise ValueError(ls.kind)
+
+
+def _stack(tree, repeats):
+    return map_leaves(
+        lambda p: P((repeats,) + p.shape, ("layers",) + p.axes,
+                    init=p.init, dtype=p.dtype, scale=p.scale), tree)
+
+
+def _stack_spec(cfg: ModelConfig, pattern, repeats, cross=False):
+    if repeats == 1 or not cfg.scan_layers:
+        # unstacked: one subtree per layer (smoke configs)
+        return {f"layer{i}": _layer_spec_tree(cfg, pattern[i % len(pattern)], cross)
+                for i in range(repeats * len(pattern))}
+    return {f"p{i}": _stack(_layer_spec_tree(cfg, ls, cross), repeats)
+            for i, ls in enumerate(pattern)}
+
+
+def param_spec(cfg: ModelConfig):
+    spec = {"embed": L.embedding_spec(cfg.padded_vocab, cfg.d_model),
+            "final_norm": L.rms_norm_spec(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        spec["unembed"] = {"w": P((cfg.d_model, cfg.padded_vocab),
+                                  ("embed", "vocab"), init="scaled")}
+    if cfg.kind == "encdec":
+        enc_pat = (LayerSpec(kind="attn", attn=cfg.enc_attn),)
+        spec["encoder"] = _stack_spec(cfg, enc_pat, cfg.enc_layers)
+        spec["enc_norm"] = L.rms_norm_spec(cfg.d_model)
+        spec["decoder"] = _stack_spec(cfg, cfg.layer_pattern, cfg.repeats, cross=True)
+    else:
+        spec["layers"] = _stack_spec(cfg, cfg.layer_pattern, cfg.repeats)
+    return spec
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _apply_layer(p, x, cfg: ModelConfig, ls: LayerSpec, layer_idx, positions,
+                 enc_kv=None):
+    aux = jnp.zeros((), F32)
+    if ls.kind == "attn":
+        spec = cfg.attn_spec(ls)
+        x = L.attn_block(p["mix"], x, spec, cfg.num_heads, cfg.num_kv_heads,
+                         cfg.hd, positions=positions, theta=cfg.rope_theta,
+                         layer=layer_idx, eps=cfg.norm_eps)
+        if enc_kv is not None:
+            x = L.attn_block(p["cross"], x,
+                             AttentionSpec(kind="full", causal=False),
+                             cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+                             positions=None, layer=layer_idx,
+                             eps=cfg.norm_eps, kv_override=enc_kv)
+    elif ls.kind == "mamba":
+        dt_rank = max(cfg.d_model // 16, 8)
+        x = L.mamba_block(p["mix"], x, d_state=cfg.mamba_d_state,
+                          d_conv=cfg.mamba_conv, dt_rank=dt_rank,
+                          eps=cfg.norm_eps)
+    elif ls.kind == "rwkv":
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        x = L.rwkv_block(p["mix"], x, nh, cfg.rwkv_head_dim, eps=cfg.norm_eps)
+        return x, aux                                  # rwkv has its own ffn
+    if "ffn" in p:
+        if ls.moe:
+            x, aux = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _apply_stack(stack_params, x, cfg: ModelConfig, pattern, positions,
+                 enc_kv=None, cross=False):
+    """Run the layer stack; returns (x, aux_sum)."""
+    if not cfg.scan_layers or all(k.startswith("layer") for k in stack_params):
+        aux = jnp.zeros((), F32)
+        for i in range(len(stack_params)):
+            ls = pattern[i % len(pattern)]
+            x, a = _apply_layer(stack_params[f"layer{i}"], x, cfg, ls, i,
+                                positions, enc_kv if cross else None)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, pslice):
+        x = carry
+        aux = jnp.zeros((), F32)
+        for i, ls in enumerate(pattern):
+            x, a = _apply_layer(pslice[f"p{i}"], x, cfg, ls, i, positions,
+                                enc_kv if cross else None)
+            aux = aux + a
+        return x, aux
+
+    body = _remat_wrap(body, cfg)
+    x, auxs = jax.lax.scan(body, x, stack_params)
+    return x, jnp.sum(auxs)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    from repro.dist.annotate import constrain
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    if cfg.frontend == "patch" and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([fe, x[:, cfg.frontend_len:]], axis=1)
+    return constrain(x, ("batch", None, "embed"))
+
+
+def hidden_states(params, cfg: ModelConfig, batch):
+    """LM trunk: embeddings -> layer stack -> final norm.  (B, S, d)."""
+    if cfg.kind == "encdec":
+        return _encdec_hidden(params, cfg, batch)
+    x = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, aux = _apply_stack(params["layers"], x, cfg, cfg.layer_pattern, positions)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def _sinusoid(S, d, dtype):
+    """Whisper-style fixed sinusoidal encoder positions (RoPE alone leaves
+    encoder hidden states position-agnostic to cross-attention queries)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=F32) / half)
+    ang = jnp.arange(S, dtype=F32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1)[:, :d].astype(dtype)
+
+
+def _encoder_hidden(params, cfg: ModelConfig, frames):
+    x = frames.astype(cfg.dtype)
+    S = x.shape[1]
+    # position scale matched to the content scale so neither drowns the
+    # other (frame embeddings may be sigma=0.02 lookups or O(1) features)
+    rms = jnp.sqrt(jnp.mean(jnp.square(x.astype(F32))) + 1e-9).astype(cfg.dtype)
+    x = x + 0.5 * rms * _sinusoid(S, cfg.d_model, cfg.dtype)[None]
+    pos = jnp.arange(S)
+    enc_pat = (LayerSpec(kind="attn", attn=cfg.enc_attn),)
+    x, aux = _apply_stack(params["encoder"], x, cfg, enc_pat, pos)
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps), aux
+
+
+def _encdec_hidden(params, cfg: ModelConfig, batch):
+    enc_h, aux_e = _encoder_hidden(params, cfg, batch["frames"])
+    # cross K/V computed once from encoder states; shared by all dec layers?
+    # no — each decoder layer has its own cross projections; computed inside.
+    x = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    pos = jnp.arange(x.shape[1])
+
+    # cross-attention needs per-layer K/V from enc_h; pass enc_h and project
+    # in-layer via kv_override machinery:
+    def make_enc_kv(p):
+        return L.cross_kv(p["cross"], enc_h, cfg.num_kv_heads, cfg.hd)
+
+    if not cfg.scan_layers or all(k.startswith("layer") for k in params["decoder"]):
+        aux = aux_e
+        for i in range(len(params["decoder"])):
+            p = params["decoder"][f"layer{i}"]
+            ls = cfg.layer_pattern[i % cfg.period]
+            x, a = _apply_layer(p, x, cfg, ls, i, pos, enc_kv=make_enc_kv(p))
+            aux = aux + a
+    else:
+        def body(carry, pslice):
+            x = carry
+            aux = jnp.zeros((), F32)
+            for i, ls in enumerate(cfg.layer_pattern):
+                p = pslice[f"p{i}"]
+                x, a = _apply_layer(p, x, cfg, ls, i, pos, enc_kv=make_enc_kv(p))
+                aux = aux + a
+            return x, aux
+        body = _remat_wrap(body, cfg)
+        x, auxs = jax.lax.scan(body, x, params["decoder"])
+        aux = aux_e + jnp.sum(auxs)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# loss (chunked cross-entropy — never materializes (B, S, V))
+# --------------------------------------------------------------------------
+
+def _unembed_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T          # (d, V)
+    return params["unembed"]["w"]
+
+
+def chunked_ce_loss(h, w_out, labels, chunk, loss_mask=None, vocab_real=None):
+    """h (B,S,d), w_out (d,Vp), labels (B,S) -> mean CE (f32 scalar).
+
+    loss_mask (B,S) f32 selects positions (MLM objective); None = all (CLM).
+    vocab_real: true vocab when w_out is padded (logits beyond it masked).
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hs = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    if loss_mask is None:
+        ms = jnp.ones((nc, B, chunk), F32)
+    else:
+        ms = loss_mask.astype(F32).reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    from repro.dist.annotate import constrain
+
+    Vp = w_out.shape[-1]
+
+    @jax.checkpoint
+    def step(acc, xs):
+        # rematted: the (B, chunk, V) logits/probs are recomputed in the
+        # backward pass instead of being saved across the scan — the full
+        # (B, S, V) tensor never exists.
+        hc, lc, mc = xs
+        logits = constrain((hc @ w_out).astype(F32),
+                           ("batch", None, "vocab"))   # (B, chunk, Vp)
+        if vocab_real is not None and vocab_real < Vp:
+            logits = jnp.where(jnp.arange(Vp) < vocab_real, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot, cnt = acc
+        return (tot + jnp.sum((lse - gold) * mc), cnt + jnp.sum(mc)), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), F32), jnp.zeros((), F32)), (hs, ls, ms))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Mean CE + MoE aux loss.  CLM by default; MLM when batch carries
+    loss_mask (the paper's pretraining objective)."""
+    h, aux = hidden_states(params, cfg, batch)
+    w_out = _unembed_weight(params, cfg)
+    labels = batch["labels"]
+    ce = chunked_ce_loss(h, w_out, labels, cfg.loss_chunk,
+                         loss_mask=batch.get("loss_mask"),
+                         vocab_real=cfg.vocab_size)
+    return ce + cfg.aux_loss_weight * aux
+
+
+def logits_fn(params, cfg: ModelConfig, batch):
+    """Full logits — small shapes only (tests / examples)."""
+    h, _ = hidden_states(params, cfg, batch)
+    logits = (h @ _unembed_weight(params, cfg)).astype(F32)
+    return logits[..., :cfg.vocab_size]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key):
+    return init_params(param_spec(cfg), key, cfg.dtype)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(param_spec(cfg), cfg.dtype)

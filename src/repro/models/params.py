@@ -1,0 +1,104 @@
+"""Minimal parameter-spec system (framework-native, no flax).
+
+A model is described by a *spec tree*: nested dicts whose leaves are `P`
+(shape + logical axes + init).  From one spec tree we derive
+  * materialized params     (init_params — smoke tests / real training),
+  * ShapeDtypeStruct stand-ins (abstract_params — the dry-run, no allocation),
+  * PartitionSpecs          (dist.sharding.partition_tree).
+
+Logical axis vocabulary (mapped to mesh axes by dist/sharding.py rules):
+  vocab, embed, heads, kv_heads, head_dim, mlp, experts, layers, conv, state,
+  None (never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["P", "init_params", "abstract_params", "map_leaves", "leaf_count",
+           "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: tuple
+    axes: tuple                      # logical axis name (or None) per dim
+    init: str = "normal"             # normal | zeros | ones | scaled | small
+    dtype: Optional[Any] = None      # None -> model default
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x):
+    return isinstance(x, P)
+
+
+def map_leaves(fn, tree):
+    if _is_leaf(tree):
+        return fn(tree)
+    return {k: map_leaves(fn, v) for k, v in tree.items()}
+
+
+def leaf_count(tree) -> int:
+    if _is_leaf(tree):
+        return 1
+    return sum(leaf_count(v) for v in tree.values())
+
+
+def param_count(tree) -> int:
+    if _is_leaf(tree):
+        return int(np.prod(tree.shape))
+    return sum(param_count(v) for v in tree.values())
+
+
+def _init_leaf(p: P, key, default_dtype):
+    dtype = p.dtype or default_dtype
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":             # GPT-2 style
+        return (0.02 * p.scale * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "scaled":             # 1/sqrt(fan_in), fan_in = dim -2
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale / np.sqrt(fan_in)
+        return (std * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "small":
+        return (1e-3 * p.scale * jax.random.normal(key, p.shape)).astype(dtype)
+    raise ValueError(p.init)
+
+
+def init_params(spec_tree, key, default_dtype=jnp.float32):
+    """Materialize a params pytree from a spec tree (deterministic in key)."""
+    flat = []
+
+    def collect(tree, path):
+        if _is_leaf(tree):
+            flat.append((path, tree))
+        else:
+            for k in sorted(tree):
+                collect(tree[k], path + (k,))
+
+    collect(spec_tree, ())
+    keys = jax.random.split(key, max(len(flat), 1))
+
+    out: dict = {}
+    for (path, p), k in zip(flat, keys):
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = _init_leaf(p, k, default_dtype)
+    return out
+
+
+def abstract_params(spec_tree, default_dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no device allocation)."""
+    return map_leaves(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or default_dtype),
+        spec_tree)

@@ -1,0 +1,150 @@
+"""Optimizers (optax-like minimal API, self-contained).
+
+  * adamw     — dense archs.  m, v in f32; optional master f32 params.
+  * adafactor — factored second moment (Shazeer & Stern), bf16 momentum.
+                Required for grok-314b / jamba-398b: full Adam state would
+                not fit 16 GB/chip at 256 chips (DESIGN.md §5).
+
+Optimizer state mirrors the param tree, so the ZeRO-1 sharding rules applied
+to params apply to the state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, step) -> (params', state', metrics)
+    state_spec: Callable[[Any], Any]   # param P-spec tree -> state P-spec tree
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step + 1
+        c1 = 1 - b1 ** t.astype(F32)
+        c2 = 1 - b2 ** t.astype(F32)
+
+        def upd(g, m, v, p):
+            g = g.astype(F32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        metrics = {"lr": lr, "grad_norm": gnorm}
+        return new_p, {"m": new_m, "v": new_v}, metrics
+
+    def state_spec(pspec):
+        from repro.models.params import map_leaves
+        import dataclasses as dc
+        f32tree = map_leaves(lambda p: dc.replace(p, dtype=F32, init="zeros"), pspec)
+        return {"m": f32tree, "v": f32tree}
+
+    return Optimizer(init, update, state_spec)
+
+
+def adafactor(lr_fn, b2_decay=0.8, eps=1e-30, clip_threshold=1.0,
+              momentum=0.9, weight_decay=0.0) -> Optimizer:
+    """Factored Adafactor with bf16 momentum (memory: ~1.0x params extra
+    instead of Adam's 2x f32)."""
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], F32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32),
+                        "m": jnp.zeros(p.shape, jnp.bfloat16)}
+            return {"v": jnp.zeros(p.shape, F32),
+                    "m": jnp.zeros(p.shape, jnp.bfloat16)}
+        return {"s": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = (step + 1).astype(F32)
+        beta2 = 1.0 - t ** (-b2_decay)
+
+        def upd(g, s, p):
+            g = g.astype(F32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # u = g / sqrt(vr_hat (outer) vc_hat)
+                rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g * jax.lax.rsqrt(rfac[..., None] + eps) * \
+                    jax.lax.rsqrt(vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            m = momentum * s["m"].astype(F32) + (1 - momentum) * u
+            new_s["m"] = m.astype(jnp.bfloat16)
+            u = m + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * u).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["s"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        metrics = {"lr": lr, "grad_norm": global_norm(grads)}
+        return new_p, {"s": new_s}, metrics
+
+    def state_spec(pspec):
+        from repro.models.params import P, map_leaves
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": P(p.shape[:-1], p.axes[:-1], init="zeros", dtype=F32),
+                        "vc": P(p.shape[:-2] + p.shape[-1:],
+                                p.axes[:-2] + p.axes[-1:], init="zeros", dtype=F32),
+                        "m": P(p.shape, p.axes, init="zeros", dtype=jnp.bfloat16)}
+            return {"v": P(p.shape, p.axes, init="zeros", dtype=F32),
+                    "m": P(p.shape, p.axes, init="zeros", dtype=jnp.bfloat16)}
+        return {"s": map_leaves(leaf, pspec)}
+
+    return Optimizer(init, update, state_spec)
+
+
+def by_name(name, lr_fn, **kw):
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    return adamw(lr_fn, **kw)

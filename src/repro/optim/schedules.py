@@ -1,0 +1,53 @@
+"""Learning-rate schedules (self-contained, optax-free).
+
+Includes WSD (warmup–stable–decay) for the minicpm recipe [arXiv:2404.06395],
+plus linear-decay (the paper's own MLM recipe, App. E.1) and cosine.
+All schedules are jnp-traceable functions of the step counter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup, 1))
+
+
+def linear(peak_lr, warmup, total):
+    """Paper App. E.1: warmup then linear decay to 0."""
+    def fn(step):
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return peak_lr * linear_warmup(step, warmup) * (1.0 - frac)
+    return fn
+
+
+def cosine(peak_lr, warmup, total, floor=0.1):
+    def fn(step):
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * linear_warmup(step, warmup) * (floor + (1 - floor) * cos)
+    return fn
+
+
+def wsd(peak_lr, warmup, stable, total, floor=0.01):
+    """Warmup-Stable-Decay (minicpm): hold at peak, then fast decay tail."""
+    def fn(step):
+        wu = linear_warmup(step, warmup)
+        decay_frac = jnp.clip((step - stable) / jnp.maximum(total - stable, 1), 0, 1)
+        decay = floor + (1 - floor) * (1 - decay_frac)
+        return peak_lr * wu * jnp.where(step < stable, 1.0, decay)
+    return fn
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr)
+
+
+def by_name(name, peak_lr, warmup, total):
+    if name == "wsd":
+        return wsd(peak_lr, warmup, int(total * 0.9), total)
+    if name == "linear":
+        return linear(peak_lr, warmup, total)
+    if name == "constant":
+        return constant(peak_lr)
+    return cosine(peak_lr, warmup, total)

@@ -1,0 +1,126 @@
+"""Serving paths: prefill+decode must equal the teacher-forced forward, for
+every layer family; bounded BigBird-decode correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.attention import AttentionSpec
+from repro.models import decode as D
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def roundtrip_error(cfg, B=2, S=64, maxlen=128):
+    if cfg.moe is not None:
+        # capacity-dropped MoE legitimately diverges between teacher-forced
+        # and incremental decode (drop patterns depend on the token set);
+        # test the *architecture* equivalence drop-free.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (B, S), 4, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "patch":
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (B, cfg.frontend_len, cfg.d_model))
+    _, cache = D.prefill(params, cfg, batch, maxlen)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 4, cfg.vocab_size)
+    lg_dec, _ = D.decode_step(params, cfg, cache, nxt, S)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    b2 = dict(batch, tokens=toks2, labels=toks2)
+    full = M.logits_fn(params, cfg, b2)
+    return float(jnp.max(jnp.abs(lg_dec - full[:, S])))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "minicpm-2b", "h2o-danube-1.8b",
+                                  "rwkv6-7b", "jamba-1.5-large-398b",
+                                  "grok-1-314b", "internvl2-26b",
+                                  "gemma3-4b"])
+def test_decode_equals_forward(arch):
+    cfg = configs.smoke(arch)
+    assert roundtrip_error(cfg) < 2e-3
+
+
+def test_encdec_decode_consistency():
+    cfg = configs.smoke("whisper-base")
+    params = M.init(cfg, KEY)
+    B, Se = 2, 64
+    frames = jax.random.normal(KEY, (B, Se, cfg.d_model))
+    S_dec = 16
+    toks = jax.random.randint(KEY, (B, S_dec), 4, cfg.vocab_size)
+    batch = {"frames": frames, "tokens": toks, "labels": toks}
+    _, cache = D.prefill(params, cfg, batch, cfg.dec_len)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 4, cfg.vocab_size)
+    lg_dec, _ = D.decode_step(params, cfg, cache, nxt, S_dec)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    full = M.logits_fn(params, cfg, dict(batch, tokens=toks2, labels=toks2))
+    assert float(jnp.max(jnp.abs(lg_dec - full[:, S_dec]))) < 2e-3
+
+
+def test_bigbird_bounded_decode_matches_pattern_attention():
+    """Decode with the BigBird cache read must equal the teacher-forced
+    forward of the BigBird-causal model (the same graph)."""
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    cfg = M.ModelConfig(name="bbd", d_model=32, num_layers=2, num_heads=4,
+                        num_kv_heads=4, d_ff=64, vocab_size=128, attn=bb,
+                        dtype=jnp.float32, scan_layers=False, remat="none",
+                        loss_chunk=32)
+    params = M.init(cfg, KEY)
+    B, S, MAX = 1, 120, 128   # decode at pos 120 -> block 15 of 16
+    toks = jax.random.randint(KEY, (B, S), 4, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    _, cache = D.prefill(params, cfg, batch, MAX)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 4, cfg.vocab_size)
+    lg_dec, _ = D.decode_step(params, cfg, cache, nxt, S)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    full = M.logits_fn(params, cfg, dict(batch, tokens=toks2, labels=toks2))
+    assert float(jnp.max(jnp.abs(lg_dec - full[:, S]))) < 2e-3
+
+
+def test_bounded_decode_reads_only_pattern_blocks():
+    """Perturbing cache outside the pattern must not change the output."""
+    from repro.core import patterns as P
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=2, num_global_blocks=1,
+                       num_random_blocks=1, seed=3)
+    cfg = M.ModelConfig(name="bbd2", d_model=32, num_layers=1, num_heads=2,
+                        num_kv_heads=2, d_ff=64, vocab_size=128, attn=bb,
+                        dtype=jnp.float32, scan_layers=False, remat="none",
+                        loss_chunk=32)
+    params = M.init(cfg, KEY)
+    B, S, MAX = 1, 120, 128
+    toks = jax.random.randint(KEY, (B, S), 4, cfg.vocab_size)
+    _, cache = D.prefill(params, cfg, {"tokens": toks, "labels": toks}, MAX)
+    nxt = jnp.array([[7]], jnp.int32)
+    base, _ = D.decode_step(params, cfg, cache, nxt, S)
+    # find a cache block NOT in the pattern row for query block 15
+    pat = P.build_pattern(bb.bigbird_config(MAX), MAX)
+    row = set(pat.key_blocks[S // 8][pat.key_mask[S // 8]].tolist())
+    outside = [j for j in range(1, 14) if j not in row][0]
+    c2 = jax.tree.map(lambda x: x, cache)
+    kx = c2["layer0"]["k"].at[:, :, outside * 8:(outside + 1) * 8].add(9.0)
+    c2["layer0"] = dict(c2["layer0"], k=kx)
+    pert, _ = D.decode_step(params, cfg, c2, nxt, S)
+    np.testing.assert_allclose(base, pert, atol=1e-5)
+
+
+def test_cache_spec_shapes_match_prefill():
+    cfg = configs.smoke("jamba-1.5-large-398b")
+    spec = D.cache_spec(cfg, B=2, max_len=128, abstract=True)
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 64), 4, cfg.vocab_size)
+    _, cache = D.prefill(params, cfg, {"tokens": toks, "labels": toks}, 128)
+    flat_spec = jax.tree.leaves(spec)
+    flat_cache = jax.tree.leaves(cache)
+    assert len(flat_spec) == len(flat_cache)
+    for s, c in zip(jax.tree.leaves(jax.tree.map(lambda x: x.shape, spec)),
+                    jax.tree.leaves(jax.tree.map(lambda x: x.shape, cache))):
+        assert s == c

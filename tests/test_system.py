@@ -1,0 +1,209 @@
+"""End-to-end behaviour tests: training convergence (CLM + the paper's MLM
+objective), fault-tolerant restart, serving roundtrip, gradient compression,
+multi-device sharding smoke (fake 8-device mesh in a subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as S
+from repro.models import model as M
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code, env_extra=None):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.update(env_extra or {})
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_clm_training_learns():
+    """Loss on the structured synthetic corpus must drop markedly."""
+    cfg = configs.smoke("bigbird-base")
+    opt = S.make_optimizer(schedule="constant", peak_lr=2e-3)
+    ts = jax.jit(S.make_train_step(cfg, opt, microbatches=1),
+                 donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                  batch_size=8, seed=1))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    first = last = None
+    for step in range(30):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, m = ts(state, batch)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.8, f"{first:.3f} -> {last:.3f}"
+
+
+def test_mlm_training_learns():
+    """The paper's objective: masked-token CE drops on held-out masking."""
+    cfg = configs.smoke("bigbird-base")
+    opt = S.make_optimizer(schedule="constant", peak_lr=2e-3)
+    ts = jax.jit(S.make_train_step(cfg, opt, microbatches=1),
+                 donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                  batch_size=8, seed=2, mlm=True))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    first = last = None
+    for step in range(30):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, m = ts(state, batch)
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.5, f"{first:.3f} -> {last:.3f}"
+
+
+def test_fault_tolerant_restart_resumes_step():
+    """Kill training mid-run (simulated node failure), restart, and verify
+    it resumes from the checkpoint and reaches the target step."""
+    from repro.launch import train as T
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(RuntimeError, match="simulated node failure"):
+            T.main(["--arch", "yi-6b", "--smoke", "--steps", "12",
+                    "--batch", "2", "--seq", "64", "--ckpt-dir", d,
+                    "--ckpt-every", "4", "--fail-at", "9",
+                    "--log-every", "100"])
+        from repro.ckpt import checkpoint as CKPT
+        assert CKPT.latest_step(d) == 8          # survived checkpoints
+        state = T.main(["--arch", "yi-6b", "--smoke", "--steps", "12",
+                        "--batch", "2", "--seq", "64", "--ckpt-dir", d,
+                        "--ckpt-every", "4", "--log-every", "100"])
+        assert int(state["step"]) == 12
+
+
+def test_serve_generates():
+    from repro.launch import serve as SV
+    toks = SV.main(["--arch", "h2o-danube-1.8b", "--smoke", "--batch", "2",
+                    "--prompt-len", "48", "--gen", "8"])
+    assert toks.shape == (2, 8)
+    assert int(toks.min()) >= 0
+
+
+def test_multi_device_sharded_train_step():
+    """8 fake CPU devices: jit the real train step with the full sharding
+    plumbing on a (4, 2) mesh and verify loss finiteness + resharded state."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.launch import steps as S
+from repro.models import model as M
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = configs.smoke("yi-6b")
+opt = S.make_optimizer()
+ts = S.make_train_step(cfg, opt, microbatches=2)
+st_ps = S.state_pspec_tree(cfg, opt, mesh)
+from repro.launch.steps import _ns, _with_mesh
+import numpy as np
+params = M.init(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, _ns(mesh, st_ps))
+toks = jax.random.randint(jax.random.PRNGKey(1), (8, 128), 4, cfg.vocab_size)
+batch = {"tokens": toks, "labels": toks}
+b_ps = _ns(mesh, S.batch_pspecs({k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}, mesh))
+batch = jax.tree.map(lambda x, s: jax.device_put(x, s), batch, b_ps)
+jts = jax.jit(_with_mesh(ts, mesh), in_shardings=(_ns(mesh, st_ps), b_ps), donate_argnums=(0,))
+state, m = jts(state, batch)
+assert np.isfinite(float(m["loss"]))
+state, m2 = jts(state, batch)
+assert float(m2["loss"]) < float(m["loss"]) + 1.0
+print("SHARDED_OK", float(m["loss"]))
+"""
+    out = _run(code)
+    assert "SHARDED_OK" in out
+
+
+def test_gradient_compression_error_feedback():
+    """int8+EF compressed sync across a 2-pod mesh: biased once, unbiased
+    over time (error feedback), and close to the exact mean."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.optim import compression as C
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+rng = np.random.default_rng(0)
+# grads replicated in-pod, different across pods: emulate with pod-sharded input
+g_pods = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+gspec = P()  # per-pod logical grads are replicated shards
+def mean_exact():
+    return g_pods.mean(0)
+# shard_map over pod: each pod sees its own row
+from functools import partial
+def run(g_pods, e):
+    def inner(gp, ep):
+        out, err = C._sync_one(gp[0], ep[0], "pod")
+        return out[None], err[None]
+    fn = jax.shard_map(inner, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                       out_specs=(P("pod"), P("pod")))
+    return fn(g_pods, e)
+e = jnp.zeros_like(g_pods)
+out, e = run(g_pods, e)
+exact = mean_exact()
+err1 = float(jnp.abs(out[0] - exact).max())
+assert err1 < 0.05, err1            # int8 quantization error is small
+# error feedback: accumulated mean over repeated syncs converges
+acc = jnp.zeros(64)
+e = jnp.zeros_like(g_pods)
+for _ in range(50):
+    out, e = run(g_pods, e)
+    acc = acc + out[0]
+drift = float(jnp.abs(acc / 50 - exact).max())
+assert drift < 0.01, drift          # EF removes the bias
+print("COMPRESS_OK", err1, drift)
+"""
+    out = _run(code)
+    assert "COMPRESS_OK" in out
+
+
+def test_elastic_reshard_roundtrip():
+    """Save on a (4,2) mesh, restore + reshard onto (2,2) (failure shrink)."""
+    code = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.launch import steps as S
+from repro.launch.steps import _ns
+from repro.models import model as M
+from repro.ckpt import checkpoint as CKPT
+from repro.ft.elastic import plan_mesh, reshard_state
+cfg = configs.smoke("yi-6b")
+opt = S.make_optimizer()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+params = M.init(cfg, jax.random.PRNGKey(0))
+state = {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, _ns(mesh, S.state_pspec_tree(cfg, opt, mesh)))
+with tempfile.TemporaryDirectory() as d:
+    CKPT.save(state, d, step=5)
+    restored, step = CKPT.restore(d)
+    # "failure": only 4 devices remain -> (2,2) mesh
+    new_mesh = plan_mesh(4, model_parallel=2).build()
+    state2 = reshard_state(restored, cfg, opt, new_mesh)
+    w0 = np.asarray(jax.tree.leaves(state["params"])[0])
+    w1 = np.asarray(jax.tree.leaves(state2["params"])[0])
+    np.testing.assert_array_equal(w0, w1)
+    print("RESHARD_OK", step)
+"""
+    out = _run(code)
+    assert "RESHARD_OK" in out
