@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.row).
   encdec_parity   — Sec. 4.1 sparse-encoder seq2seq parity (Tab. 4/20)
   context_length  — Fig. 8 / Tab. 5: longer context helps MLM
   roofline_table  — §Roofline rows from the dry-run artifacts
+  serving         — Engine TTFT + decode tok/s (+ SERVING_JSON line)
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import time
 import traceback
 
 BENCHES = ["scaling", "blockify", "building_blocks", "encdec_parity",
-           "context_length", "roofline_table"]
+           "context_length", "roofline_table", "serving"]
 
 
 def main() -> None:

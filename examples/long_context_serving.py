@@ -2,6 +2,16 @@
 requests with long prompts, demonstrating the bounded-decode property —
 per-token cache reads are O((g+w+r)*b), independent of context length.
 
+Runs both Engine modes:
+  * `generate` — the fully-jitted loop (prefill + lax.while_loop decode);
+  * `submit/step/drain` — slot-based continuous batching: requests with
+    DIFFERENT prompt lengths admitted at different step boundaries share
+    one decode step via per-slot positions.
+
+Token accounting is exact: `generate(max_new=N)` emits N tokens = 1 from
+prefill + N-1 decode steps, and tok/s is reported over the N-1 decode
+steps (the old hand-rolled loop divided N tokens by N-1 steps' time).
+
     PYTHONPATH=src python examples/long_context_serving.py
 """
 import time
@@ -11,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.attention import AttentionSpec
-from repro.models import decode as D
 from repro.models import model as M
+from repro.serve import Engine, Request, SamplingSpec
 
 bigbird = AttentionSpec(kind="bigbird", causal=True, block_size=64,
                         num_window_blocks=3, num_global_blocks=1,
@@ -26,30 +36,43 @@ n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
 print(f"[serve] model: {n/1e6:.1f}M params, bounded BigBird decode")
 
 B, PROMPT, GEN, MAXLEN = 4, 1024, 48, 2048
-prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 4,
-                            cfg.vocab_size)
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 4,
+                             cfg.vocab_size)
+engine = Engine(cfg, params, max_len=MAXLEN, capacity=B)
 
-prefill = jax.jit(lambda p, b: D.prefill(p, cfg, b, MAXLEN))
-step = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
-
+# --- mode 1: fully-jitted batched generate --------------------------------
 t0 = time.time()
-logits, cache = jax.block_until_ready(
-    prefill(params, {"tokens": prompt, "labels": prompt}))
+out = engine.generate([p for p in prompts], max_new=1)   # prefill + 1st tok
+t_first = time.time() - t0
+print(f"[serve] cold prefill {B}x{PROMPT} + first token: {t_first:.2f}s "
+      f"(compile included)")
+
+engine.generate([p for p in prompts], max_new=GEN)        # warm the GEN loop
+t0 = time.time()
+engine.generate([p for p in prompts], max_new=1)          # warm: TTFT
 t_prefill = time.time() - t0
-print(f"[serve] prefill {B}x{PROMPT} tokens: {t_prefill:.2f}s "
-      f"({B*PROMPT/t_prefill:.0f} tok/s)")
-
-tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
 t0 = time.time()
-outs = [tok]
-for i in range(GEN - 1):
-    logits, cache = step(params, cache, tok, PROMPT + i)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    outs.append(tok)
-jax.block_until_ready(tok)
-t_dec = time.time() - t0
-print(f"[serve] decoded {B}x{GEN} tokens: {t_dec:.2f}s "
-      f"({B*GEN/t_dec:.1f} tok/s, {t_dec/GEN*1e3:.0f} ms/step batched)")
+out = engine.generate([p for p in prompts], max_new=GEN)
+t_total = time.time() - t0
+t_dec = max(t_total - t_prefill, 1e-9)       # exactly GEN-1 decode steps
+steps = GEN - 1
+print(f"[serve] warm TTFT {t_prefill:.2f}s ({B*PROMPT/t_prefill:.0f} prompt "
+      f"tok/s); {B}x{GEN} tokens in {t_total:.2f}s; decode {B*steps} tokens "
+      f"in {t_dec:.2f}s ({B*steps/t_dec:.1f} tok/s, "
+      f"{t_dec/steps*1e3:.0f} ms/step)")
+
+# --- mode 2: continuous batching with heterogeneous prompt lengths --------
+lens = [1024, 700, 333, 901]
+reqs = [Request(prompt=np.asarray(prompts[i, :lens[i]]),
+                max_new_tokens=16, sampling=SamplingSpec(seed=i))
+        for i in range(B)]
+engine.submit(reqs[0]); engine.submit(reqs[1])
+engine.step()                                  # 0 and 1 in flight...
+engine.submit(reqs[2]); engine.submit(reqs[3])
+results = engine.drain()                       # ...2 and 3 join mid-stream
+for r in results:
+    print(f"[serve] req{r.request_id} prompt={r.prompt_len:4d} "
+          f"-> {len(r.tokens)} tokens ({r.finish_reason})")
 
 # bounded-read property: per-token attention reads (g+w+r)*b keys per layer,
 # independent of the 1024-token context

@@ -9,8 +9,8 @@ import jax.numpy as jnp
 from repro.core.attention import AttentionSpec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as S
-from repro.models import decode as D
 from repro.models import model as M
+from repro.serve import Engine
 
 # --- 1. a BigBird attention spec: the paper's three components -------------
 bigbird = AttentionSpec(
@@ -45,16 +45,11 @@ for step in range(60):
               f"lr {float(metrics['lr']):.1e}")
 
 # --- 4. generate (bounded BigBird decode: O(1) cache reads per token) -------
+# Engine.generate runs prefill + the whole greedy decode loop in ONE jitted
+# call (lax.while_loop) — no per-token Python dispatch.
 prompt = jnp.asarray(data.batch(999)["tokens"][:1, :64])
-_, cache = jax.jit(lambda p, b: D.prefill(p, cfg, b, 128))(
-    state["params"], {"tokens": prompt, "labels": prompt})
-tok = prompt[:, -1:]
-out = []
-step_fn = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
-for i in range(24):
-    logits, cache = step_fn(state["params"], cache, tok, 64 + i)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    out.append(int(tok[0, 0]))
-print("generated:", out)
+engine = Engine(cfg, state["params"], max_len=128, capacity=1)
+out = engine.generate([prompt[0]], max_new=24)
+print("generated:", out.sequences()[0])
 print("OK — loss fell and the model generates; see examples/genomics_mlm.py "
       "and examples/summarize_encdec.py for the paper's applications.")

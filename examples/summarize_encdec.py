@@ -19,8 +19,8 @@ import numpy as np
 
 from repro.core.attention import AttentionSpec
 from repro.launch import steps as S
-from repro.models import decode as D
 from repro.models import model as M
+from repro.serve import Engine
 
 S_ENC, S_DEC, V, BOS = 128, 16, 256, 5
 STEPS = 800
@@ -75,17 +75,12 @@ batch = {"frames": frames, "tokens": jnp.asarray(dec_in),
 tf_logits = M.logits_fn(state["params"], cfg, batch)
 tf_acc = float((jnp.argmax(tf_logits, -1) == jnp.asarray(tgt)).mean())
 
-bos = jnp.full((8, 1), BOS, jnp.int32)
-step_fn = jax.jit(lambda p, c, t, i: D.decode_step(p, cfg, c, t, i))
-logits, cache = jax.jit(lambda p, b: D.prefill(p, cfg, b, cfg.dec_len))(
-    state["params"], {"frames": frames, "tokens": bos, "labels": bos})
-tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-hyp = [tok]
-for i in range(S_DEC - 1):
-    logits, cache = step_fn(state["params"], cache, tok, 1 + i)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    hyp.append(tok)
-greedy_acc = float((np.asarray(jnp.concatenate(hyp, 1)) == tgt).mean())
+# incremental greedy decode from BOS via the Engine: encoder runs once in
+# prefill, the full-attention decoder loop runs jitted (lax.while_loop)
+engine = Engine(cfg, state["params"], capacity=8)   # max_len -> cfg.dec_len
+out = engine.generate([np.full((1,), BOS, np.int32)] * 8, max_new=S_DEC,
+                      frames=frames)
+greedy_acc = float((out.tokens == tgt).mean())
 
 print(f"[summarize] loss {first:.2f} -> {last:.2f}; held-out teacher-forced "
       f"acc {tf_acc:.2%}, greedy acc {greedy_acc:.2%} [{time.time()-t0:.0f}s]")

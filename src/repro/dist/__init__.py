@@ -1,0 +1,10 @@
+"""Distribution substrate: logical-axis sharding rules + tracing-time
+annotations.
+
+  sharding.py — the rules engine mapping logical axis names (vocab, embed,
+                heads, seq, batch, ...) to mesh axes, with divisibility
+                fallback and no-reuse guarantees;
+  annotate.py — `constrain` (sharding hints inside traced functions),
+                `active_mesh` (the context the launchers install), and the
+                opt_level / data_shards knobs read by §Perf code paths.
+"""

@@ -1,0 +1,56 @@
+"""Tracing-time sharding annotations.
+
+Launchers install a mesh (+ §Perf optimization level) around tracing with
+`active_mesh`; model code calls `constrain(x, logical_axes)` at collective
+boundaries.  With no active mesh every annotation is a no-op, so the same
+model functions run unmodified in single-device tests and examples.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.dist import sharding as Sh
+
+# (mesh, opt_level) stack; tracing is single-threaded so a plain list works
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def active_mesh(mesh, opt_level: int = 0):
+    """Install `mesh` as the constraint target while tracing a step fn."""
+    _ACTIVE.append((mesh, opt_level))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def current_mesh():
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def opt_level() -> int:
+    """§Perf optimization level of the innermost active mesh (0 = baseline)."""
+    return _ACTIVE[-1][1] if _ACTIVE else 0
+
+
+def data_shards() -> int:
+    """Data-parallel way-count (pod x data) of the active mesh, 1 if none."""
+    mesh = current_mesh()
+    return Sh.data_shard_count(mesh) if mesh is not None else 1
+
+
+def constrain(x, logical_axes):
+    """Sharding hint: constrain `x` to the rules-engine spec for its axes.
+
+    Identity when no mesh is active (eager tests / examples) or when the
+    rules produce full replication anyway.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = Sh.spec_for(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

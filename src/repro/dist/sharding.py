@@ -1,0 +1,102 @@
+"""Logical-axis -> mesh-axis sharding rules engine.
+
+Every parameter / activation / cache dim carries a *logical* axis name
+(models/params.py docstring lists the vocabulary).  `spec_for` maps a
+concrete shape + logical axes to a PartitionSpec for a given mesh under
+three invariants:
+
+  1. divisibility — a dim is only sharded over mesh axes whose combined
+     size divides it; otherwise it falls back to replication (this is what
+     makes elastic downscale safe: a smaller mesh degrades, never fails);
+  2. no reuse — a mesh axis is consumed by at most one dim of a spec;
+  3. preference order — each logical axis has an ordered list of mesh-axis
+     candidates (combined first, then singly), so e.g. `batch` soaks up
+     (pod, data) when both exist and `seq` picks up whatever data-parallel
+     capacity the batch could not use (long-context sequence sharding).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec
+
+# ordered mesh-axis candidates per logical axis name.  A tuple with more
+# than one entry is first tried *combined* (product divisibility), then
+# each member singly, left to right.
+_PREFS = {
+    "batch": ("pod", "data"),
+    "capacity": ("pod", "data"),     # MoE shard-local dispatch buffers
+    "seq": ("data", "model"),        # sequence sharding for long context
+    "vocab": ("model",),
+    "embed": ("data",),              # FSDP-style weight sharding
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "mlp": ("model",),
+    # never sharded: layers (scan dim), conv, state, head_dim
+}
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Version-agnostic AbstractMesh constructor (the ctor signature changed
+    across jax releases)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+def _assign(dim: int, candidates: tuple, sizes: dict):
+    """First candidate group whose combined size divides `dim`, else None."""
+    groups = []
+    if len(candidates) > 1:
+        groups.append(candidates)
+    groups.extend((c,) for c in candidates)
+    for grp in groups:
+        prod = 1
+        for a in grp:
+            prod *= sizes[a]
+        if prod > 1 and dim % prod == 0:
+            return grp
+    return None
+
+
+def spec_for(shape, axes, mesh) -> PartitionSpec:
+    """PartitionSpec for one array: shape + logical axis names + mesh."""
+    assert len(shape) == len(axes), (shape, axes)
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        cand = tuple(a for a in _PREFS.get(name, ())
+                     if a in sizes and a not in used)
+        grp = _assign(dim, cand, sizes) if (name and cand) else None
+        if grp is None:
+            parts.append(None)
+        else:
+            used.update(grp)
+            parts.append(grp if len(grp) > 1 else grp[0])
+    return PartitionSpec(*parts)
+
+
+def partition_tree(spec_tree, mesh):
+    """P-spec tree -> PartitionSpec tree (params, optimizer state, ...)."""
+    from repro.models.params import map_leaves
+    return map_leaves(lambda p: spec_for(p.shape, p.axes, mesh), spec_tree)
+
+
+def batch_pspec(shape, mesh) -> PartitionSpec:
+    """Spec for a batch-leading activation/token array (dim 0 = batch)."""
+    return spec_for(shape, ("batch",) + (None,) * (len(shape) - 1), mesh)
+
+
+def data_shard_count(mesh) -> int:
+    """Combined size of the data-parallel axes (pod x data) of a mesh."""
+    sizes = mesh_axis_sizes(mesh)
+    n = 1
+    for a in ("pod", "data"):
+        n *= sizes.get(a, 1)
+    return n

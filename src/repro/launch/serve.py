@@ -1,10 +1,12 @@
-"""Serving launcher: batched prefill + greedy decode.
+"""Serving launcher on the generation Engine (repro/serve/).
 
     PYTHONPATH=src python -m repro.launch.serve --arch bigbird-base --smoke \
-        --prompt-len 128 --gen 32 --batch 4
+        --prompt-len 128 --gen 32 --batch 4 --temperature 0.8 --top-p 0.95
 
 Demonstrates the bounded BigBird-decode path: for sparse-attention archs the
-per-token cache read is O((g+w+r)*b) regardless of context length.
+per-token cache read is O((g+w+r)*b) regardless of context length.  The
+whole decode loop runs inside one jitted `lax.while_loop` — no per-token
+Python dispatch (Engine.generate).
 """
 from __future__ import annotations
 
@@ -15,9 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.launch import steps as S
-from repro.models import decode as Dec
 from repro.models import model as M
+from repro.serve import Engine, SamplingSpec
 
 
 def main(argv=None):
@@ -28,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -36,34 +40,34 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen
 
     B = args.batch
+    gen = args.gen
     prompt = jax.random.randint(key, (B, args.prompt_len), 4, cfg.vocab_size)
-    batch = {"tokens": prompt, "labels": prompt}
+    frames = frontend = None
     if cfg.kind == "encdec":
-        batch["frames"] = jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
-        batch["tokens"] = prompt[:, :min(args.prompt_len, cfg.dec_len)]
+        frames = jax.random.normal(key, (B, args.prompt_len, cfg.d_model))
+        # decoder budget is dec_len: prompt + gen - 1 positions must fit
+        gen = min(gen, cfg.dec_len)
+        prompt = prompt[:, :max(1, min(args.prompt_len,
+                                       cfg.dec_len - gen + 1))]
+        max_len = 0                     # engine defaults to cfg.dec_len
     if cfg.frontend == "patch":
-        batch["frontend_embeds"] = jax.random.normal(
+        frontend = jax.random.normal(
             key, (B, cfg.frontend_len, cfg.d_model), cfg.dtype)
+        max_len = max(max_len, cfg.frontend_len + gen)
 
-    prefill = jax.jit(lambda p, b: Dec.prefill(p, cfg, b, max_len))
-    step = jax.jit(lambda p, c, t, i: Dec.decode_step(p, cfg, c, t, i))
+    engine = Engine(cfg, params, max_len=max_len, capacity=B)
+    sampling = SamplingSpec(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed)
 
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    out = [tok]
-    dec_start = (batch["tokens"].shape[1] if cfg.kind == "encdec"
-                 else args.prompt_len)
-    for i in range(args.gen - 1):
-        logits, cache = step(params, cache, tok, dec_start + i)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
+    out = engine.generate([jnp.asarray(p) for p in prompt], gen,
+                          sampling=sampling, frames=frames,
+                          frontend_embeds=frontend)
     dt = time.time() - t0
-    print(f"[serve] arch={cfg.name} generated {B}x{args.gen} tokens "
-          f"in {dt:.2f}s ({B*args.gen/dt:.1f} tok/s)")
-    print("[serve] sample:", toks[0, :16].tolist())
-    return toks
+    print(f"[serve] arch={cfg.name} generated {B}x{gen} tokens "
+          f"in {dt:.2f}s ({B*gen/dt:.1f} tok/s)")
+    print("[serve] sample:", out.tokens[0, :16].tolist())
+    return jnp.asarray(out.tokens)
 
 
 if __name__ == "__main__":

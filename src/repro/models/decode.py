@@ -101,6 +101,9 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0):
 def _full_decode_attn(q, kc, vc, pos, *, upto=None):
     """q (B,Hq,1,dh); kc,vc (B,Hkv,S,dh); attend keys <= pos (or all if None).
 
+    `pos` is a per-slot (B,) vector — every batch row may sit at a different
+    sequence position (slot-based continuous batching, serve/batching.py).
+
     GQA handled with an einsum over (Hkv, grp) WITHOUT materializing the
     repeated cache (the cache is the big operand at 32k/500k)."""
     B, Hq, _, dh = q.shape
@@ -110,8 +113,8 @@ def _full_decode_attn(q, kc, vc, pos, *, upto=None):
     logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc,
                         preferred_element_type=F32) / np.sqrt(dh)
     if pos is not None:
-        mask = jnp.arange(S) <= pos
-        logits = jnp.where(mask[None, None, None, None], logits, -1e30)
+        mask = jnp.arange(S)[None] <= pos[:, None]           # (B, S)
+        logits = jnp.where(mask[:, None, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(vc.dtype)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vc,
                      preferred_element_type=F32)
@@ -119,7 +122,10 @@ def _full_decode_attn(q, kc, vc, pos, *, upto=None):
 
 
 def _bigbird_decode_attn(q, kc, vc, pos, bb: patterns.BigBirdConfig, layer):
-    """Bounded decode: gather only the pattern's blocks from the cache."""
+    """Bounded decode: gather only the pattern's blocks from the cache.
+
+    `pos` (B,) — each slot gathers its own pattern row (heterogeneous
+    sequence positions within one batched decode step)."""
     B, Hq, _, dh = q.shape
     Hkv, S = kc.shape[1], kc.shape[2]
     grp = Hq // Hkv
@@ -127,16 +133,16 @@ def _bigbird_decode_attn(q, kc, vc, pos, bb: patterns.BigBirdConfig, layer):
     pat = patterns.build_pattern(bb, S, layer=layer)
     idx = jnp.asarray(pat.key_blocks)          # (nb, Lslots)
     msk = jnp.asarray(pat.key_mask)
-    jq = pos // b
-    row_idx, row_msk = idx[jq], msk[jq]        # (Ls,)
-    flat = (row_idx[:, None] * b + jnp.arange(b)).reshape(-1)    # (Ls*b,)
-    kg = jnp.take(kc, flat, axis=2)            # (B,Hkv,Ls*b,dh)
-    vg = jnp.take(vc, flat, axis=2)
-    valid = jnp.repeat(row_msk, b) & (flat <= pos)
+    jq = pos // b                              # (B,)
+    row_idx, row_msk = idx[jq], msk[jq]        # (B, Ls)
+    flat = (row_idx[..., None] * b + jnp.arange(b)).reshape(B, -1)   # (B,Ls*b)
+    kg = jnp.take_along_axis(kc, flat[:, None, :, None], axis=2)
+    vg = jnp.take_along_axis(vc, flat[:, None, :, None], axis=2)
+    valid = jnp.repeat(row_msk, b, axis=-1) & (flat <= pos[:, None])
     qf = q.reshape(B, Hkv, grp, 1, dh)
     logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kg,
                         preferred_element_type=F32) / np.sqrt(dh)
-    logits = jnp.where(valid[None, None, None, None], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(vg.dtype)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vg,
                      preferred_element_type=F32)
@@ -149,16 +155,17 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     pm = p["mix"]
     h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
     hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
-    positions = jnp.full((B, 1), pos)
+    positions = pos[:, None]                              # (B, 1)
     q = (h @ pm["wq"]).reshape(B, 1, hq, dh).transpose(0, 2, 1, 3)
     k = (h @ pm["wk"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
     v = (h @ pm["wv"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype),
-                                      (0, 0, pos, 0))
-    vc = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype),
-                                      (0, 0, pos, 0))
+    # per-slot cache write: row i lands at its own pos[i]
+    write = jax.vmap(
+        lambda cr, ur, pr: jax.lax.dynamic_update_slice(cr, ur, (0, pr, 0)))
+    kc = write(c["k"], k.astype(c["k"].dtype), pos)
+    vc = write(c["v"], v.astype(c["v"].dtype), pos)
     use_bb = spec.kind in ("bigbird", "window")
     if use_bb:
         S = kc.shape[2]
@@ -224,7 +231,14 @@ def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos):
 
 
 def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos):
-    """tokens (B, 1) int32; pos () int32 -> (logits (B, V) f32, new cache)."""
+    """tokens (B, 1) int32; pos () or (B,) int32 -> (logits (B, V) f32, cache).
+
+    Scalar `pos` (all slots at the same position) is broadcast; a (B,)
+    vector gives every slot its own position — the contract the serving
+    Engine's slot pool (repro/serve/batching.py) relies on."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((tokens.shape[0],), pos)
     x = L.embed(params["embed"], tokens).astype(cfg.dtype)
     stack = params["decoder"] if cfg.kind == "encdec" else params["layers"]
     pattern = cfg.layer_pattern
@@ -298,11 +312,17 @@ def _prefill_layer(p, x, cfg, ls, layer, positions, max_len, enc_kv=None):
     return x, c
 
 
-def prefill(params, cfg: M.ModelConfig, batch, max_len):
+def prefill(params, cfg: M.ModelConfig, batch, max_len, last_index=None):
     """Run the prompt through the model, returning (last-token logits, cache).
 
     For encdec, batch must contain "frames" (encoder input) and "tokens"
     (decoder prompt); cache includes per-layer cross K/V.
+
+    `last_index` (B,) int32: per-row index of the last *real* prompt token.
+    The Engine right-pads prompts to a bucketed length before prefill;
+    under causal attention the padded tail cannot influence positions
+    <= last_index, so gathering logits there (instead of at -1) makes
+    bucketed prefill exact.  None keeps the original "last column" output.
     """
     enc_h = None
     if cfg.kind == "encdec":
@@ -340,5 +360,10 @@ def prefill(params, cfg: M.ModelConfig, batch, max_len):
             cache[f"layer{i}"] = c
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     w_out = M._unembed_weight(params, cfg)
-    logits = (x[:, -1] @ w_out).astype(F32)[..., :cfg.vocab_size]
+    if last_index is None:
+        h_last = x[:, -1]
+    else:
+        idx = jnp.asarray(last_index, jnp.int32)[:, None, None]
+        h_last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    logits = (h_last @ w_out).astype(F32)[..., :cfg.vocab_size]
     return logits, cache

@@ -1,0 +1,18 @@
+"""Unified generation Engine API.
+
+    from repro.serve import Engine, Request, SamplingSpec
+
+    eng = Engine(cfg, params, max_len=2048, capacity=8)
+    out = eng.generate(prompts, max_new=64,
+                       sampling=SamplingSpec(temperature=0.8, top_p=0.9))
+
+    eng.submit(Request(prompt, max_new_tokens=32))   # continuous batching
+    results = eng.drain()
+
+See DESIGN.md §Serving Engine for the full contract.
+"""
+from repro.serve.api import GenerateOutput, Request, Result
+from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingSpec
+
+__all__ = ["Engine", "Request", "Result", "GenerateOutput", "SamplingSpec"]

@@ -1,0 +1,51 @@
+"""The small serving surface: Request in, Result out.
+
+Callers (launch/serve.py, the examples, benchmarks/serving.py) speak only
+this vocabulary plus `Engine.generate` / `Engine.submit` / `Engine.step` /
+`Engine.drain`.  Everything else — compiled executables, slot pools,
+sampling internals — is an Engine implementation detail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.sampling import SamplingSpec
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the slot-batched serving path."""
+    prompt: np.ndarray                     # (L,) int32 prompt tokens
+    max_new_tokens: int = 32
+    sampling: SamplingSpec = dataclasses.field(default_factory=SamplingSpec)
+    stop_token: Optional[int] = None
+    request_id: Optional[int] = None       # assigned by Engine.submit
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+
+@dataclasses.dataclass
+class Result:
+    """A finished request: generated tokens + serving bookkeeping."""
+    request_id: int
+    tokens: List[int]                      # generated tokens (incl. stop)
+    prompt_len: int
+    finish_reason: str                     # "stop" | "length"
+    ttft_steps: int = 0                    # engine steps from admit to 1st tok
+
+
+@dataclasses.dataclass
+class GenerateOutput:
+    """Batched `Engine.generate` output."""
+    tokens: np.ndarray                     # (B, max_new) int32, 0-padded
+    lengths: np.ndarray                    # (B,) generated count incl. stop
+
+    def sequences(self) -> List[List[int]]:
+        return [self.tokens[i, :self.lengths[i]].tolist()
+                for i in range(self.tokens.shape[0])]

@@ -1,0 +1,96 @@
+"""Slot-based continuous batching over the model-zoo cache families.
+
+A `SlotPool` owns ONE fixed-capacity device cache tree (attention KV,
+mamba state, rwkv state — whatever `models/decode.cache_spec` builds for
+the config) whose batch dim is a pool of `capacity` slots.  Requests are
+admitted into free slots at step boundaries by overwriting a slot's rows
+with a freshly prefilled single-request cache, and evicted by simply
+marking the slot free — the stale rows are dead weight until the next
+admit overwrites them, so admission/eviction never reshapes or re-jits
+anything.
+
+Padding-free accounting: every slot carries its own `pos`, and
+`models/decode.decode_step` takes the whole (capacity,) position vector,
+so one decode step serves heterogeneous prompt lengths; idle slots
+compute garbage that nothing reads.
+
+Cache layout note: for scanned configs (`cfg.scan_layers`, repeats > 1)
+the per-group leaves are (repeats, B, ...) — batch is dim 1 — while
+unscanned leaves are (B, ...).  The slot writer handles both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.models import decode as Dec
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side bookkeeping for one occupied slot."""
+    request_id: int
+    pos: int                   # cache position the NEXT decode step writes
+    generated: int             # tokens emitted so far
+    max_new: int
+    stop_token: Optional[int]
+    tokens: list               # emitted tokens (host ints)
+    prompt_len: int
+    admit_step: int            # engine step counter at admission (TTFT)
+
+
+class SlotPool:
+    """Fixed-capacity slot pool over one device cache tree."""
+
+    def __init__(self, cfg, capacity: int, max_len: int):
+        self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
+        self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False)
+        self._scanned = cfg.scan_layers and cfg.repeats > 1
+        self.slots: list = [None] * capacity       # SlotState | None
+        self._writer = self._make_writer()
+
+    # -- occupancy ---------------------------------------------------------
+
+    def free_slots(self):
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self):
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    # -- admission / eviction ---------------------------------------------
+
+    def _make_writer(self):
+        scanned = self._scanned
+
+        def write(pool, one, slot):
+            if scanned:                  # leaves (repeats, B, ...): batch dim 1
+                return jax.tree.map(
+                    lambda c, n: c.at[:, slot].set(n[:, 0]), pool, one)
+            return jax.tree.map(lambda c, n: c.at[slot].set(n[0]), pool, one)
+
+        return jax.jit(write, donate_argnums=(0,))
+
+    def admit(self, slot: int, one_request_cache, state: SlotState):
+        """Overwrite `slot`'s cache rows with a B=1 prefilled cache."""
+        assert self.slots[slot] is None, f"slot {slot} occupied"
+        assert state.pos + state.max_new <= self.max_len + 1, \
+            f"request needs {state.pos + state.max_new} > max_len {self.max_len}"
+        self.cache = self._writer(self.cache, one_request_cache, slot)
+        self.slots[slot] = state
+
+    def evict(self, slot: int):
+        self.slots[slot] = None
+
+    # -- per-step device arrays -------------------------------------------
+
+    def position_vector(self) -> np.ndarray:
+        """(capacity,) int32 of per-slot write positions (idle slots pinned
+        to max_len - 1: in-bounds, overwritten at their next admit)."""
+        pos = np.full((self.capacity,), self.max_len - 1, np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                pos[i] = s.pos
+        return pos

@@ -1,0 +1,286 @@
+"""The generation Engine: compiled prefill/decode executables + a fully
+jitted token loop + slot-based continuous batching.
+
+Two serving modes over one set of compiled artifacts:
+
+  * `generate(prompts, ...)` — batch-synchronous: ONE jitted call runs
+    prefill and the whole stop-token-aware decode loop under
+    `jax.lax.while_loop` (no per-token Python dispatch);
+  * `submit() / step() / drain()` — continuous batching: requests are
+    admitted into a fixed-capacity `SlotPool` at step boundaries, one
+    jitted decode step serves all slots at their own positions, and
+    finished slots free up for the next admit without any reshape/re-jit.
+
+Executables are cached by bucketed shapes: prompts are right-padded to a
+power-of-two bucket (exact under causal attention because logits are
+gathered at the per-row `last_index`, see models/decode.prefill), so a
+handful of compilations serve every prompt length.  Configs with
+recurrent layers (mamba/rwkv state caches) prefill at the exact prompt
+length instead — right-padding would pollute their running state.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as Dec
+from repro.models import model as M
+from repro.serve import sampling as Smp
+from repro.serve.api import GenerateOutput, Request, Result
+from repro.serve.batching import SlotPool, SlotState
+from repro.serve.sampling import SamplingSpec
+
+I32 = jnp.int32
+
+
+def _has_recurrent_layers(cfg: M.ModelConfig) -> bool:
+    return any(ls.kind in ("mamba", "rwkv") for ls in cfg.layer_pattern)
+
+
+class Engine:
+    """Owns params + compiled serving executables for one ModelConfig."""
+
+    def __init__(self, cfg: M.ModelConfig, params, *, max_len: int = 0,
+                 capacity: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
+                                   else cfg.max_seq)
+        self.capacity = capacity
+        self._exact_prefill = _has_recurrent_layers(cfg)
+
+        # compiled executables; jax.jit keys its cache by the (bucketed)
+        # input shapes, so each bucket compiles exactly once per engine
+        self._prefill = jax.jit(
+            lambda p, b, li: Dec.prefill(p, cfg, b, self.max_len,
+                                         last_index=li))
+        self._slot_step = jax.jit(self._slot_step_impl, donate_argnums=(1,))
+        self._generate = {}            # max_new -> jitted loop
+
+        # continuous-batching state
+        self.pool = SlotPool(cfg, capacity, self.max_len)
+        self._queue: collections.deque = collections.deque()
+        self._slot_meta: dict = {}     # slot -> (sampling spec, base key)
+        self._next_id = 0
+        self._step_count = 0
+
+    # ------------------------------------------------------------------
+    # shape bucketing
+    # ------------------------------------------------------------------
+
+    def bucket_len(self, n: int) -> int:
+        """Compiled prompt-length bucket for an n-token prompt."""
+        assert 1 <= n <= self.max_len, (n, self.max_len)
+        if self._exact_prefill:
+            return n                   # recurrent state: no right-padding
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _pad_prompts(self, prompts):
+        """Right-pad to one bucket; returns (tokens (B,Sb), last_index (B,))."""
+        arrs = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        lens = np.asarray([a.size for a in arrs], np.int32)
+        if self._exact_prefill:
+            assert len(set(lens.tolist())) == 1, \
+                "recurrent-state configs need uniform prompt lengths per batch"
+        sb = self.bucket_len(int(lens.max()))
+        toks = np.zeros((len(arrs), sb), np.int32)
+        for i, a in enumerate(arrs):
+            toks[i, :a.size] = a
+        return jnp.asarray(toks), jnp.asarray(lens - 1)
+
+    # ------------------------------------------------------------------
+    # batch-synchronous generation (fully jitted loop)
+    # ------------------------------------------------------------------
+
+    def _make_generate(self, max_new: int):
+        cfg = self.cfg
+
+        def gen(params, batch, last_index, samp, stop):
+            logits, cache = Dec.prefill(params, cfg, batch, self.max_len,
+                                        last_index=last_index)
+            B = logits.shape[0]
+            tok0 = Smp.sample_tokens(
+                logits, Smp.fold_step_keys(samp["keys"], 0),
+                samp["temperature"], samp["top_k"], samp["top_p"])
+            out = jnp.zeros((B, max_new), I32).at[:, 0].set(tok0)
+            done = (stop >= 0) & (tok0 == stop)
+
+            def cond(carry):
+                i, _, _, _, done, _ = carry
+                return (i < max_new) & jnp.logical_not(done.all())
+
+            def body(carry):
+                i, tok, pos, cache, done, out = carry
+                logits, cache = Dec.decode_step(params, cfg, cache,
+                                                tok[:, None], pos)
+                nxt = Smp.sample_tokens(
+                    logits, Smp.fold_step_keys(samp["keys"], i),
+                    samp["temperature"], samp["top_k"], samp["top_p"])
+                nxt = jnp.where(done, 0, nxt)
+                out = out.at[:, i].set(nxt)
+                done = done | ((stop >= 0) & (nxt == stop))
+                return (i + 1, nxt, pos + 1, cache, done, out)
+
+            carry = (jnp.asarray(1, I32), tok0, last_index + 1, cache,
+                     done, out)
+            _, _, _, _, _, out = jax.lax.while_loop(cond, body, carry)
+            return out
+
+        return jax.jit(gen)
+
+    def generate(self, prompts: Sequence, max_new: int,
+                 sampling: SamplingSpec = SamplingSpec(),
+                 stop_token: Optional[int] = None,
+                 frames=None, frontend_embeds=None) -> GenerateOutput:
+        """Generate `max_new` tokens for a batch of prompts in one jitted
+        call: prefill emits token 0, then max_new - 1 in-loop decode steps
+        (early exit when every row has hit `stop_token`)."""
+        toks, last_index = self._pad_prompts(prompts)
+        B, sb = toks.shape
+        batch = {"tokens": toks}
+        if frames is not None:
+            batch["frames"] = frames
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = frontend_embeds
+            # patch frontend: the first F positions of the embedded sequence
+            # are the frontend embeds (models/model._embed_inputs), so the
+            # real input ends no earlier than F-1 and the effective sequence
+            # is at least F long — gather logits / start decode there
+            F = frontend_embeds.shape[1]
+            last_index = jnp.maximum(last_index, F - 1)
+        assert int(jnp.max(last_index)) + max_new <= self.max_len, \
+            "prompt + max_new exceeds engine max_len"
+        if max_new not in self._generate:
+            self._generate[max_new] = self._make_generate(max_new)
+        samp = Smp.uniform_spec_arrays(sampling, B)
+        stop = jnp.asarray(-1 if stop_token is None else stop_token, I32)
+        out = np.asarray(self._generate[max_new](
+            self.params, batch, last_index, samp, stop))
+        lengths = np.full((B,), max_new, np.int32)
+        if stop_token is not None:
+            for i in range(B):
+                hits = np.nonzero(out[i] == stop_token)[0]
+                if hits.size:
+                    lengths[i] = hits[0] + 1
+        return GenerateOutput(tokens=out, lengths=lengths)
+
+    # ------------------------------------------------------------------
+    # continuous batching: submit / step / drain
+    # ------------------------------------------------------------------
+
+    def _slot_step_impl(self, params, cache, tok, pos, samp, step_keys):
+        logits, cache = Dec.decode_step(params, self.cfg, cache, tok, pos)
+        nxt = Smp.sample_tokens(logits, step_keys, samp["temperature"],
+                                samp["top_k"], samp["top_p"])
+        return nxt, cache
+
+    def submit(self, request: Request) -> int:
+        """Queue a request; it is admitted at the next step() boundary."""
+        assert self.cfg.kind == "lm", \
+            "slot batching serves decoder-only LMs; use generate() for encdec"
+        assert self.cfg.frontend != "patch", \
+            "slot batching is text-only; patch-frontend archs need " \
+            "frontend_embeds — use generate()"
+        assert request.prompt.size + request.max_new_tokens <= self.max_len + 1, \
+            "prompt + max_new_tokens exceeds engine max_len"
+        if request.request_id is None:
+            request.request_id = self._next_id
+            self._next_id += 1
+        self._queue.append((request, self._step_count))
+        return request.request_id
+
+    def _admit_one(self, slot: int, request: Request, submit_step: int):
+        prompt = request.prompt
+        L = int(prompt.size)
+        toks, last_index = self._pad_prompts([prompt])
+        logits, cache1 = self._prefill(self.params, {"tokens": toks},
+                                       last_index)
+        base_key = jax.random.PRNGKey(request.sampling.seed)
+        samp1 = Smp.spec_arrays([request.sampling])
+        tok0 = int(Smp.sample_tokens(
+            logits, Smp.fold_step_keys(samp1["keys"], 0),
+            samp1["temperature"], samp1["top_k"], samp1["top_p"])[0])
+        state = SlotState(
+            request_id=request.request_id, pos=L, generated=1,
+            max_new=request.max_new_tokens, stop_token=request.stop_token,
+            tokens=[tok0], prompt_len=L,
+            admit_step=self._step_count)
+        self.pool.admit(slot, cache1, state)
+        self._slot_meta[slot] = (request.sampling, base_key, submit_step)
+
+    def _finish(self, slot: int, reason: str) -> Result:
+        state = self.pool.slots[slot]
+        _, _, submit_step = self._slot_meta.pop(slot)
+        self.pool.evict(slot)
+        return Result(request_id=state.request_id, tokens=state.tokens,
+                      prompt_len=state.prompt_len, finish_reason=reason,
+                      ttft_steps=state.admit_step - submit_step + 1)
+
+    def _slot_done(self, state: SlotState) -> Optional[str]:
+        if state.stop_token is not None and \
+                state.tokens[-1] == state.stop_token:
+            return "stop"
+        if state.generated >= state.max_new:
+            return "length"
+        return None
+
+    def step(self) -> List[Result]:
+        """One serving step: admit queued requests into free slots, then one
+        batched decode step over every active slot.  Returns newly finished
+        requests."""
+        finished: List[Result] = []
+
+        for slot in self.pool.free_slots():
+            if not self._queue:
+                break
+            request, submit_step = self._queue.popleft()
+            self._admit_one(slot, request, submit_step)
+            reason = self._slot_done(self.pool.slots[slot])
+            if reason:                 # stop/length hit on the prefill token
+                finished.append(self._finish(slot, reason))
+
+        active = self.pool.active_slots()
+        if active:
+            B = self.capacity
+            tok = np.zeros((B, 1), np.int32)
+            counts = np.zeros((B,), np.int32)
+            specs = [SamplingSpec()] * B
+            keys = [jax.random.PRNGKey(0)] * B
+            for i in active:
+                s = self.pool.slots[i]
+                tok[i, 0] = s.tokens[-1]
+                counts[i] = s.generated
+                specs[i], keys[i] = self._slot_meta[i][0], self._slot_meta[i][1]
+            samp = Smp.spec_arrays(specs)
+            step_keys = jax.vmap(jax.random.fold_in)(
+                jnp.stack(keys), jnp.asarray(counts))
+            nxt, self.pool.cache = self._slot_step(
+                self.params, self.pool.cache, jnp.asarray(tok),
+                jnp.asarray(self.pool.position_vector()), samp, step_keys)
+            nxt = np.asarray(nxt)
+            for i in active:
+                s = self.pool.slots[i]
+                s.tokens.append(int(nxt[i]))
+                s.generated += 1
+                s.pos += 1
+                reason = self._slot_done(s)
+                if reason:
+                    finished.append(self._finish(i, reason))
+
+        self._step_count += 1
+        return finished
+
+    def drain(self) -> List[Result]:
+        """Run step() until the queue and every slot are empty."""
+        results: List[Result] = []
+        while self._queue or self.pool.active_slots():
+            results.extend(self.step())
+        return sorted(results, key=lambda r: r.request_id)

@@ -1,0 +1,102 @@
+"""Token sampling inside the jitted decode loop.
+
+`SamplingSpec` is the per-request policy (greedy / temperature / top-k /
+top-p, with a per-request seed).  `sample_tokens` is the jit-safe batched
+kernel: every slot carries its *own* temperature/top-k/top-p/key, so one
+decode step can serve heterogeneous sampling policies.
+
+Masking is sort-based (rank + cumulative probability) rather than
+`lax.top_k`, because k and p are *traced per-slot values* — the same
+compiled executable serves every policy.  The Gumbel noise for a slot is a
+function of that slot's key alone, which makes a request's token stream
+independent of its co-residents and of its slot index (the
+bit-identical-under-batching property tests/test_serve.py checks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec:
+    """Per-request sampling policy.  temperature 0 = greedy (argmax)."""
+    temperature: float = 0.0
+    top_k: int = 0                 # 0 -> disabled (full vocab)
+    top_p: float = 1.0             # 1 -> disabled
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0
+        assert self.top_k >= 0
+        assert 0.0 < self.top_p <= 1.0
+
+
+def spec_arrays(specs) -> dict:
+    """Stack per-request SamplingSpecs into the (B,) device arrays
+    `sample_tokens` consumes.  `specs` is a list (one per slot/row)."""
+    return {
+        "temperature": jnp.asarray([s.temperature for s in specs], F32),
+        "top_k": jnp.asarray([s.top_k for s in specs], jnp.int32),
+        "top_p": jnp.asarray([s.top_p for s in specs], F32),
+        "keys": jnp.stack([jax.random.PRNGKey(s.seed) for s in specs]),
+    }
+
+
+def _gumbel_rows(keys, shape_v):
+    """Per-row Gumbel noise: row i depends only on keys[i]."""
+    return jax.vmap(lambda k: jax.random.gumbel(k, (shape_v,), F32))(keys)
+
+
+def sample_tokens(logits, keys, temperature, top_k, top_p):
+    """logits (B, V) f32; keys (B, 2) PRNGKeys; temperature/top_k/top_p (B,).
+
+    Returns (B,) int32 tokens.  Rows with temperature == 0 take the argmax;
+    the rest sample from the top-k/top-p-truncated tempered distribution via
+    the Gumbel-max trick (one argmax, no categorical resampling).
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1)
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits.astype(F32) / temp
+
+    # rank of every vocab entry within its row, descending by logit
+    order = jnp.argsort(-scaled, axis=-1)                  # (B, V)
+    ranks = jnp.argsort(order, axis=-1)
+    k = jnp.where(top_k <= 0, V, top_k)[:, None]
+    keep_k = ranks < k
+
+    # nucleus: keep tokens whose preceding cumulative mass is < top_p
+    # (always keeps the top-1 token, matching the standard formulation)
+    sorted_probs = jax.nn.softmax(
+        jnp.take_along_axis(scaled, order, axis=-1), axis=-1)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    keep_sorted = (cum - sorted_probs) < top_p[:, None]
+    keep_p = jnp.take_along_axis(keep_sorted, ranks, axis=-1)
+
+    masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+    sampled = jnp.argmax(masked + _gumbel_rows(keys, V), axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+def fold_step_keys(keys, step):
+    """Advance every slot's key stream to `step` (B-vmapped fold_in)."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)
+
+
+def uniform_spec_arrays(spec: SamplingSpec, batch: int) -> dict:
+    """One spec replicated across a batch, with per-row derived seeds."""
+    base = jax.random.PRNGKey(spec.seed)
+    return {
+        "temperature": jnp.full((batch,), spec.temperature, F32),
+        "top_k": jnp.full((batch,), spec.top_k, jnp.int32),
+        "top_p": jnp.full((batch,), spec.top_p, F32),
+        "keys": jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(batch)),
+    }

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional extra — see requirements.txt
+    from _prop import given, settings, st
 
 from repro.core import patterns
 from repro.kernels import ops, ref

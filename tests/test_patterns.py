@@ -3,7 +3,10 @@ theoretical structure (§3): star-graph containment, no-duplicate slots,
 causality, and window/global coverage."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional extra — see requirements.txt
+    from _prop import given, settings, st
 
 from repro.core import patterns
 

@@ -1,0 +1,241 @@
+"""Generation Engine: sampling invariants, jitted-loop equivalence with the
+hand-rolled greedy decode, and slot-batched continuous serving producing
+bit-identical streams under staggered admission."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import AttentionSpec
+from repro.models import decode as D
+from repro.models import model as M
+from repro.serve import Engine, Request, SamplingSpec
+from repro.serve import sampling as Smp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small_cfg(vocab=128, max_seq=256):
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    return M.ModelConfig(name="serve-test", d_model=32, num_layers=2,
+                         num_heads=4, num_kv_heads=4, d_ff=64,
+                         vocab_size=vocab, attn=bb, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=max_seq)
+
+
+def _rand_logits(B=4, V=64, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((B, V)),
+                       jnp.float32)
+
+
+def _samp(B, **kw):
+    return Smp.uniform_spec_arrays(SamplingSpec(**kw), B)
+
+
+# --------------------------------------------------------------------------
+# sampling invariants
+# --------------------------------------------------------------------------
+
+def test_temperature_zero_is_greedy():
+    logits = _rand_logits()
+    s = _samp(4, temperature=0.0)
+    out = Smp.sample_tokens(logits, s["keys"], s["temperature"], s["top_k"],
+                            s["top_p"])
+    np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_temperature_to_zero_limit_is_greedy():
+    """top-1 at temp -> 0 equals greedy: logits/T dwarf the Gumbel noise."""
+    logits = _rand_logits(seed=1)
+    s = _samp(4, temperature=1e-5)
+    out = Smp.sample_tokens(logits, s["keys"], s["temperature"], s["top_k"],
+                            s["top_p"])
+    np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_topk_full_vocab_equals_plain_sampling():
+    """top_k = V must be bit-identical to top_k disabled (same keys)."""
+    logits = _rand_logits(B=8, seed=2)
+    V = logits.shape[-1]
+    plain = _samp(8, temperature=1.0, top_k=0)
+    full = _samp(8, temperature=1.0, top_k=V)
+    a = Smp.sample_tokens(logits, plain["keys"], plain["temperature"],
+                          plain["top_k"], plain["top_p"])
+    b = Smp.sample_tokens(logits, full["keys"], full["temperature"],
+                          full["top_k"], full["top_p"])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_top_p_one_equals_plain_sampling():
+    logits = _rand_logits(B=8, seed=3)
+    plain = _samp(8, temperature=0.7)
+    explicit = _samp(8, temperature=0.7, top_p=1.0)
+    a = Smp.sample_tokens(logits, plain["keys"], plain["temperature"],
+                          plain["top_k"], plain["top_p"])
+    b = Smp.sample_tokens(logits, explicit["keys"], explicit["temperature"],
+                          explicit["top_k"], explicit["top_p"])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_topk_restricts_support():
+    """Sampled ids must come from each row's top-k logits."""
+    logits = _rand_logits(B=16, V=64, seed=4)
+    k = 5
+    s = _samp(16, temperature=1.5, top_k=k)
+    topsets = np.argsort(-np.asarray(logits), axis=-1)[:, :k]
+    for trial in range(10):
+        keys = Smp.fold_step_keys(s["keys"], trial)
+        out = np.asarray(Smp.sample_tokens(
+            logits, keys, s["temperature"], s["top_k"], s["top_p"]))
+        for i in range(16):
+            assert out[i] in topsets[i]
+
+
+def test_top_p_keeps_at_least_top1_and_respects_nucleus():
+    # one spiky row (nucleus = single token) + one flat row
+    logits = jnp.asarray([[10.0, 0.0, 0.0, 0.0], [1.0, 1.0, 1.0, 1.0]],
+                         jnp.float32)
+    s = _samp(2, temperature=1.0, top_p=0.5)
+    for trial in range(10):
+        keys = Smp.fold_step_keys(s["keys"], trial)
+        out = np.asarray(Smp.sample_tokens(
+            logits, keys, s["temperature"], s["top_k"], s["top_p"]))
+        assert out[0] == 0           # spiky row: nucleus is exactly top-1
+        assert 0 <= out[1] < 4
+
+
+def test_per_row_seeds_differ():
+    """Per-request seeds: identical rows sample different streams."""
+    logits = jnp.tile(_rand_logits(B=1, V=64, seed=5), (8, 1))
+    s = _samp(8, temperature=1.0, seed=9)
+    draws = [np.asarray(Smp.sample_tokens(
+        logits, Smp.fold_step_keys(s["keys"], t), s["temperature"],
+        s["top_k"], s["top_p"])) for t in range(6)]
+    streams = np.stack(draws, 1)          # (8 rows, 6 steps)
+    assert len({tuple(r) for r in streams.tolist()}) > 1
+
+
+# --------------------------------------------------------------------------
+# Engine.generate vs hand-rolled greedy decode
+# --------------------------------------------------------------------------
+
+def test_generate_matches_hand_rolled_greedy():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    B, L, N, MAXLEN = 2, 16, 12, 64     # L == its bucket -> no padding
+    prompts = jax.random.randint(KEY, (B, L), 4, cfg.vocab_size)
+
+    engine = Engine(cfg, params, max_len=MAXLEN, capacity=B)
+    out = engine.generate([p for p in prompts], max_new=N)
+
+    logits, cache = D.prefill(params, cfg, {"tokens": prompts}, MAXLEN)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    ref = [tok]
+    for i in range(N - 1):
+        logits, cache = D.decode_step(params, cfg, cache, tok, L + i)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        ref.append(tok)
+    np.testing.assert_array_equal(out.tokens, jnp.concatenate(ref, axis=1))
+
+
+def test_generate_bucketed_padding_is_exact():
+    """Right-padded (bucketed) prefill must equal exact-length prefill."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    engine = Engine(cfg, params, max_len=64, capacity=2)
+    prompt = np.asarray(
+        jax.random.randint(KEY, (13,), 4, cfg.vocab_size))   # bucket -> 16
+    a = engine.generate([prompt], max_new=8)
+
+    logits, cache = D.prefill(params, cfg, {"tokens": jnp.asarray(prompt)[None]},
+                              64)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    ref = [int(tok[0, 0])]
+    for i in range(7):
+        logits, cache = D.decode_step(params, cfg, cache, tok, 13 + i)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        ref.append(int(tok[0, 0]))
+    assert a.tokens[0].tolist() == ref
+
+
+def test_generate_stop_token():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    engine = Engine(cfg, params, max_len=64, capacity=1)
+    prompt = np.asarray(jax.random.randint(KEY, (16,), 4, cfg.vocab_size))
+    free_run = engine.generate([prompt], max_new=8)
+    stop = int(free_run.tokens[0, 2])       # 3rd greedy token as "EOS"
+    out = engine.generate([prompt], max_new=8, stop_token=stop)
+    n = int(out.lengths[0])
+    assert n <= 3 and out.tokens[0, n - 1] == stop
+    assert (out.tokens[0, n:] == 0).all()   # post-stop positions padded
+
+
+# --------------------------------------------------------------------------
+# continuous batching
+# --------------------------------------------------------------------------
+
+def test_staggered_requests_bit_identical_to_solo():
+    """Requests admitted mid-flight (heterogeneous prompt lengths and
+    positions) must produce exactly the tokens a solo run produces."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(4, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (19, 33, 11)]
+
+    def make_reqs():
+        return [Request(prompt=p, max_new_tokens=10,
+                        sampling=SamplingSpec(temperature=0.8, top_k=20,
+                                              seed=i))
+                for i, p in enumerate(prompts)]
+
+    solo = []
+    for r in make_reqs():
+        eng = Engine(cfg, params, max_len=64, capacity=3)
+        eng.submit(r)
+        solo.append(eng.drain()[0].tokens)
+
+    eng = Engine(cfg, params, max_len=64, capacity=3)
+    reqs = make_reqs()
+    eng.submit(reqs[0])
+    eng.step()                       # req0 alone in flight
+    eng.step()
+    eng.submit(reqs[1])
+    eng.step()                       # req1 joins three steps late
+    eng.submit(reqs[2])
+    results = eng.drain()            # req2 joins later still
+    assert [r.request_id for r in results] == [0, 1, 2]
+    for r, expect in zip(results, solo):
+        assert r.tokens == expect, (r.request_id, r.tokens, expect)
+
+
+def test_oversubscribed_queue_reuses_slots():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, max_len=64, capacity=2)
+    for i in range(5):               # 5 requests through 2 slots
+        eng.submit(Request(
+            prompt=rng.integers(4, cfg.vocab_size, size=8 + i).astype(np.int32),
+            max_new_tokens=4, sampling=SamplingSpec(seed=i)))
+    results = eng.drain()
+    assert [r.request_id for r in results] == [0, 1, 2, 3, 4]
+    assert all(len(r.tokens) == 4 and r.finish_reason == "length"
+               for r in results)
+
+
+def test_slot_stop_token_finishes_early():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    prompt = np.asarray(jax.random.randint(KEY, (16,), 4, cfg.vocab_size))
+    eng = Engine(cfg, params, max_len=64, capacity=1)
+    eng.submit(Request(prompt=prompt, max_new_tokens=8))
+    free_run = eng.drain()[0]
+    stop = free_run.tokens[2]
+    eng.submit(Request(prompt=prompt, max_new_tokens=8, stop_token=stop))
+    res = eng.drain()[0]
+    assert res.finish_reason == "stop"
+    assert res.tokens == free_run.tokens[:3]

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional extra — see requirements.txt
+    from _prop import given, settings, st
 
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import optimizers as Opt
@@ -150,7 +153,7 @@ def test_checkpoint_atomicity_no_partial_dirs():
 
 def test_sharding_rules_divisibility_fallback():
     from repro.dist import sharding as Sh
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = Sh.abstract_mesh((16, 16), ("data", "model"))
     # vocab divisible -> model
     s = Sh.spec_for((64000, 4096), ("vocab", "embed"), mesh)
     assert s[0] == "model" and s[1] == "data"
@@ -169,7 +172,7 @@ def test_sharding_rules_divisibility_fallback():
 
 def test_sharding_multi_axis_batch():
     from repro.dist import sharding as Sh
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = Sh.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     s = Sh.spec_for((256, 4096), ("batch", None), mesh)
     assert s[0] == ("pod", "data")
     # batch=1 -> nothing
@@ -179,7 +182,7 @@ def test_sharding_multi_axis_batch():
 
 def test_no_mesh_axis_used_twice():
     from repro.dist import sharding as Sh
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = Sh.abstract_mesh((16, 16), ("data", "model"))
     s = Sh.spec_for((16, 4096, 8192), ("experts", "embed", "mlp"), mesh)
     flat = [a for part in s if part for a in
             (part if isinstance(part, tuple) else (part,))]

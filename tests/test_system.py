@@ -154,8 +154,12 @@ def run(g_pods, e):
     def inner(gp, ep):
         out, err = C._sync_one(gp[0], ep[0], "pod")
         return out[None], err[None]
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P("pod"), P("pod")))
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:               # jax < 0.5: experimental namespace
+        from jax.experimental.shard_map import shard_map
+    fn = shard_map(inner, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                   out_specs=(P("pod"), P("pod")))
     return fn(g_pods, e)
 e = jnp.zeros_like(g_pods)
 out, e = run(g_pods, e)
