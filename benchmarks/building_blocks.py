@@ -18,14 +18,15 @@ absolute BERT-scale numbers.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row
-from repro.core.attention import AttentionSpec
+from benchmarks.common import row, time_call
+from repro.core.attention import AttentionSpec, attention
 from repro.launch import steps as S
 from repro.models import model as M
 
@@ -136,8 +137,52 @@ def head_reach(spec, hops=3):
     return float(R[far, 1].mean())
 
 
+FB_SEQ = 1024
+
+
+def fwd_bwd_bench():
+    """Trainability column: fwd and fwd+bwd wall-clock, blockified vs fused.
+
+    The fused path runs its custom_vjp backward Pallas kernels (dQ + dK/dV);
+    on CPU they execute in interpret mode, so the CPU numbers measure
+    correctness-path overhead — the TPU win comes from never materializing
+    the packed K''/V'' tensors (fwd) nor their gradients (bwd).
+    """
+    B, H, d = 1, 4, 32
+    spec = AttentionSpec(kind="bigbird", causal=True, block_size=64,
+                         num_window_blocks=3, num_global_blocks=2,
+                         num_random_blocks=3)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    cot = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    times = {}
+    for impl in ("blockified", "pallas"):
+        sp = dataclasses.replace(spec, impl=impl)
+        fwd = jax.jit(lambda q, k, v, sp=sp: attention(q, k, v, sp))
+        fb = jax.jit(jax.value_and_grad(
+            lambda q, k, v, sp=sp: jnp.sum(attention(q, k, v, sp) * cot),
+            argnums=(0, 1, 2)))
+        us_f, _ = time_call(fwd, q, k, v)
+        us_fb, (_, grads) = time_call(fb, q, k, v)
+        assert all(bool(jnp.isfinite(g).all()) for g in grads)
+        times[impl] = (us_f, us_fb)
+        label = "fused" if impl == "pallas" else impl
+        row(f"tab1_fwd_{label}", us_f, f"S={FB_SEQ};bwd=no")
+        row(f"tab1_fwdbwd_{label}", us_fb, f"S={FB_SEQ};bwd=custom_vjp"
+            if impl == "pallas" else f"S={FB_SEQ};bwd=xla_autodiff")
+    row("tab1_fwdbwd_blockified_vs_fused", 0.0,
+        f"S={FB_SEQ};blockified_us={times['blockified'][1]:.0f};"
+        f"fused_us={times['pallas'][1]:.0f};"
+        f"ratio={times['blockified'][1] / max(times['pallas'][1], 1e-9):.3f}")
+    return times
+
+
 def main():
     results = {}
+    # trainability: fwd+bwd wall-clock comparison (blockified vs fused kernel)
+    fwd_bwd_bench()
     # exact mechanism: k-hop reach to the head, per pattern
     for name, spec in VARIANTS.items():
         r2, r3 = head_reach(spec, 2), head_reach(spec, 3)

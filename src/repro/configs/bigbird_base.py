@@ -13,9 +13,12 @@ from repro.models.model import LayerSpec, ModelConfig
 
 notes = "paper Tab. 8 (BIGBIRD-ITC-base); MLM objective"
 
+# impl="pallas": the fused kernel is the end-to-end training path (it has a
+# custom_vjp backward — see kernels/ops.py); "blockified" remains the
+# paper-faithful XLA baseline used by parity tests and ablations.
 ITC = AttentionSpec(kind="bigbird", causal=False, block_size=64,
                     num_window_blocks=3, num_global_blocks=2,
-                    num_random_blocks=3, impl="blockified")
+                    num_random_blocks=3, impl="pallas")
 
 CONFIG = ModelConfig(
     name="bigbird-base",

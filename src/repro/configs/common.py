@@ -19,11 +19,12 @@ from repro.models.model import LayerSpec, ModelConfig
 
 FULL_CAUSAL = AttentionSpec(kind="full", causal=True)
 
-# the paper's base sparse pattern (Tab. 8: block 64, g=2b, w=3b, r=3b)
+# the paper's base sparse pattern (Tab. 8: block 64, g=2b, w=3b, r=3b);
+# impl="pallas" — the fused kernel trains end-to-end via its custom_vjp
 BIGBIRD_CAUSAL = AttentionSpec(
     kind="bigbird", causal=True, block_size=64,
     num_window_blocks=3, num_global_blocks=2, num_random_blocks=3,
-    impl="blockified")
+    impl="pallas")
 
 BIGBIRD_ENCODER = dataclasses.replace(BIGBIRD_CAUSAL, causal=False)
 
@@ -53,6 +54,27 @@ def bigbird_variant(cfg: ModelConfig) -> ModelConfig:
     new = dataclasses.replace(cfg, layer_pattern=pattern)
     if cfg.attn.kind == "full":
         new = dataclasses.replace(new, attn=swap(cfg.attn))
+    return new
+
+
+def with_attn_impl(cfg: ModelConfig, impl: str) -> ModelConfig:
+    """Rewrite every sparse AttentionSpec (bigbird/window) to use ``impl``.
+
+    Used by the trainer's --impl flag: "pallas" (fused kernels, the default
+    production path), "blockified" (paper-faithful XLA), "reference" (dense
+    oracle, tiny shapes only).  Full-attention specs are left untouched.
+    """
+    def swap(spec):
+        if spec is not None and spec.kind in ("bigbird", "window"):
+            return dataclasses.replace(spec, impl=impl)
+        return spec
+
+    pattern = tuple(
+        dataclasses.replace(ls, attn=swap(ls.attn)) if ls.kind == "attn" else ls
+        for ls in cfg.layer_pattern)
+    new = dataclasses.replace(cfg, layer_pattern=pattern, attn=swap(cfg.attn))
+    if getattr(cfg, "enc_attn", None) is not None:
+        new = dataclasses.replace(new, enc_attn=swap(cfg.enc_attn))
     return new
 
 

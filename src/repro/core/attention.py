@@ -6,9 +6,14 @@ Every attention-bearing layer in the model zoo calls `attention(...)` with an
 and the implementation path:
 
   impl = "reference"   O(n^2) dense-mask oracle      (tests, tiny shapes)
-         "blockified"  paper-faithful App-D XLA path (dry-run baseline)
-         "pallas"      fused Pallas kernel           (TPU production)
+         "blockified"  paper-faithful App-D XLA path (parity baseline)
+         "pallas"      fused Pallas kernels          (production: fwd AND bwd
+                       — custom_vjp flash-style backward, trains end-to-end;
+                       see kernels/ops.py + DESIGN.md §Kernel autodiff)
          "chunked"     double-chunked XLA flash      (full attention only)
+
+All impls are differentiable and must agree on gradients (tier-1:
+tests/test_grads.py sweeps jax.grad parity across impls).
 
 Sliding-window attention (SWA archs) is expressed as the BigBird *window
 component alone* (r=0, g=0) at block granularity — the paper's own framing of

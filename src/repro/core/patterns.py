@@ -29,6 +29,7 @@ __all__ = [
     "BlockPattern",
     "build_pattern",
     "dense_mask",
+    "transposed_pattern",
 ]
 
 
@@ -170,6 +171,44 @@ def build_pattern(cfg: BigBirdConfig, seq_len: int,
             key_mask[jj, g + w:g + w + take] = True
     return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
                         key_blocks=key_blocks, key_mask=key_mask)
+
+
+@functools.lru_cache(maxsize=256)
+def transposed_pattern(cfg: BigBirdConfig, seq_len: int,
+                       layer: int = 0, head: int = 0):
+    """Transposed slot map for the backward pass: queries *per key block*.
+
+    Only the window/random slots (t >= g) of non-global query rows (j >= g)
+    are transposed: the global slots (key blocks < g, referenced by every
+    query row) have dense in-degree nb and get their own reduction kernel,
+    and the global *query* rows (j < g) are recomputed densely — their
+    sparse-kernel gradient is identically zero, so their edges would only
+    pad the map.  Keeping both out bounds the padded width U by the max
+    window+random in-degree: exactly O(w + r) for non-causal patterns;
+    causal random picks concentrate on low-index key blocks, so U grows
+    ~ w + r·log(nb) there (dead cells are masked, total padded work
+    O(S log S) worst-case — still far below the O(S^2) of a dense map).
+
+    Returns ``(tq, tmask)``:
+      tq    (nb, U) int32 — query block indices attending key block i,
+      tmask (nb, U) bool  — False on padding entries.
+    U is the max in-degree over key blocks (>= 1 so kernel shapes are valid).
+    """
+    pat = build_pattern(cfg, seq_len, layer=layer, head=head)
+    g = cfg.num_global_blocks
+    nb = pat.num_blocks
+    rows: list = [[] for _ in range(nb)]
+    for j in range(g, nb):
+        for t in range(g, pat.slots):
+            if pat.key_mask[j, t]:
+                rows[int(pat.key_blocks[j, t])].append(j)
+    U = max(1, max((len(r) for r in rows), default=0))
+    tq = np.zeros((nb, U), dtype=np.int32)
+    tmask = np.zeros((nb, U), dtype=bool)
+    for i, r in enumerate(rows):
+        tq[i, :len(r)] = r
+        tmask[i, :len(r)] = True
+    return tq, tmask
 
 
 def dense_mask(pat: BlockPattern) -> np.ndarray:

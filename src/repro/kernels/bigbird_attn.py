@@ -1,17 +1,33 @@
-"""Fused BigBird block-sparse attention — Pallas TPU kernel.
+"""Fused BigBird block-sparse attention — Pallas TPU kernels (fwd + bwd).
 
 Beyond-paper optimization (the paper materializes the packed key tensor K''
-in HBM, App. D Fig. 6): this kernel fuses the packing, QK^T, softmax and AV
+in HBM, App. D Fig. 6): these kernels fuse the packing, QK^T, softmax and AV
 into one pass.  The packed tensor never exists — key/value blocks are pulled
 HBM->VMEM directly via scalar-prefetched index maps, and a flash-attention
 style streaming softmax keeps only (b, d) accumulators in VMEM.
 
-Grid: (B*Hq, nb, L) — one query block per (bh, j), iterating its L = g+w+r
-key-block slots in the innermost (sequential on TPU) dimension.
+Forward grid: (B*Hq, nb, L) — one query block per (bh, j), iterating its
+L = g+w+r key-block slots in the innermost (sequential on TPU) dimension.
+The forward also emits the per-row logsumexp so the backward can recompute
+probabilities flash-style (nothing quadratic is ever materialized).
+
+Backward (see ops.bigbird_attention_fused for the custom_vjp wiring):
+  * dQ    — same (bh, j, t) grid and slot maps as the forward; per slot it
+            recomputes p = exp(s - lse) and accumulates ds @ k.
+  * dK/dV — the slot map is *transposed* host-side (patterns.transposed_
+            pattern): grid (bh, i, u) iterates, for key block i, the u-th
+            query block that attends it.  Only window/random slots live in
+            the transposed map, bounding its padded width by the max
+            in-degree (O(w + r) non-causal, ~ w + r·log(nb) causal).
+  * dK/dV global columns — key blocks < g are referenced by *every* query
+            row; a dedicated (bh, i, j) grid reduces over all nb query
+            blocks (linear work: g * nb cells).
 
 Scalar-prefetch operands (compile-time-shaped, data-dependent indexing):
   idx  (nb, L) int32 — key block index per slot (from core.patterns).
   msk  (nb, L) int32 — 1 if the slot is live, 0 if duplicate/out-of-range.
+  tq   (nb, U) int32 — transposed map: query blocks per key block.
+  tmsk (nb, U) int32 — transposed-map validity.
 
 VMEM working set per grid cell: q (b,d) + k (b,d) + v (b,d) + acc (b,d)
 + scores (b,b) + m,l (b,1)  ≈ 4*b*d + b*b floats; with b=64, d=128 that is
@@ -19,7 +35,8 @@ VMEM working set per grid cell: q (b,d) + k (b,d) + v (b,d) + acc (b,d)
 compiler to double-buffer the k/v streams across slots.
 
 Global *query* rows (blocks 0..g-1) attend to everything; they are recomputed
-densely by the wrapper in `repro.kernels.ops` (paper does the same).
+densely by the wrapper in `repro.kernels.ops` (paper does the same), in both
+the forward and the backward.
 """
 from __future__ import annotations
 
@@ -32,11 +49,34 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+LSE_EMPTY = 1e30      # lse sentinel for rows with no live key: exp(s-lse)=0
 
 
-def _kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, scale: float, diag_slot: int,
-            num_slots: int, block_size: int):
+def _tri(block_size: int):
+    """(b, b) lower-triangular mask: query row >= key col (self block)."""
+    b = block_size
+    row = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    return row >= col
+
+
+def _slot_mask(msk_ref, s_shape, j, t, diag_slot: int, block_size: int):
+    """Validity mask for slot t of query block j (shared by fwd and dQ)."""
+    live = msk_ref[j, t] > 0                             # slot-level validity
+    mask = jnp.full(s_shape, live)
+    if diag_slot >= 0:
+        # causal patterns: the offset-0 window slot needs a triangular mask
+        mask = jnp.where(t == diag_slot, mask & _tri(block_size), mask)
+    return mask
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_ref, l_ref, acc_ref, *, scale: float, diag_slot: int,
+                num_slots: int, block_size: int):
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -53,15 +93,7 @@ def _kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref,
                             preferred_element_type=jnp.float32) * scale
 
     j = pl.program_id(1)
-    live = msk_ref[j, t] > 0                             # slot-level validity
-    mask = jnp.full(s.shape, live)
-    if diag_slot >= 0:
-        # causal patterns: the offset-0 window slot needs a triangular mask
-        b = block_size
-        row = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
-        col = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
-        tri = row >= col
-        mask = jnp.where(t == diag_slot, mask & tri, mask)
+    mask = _slot_mask(msk_ref, s.shape, j, t, diag_slot, block_size)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
@@ -77,19 +109,23 @@ def _kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(t == num_slots - 1)
     def _finish():
-        denom = jnp.maximum(l_ref[...], 1e-30)
+        l = l_ref[...]
+        denom = jnp.maximum(l, 1e-30)
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        lse = jnp.where(l > 0, m_ref[...] + jnp.log(denom), LSE_EMPTY)
+        lse_ref[0] = lse[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "block_size", "grp", "diag_slot", "interpret"))
-def bigbird_attn_pallas(q, k, v, idx, msk, *, block_size: int, grp: int,
-                        diag_slot: int = -1, interpret: bool = False):
+def bigbird_attn_fwd(q, k, v, idx, msk, *, block_size: int, grp: int,
+                     diag_slot: int = -1, interpret: bool = False):
     """q: (BHq, S, d); k, v: (BHkv, S, d); idx/msk: (nb, L) int32.
 
     ``grp`` = Hq // Hkv (GQA group); query row bh reads kv row bh // grp.
-    Returns (BHq, S, d).  Rows of global query blocks are garbage here and
-    must be overwritten by the caller (see ops.bigbird_attention).
+    Returns (out (BHq, S, d), lse (BHq, S) float32).  Rows of global query
+    blocks are garbage here and must be overwritten by the caller (see
+    ops.bigbird_attention_fused).
     """
     BH, S, d = q.shape
     b = block_size
@@ -98,7 +134,7 @@ def bigbird_attn_pallas(q, k, v, idx, msk, *, block_size: int, grp: int,
     scale = 1.0 / np.sqrt(d)
 
     grid = (BH, nb, L)
-    kernel = functools.partial(_kernel, scale=scale, diag_slot=diag_slot,
+    kernel = functools.partial(_fwd_kernel, scale=scale, diag_slot=diag_slot,
                                num_slots=L, block_size=b)
     return pl.pallas_call(
         kernel,
@@ -112,13 +148,273 @@ def bigbird_attn_pallas(q, k, v, idx, msk, *, block_size: int, grp: int,
                 pl.BlockSpec((1, b, d),
                              lambda bh, j, t, idx, msk: (bh // grp, idx[j, t], 0)),
             ],
-            out_specs=pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+            out_specs=[
+                pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+                pl.BlockSpec((1, b), lambda bh, j, t, idx, msk: (bh, j)),
+            ],
             scratch_shapes=[
                 pltpu.VMEM((b, 1), jnp.float32),
                 pltpu.VMEM((b, 1), jnp.float32),
                 pltpu.VMEM((b, d), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
         interpret=interpret,
     )(idx, msk, q, k, v)
+
+
+# --------------------------------------------------------------------------
+# backward: dQ — same grid and slot maps as the forward
+# --------------------------------------------------------------------------
+
+def _dq_kernel(idx_ref, msk_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+               delta_ref, dq_ref, acc_ref, *, scale: float, diag_slot: int,
+               num_slots: int, block_size: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (b, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]                            # (b, 1)
+    delta = delta_ref[0][:, None]                        # (b, 1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    j = pl.program_id(1)
+    mask = _slot_mask(msk_ref, s.shape, j, t, diag_slot, block_size)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)           # (b, b) normalized
+    dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds = p * (dov - delta)
+    acc_ref[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(t == num_slots - 1)
+    def _finish():
+        dq_ref[0] = acc_ref[...] * scale
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "grp", "diag_slot", "interpret"))
+def bigbird_attn_dq(q, k, v, do, lse, delta, idx, msk, *, block_size: int,
+                    grp: int, diag_slot: int = -1, interpret: bool = False):
+    """dQ for the sparse rows.  Returns (BHq, S, d) float32.
+
+    ``do`` must have the global query rows zeroed (their gradient flows
+    through the dense recompute, not this kernel); ``delta = sum(do*out, -1)``.
+    """
+    BH, S, d = q.shape
+    b = block_size
+    nb = S // b
+    L = idx.shape[1]
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_dq_kernel, scale=scale, diag_slot=diag_slot,
+                               num_slots=L, block_size=b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(BH, nb, L),
+            in_specs=[
+                pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+                pl.BlockSpec((1, b, d),
+                             lambda bh, j, t, idx, msk: (bh // grp, idx[j, t], 0)),
+                pl.BlockSpec((1, b, d),
+                             lambda bh, j, t, idx, msk: (bh // grp, idx[j, t], 0)),
+                pl.BlockSpec((1, b, d), lambda bh, j, t, idx, msk: (bh, j, 0)),
+                pl.BlockSpec((1, b), lambda bh, j, t, idx, msk: (bh, j)),
+                pl.BlockSpec((1, b), lambda bh, j, t, idx, msk: (bh, j)),
+            ],
+            out_specs=pl.BlockSpec((1, b, d),
+                                   lambda bh, j, t, idx, msk: (bh, j, 0)),
+            scratch_shapes=[pltpu.VMEM((b, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+        interpret=interpret,
+    )(idx, msk, q, k, v, do, lse, delta)
+
+
+# --------------------------------------------------------------------------
+# backward: dK/dV over window+random slots — transposed slot map
+# --------------------------------------------------------------------------
+
+def _dkv_kernel(tq_ref, tmsk_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                delta_ref, dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                causal: bool, num_rev: int, block_size: int):
+    u = pl.program_id(2)
+
+    @pl.when(u == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    i = pl.program_id(1)                                 # key block
+    j = tq_ref[i, u]                                     # query block
+    live = tmsk_ref[i, u] > 0
+
+    q = q_ref[0].astype(jnp.float32)                     # (b, d) query block j
+    k = k_ref[0].astype(jnp.float32)                     # (b, d) key block i
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = jnp.full(s.shape, live)
+    if causal:
+        # the only self-referencing slot is the offset-0 window slot (j == i)
+        mask = jnp.where(j == i, mask & _tri(block_size), mask)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)           # (b_q, b_k)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds = p * (dov - delta)
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(u == num_rev - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...] * scale
+        dv_ref[0] = dv_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "grp", "causal", "interpret"))
+def bigbird_attn_dkv(q, k, v, do, lse, delta, tq, tmsk, *, block_size: int,
+                     grp: int, causal: bool, interpret: bool = False):
+    """dK/dV contributions of the window+random slots, per *query* head.
+
+    Grid (BHq, nb, U): key block i accumulates over the U query blocks that
+    attend it (transposed map).  Returns (dk, dv), each (BHq, S, d) float32;
+    the caller sums heads over the GQA group down to BHkv.
+    """
+    BH, S, d = q.shape
+    b = block_size
+    nb = S // b
+    U = tq.shape[1]
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                               num_rev=U, block_size=b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(BH, nb, U),
+            in_specs=[
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh, tq[i, u], 0)),
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh // grp, i, 0)),
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh // grp, i, 0)),
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh, tq[i, u], 0)),
+                pl.BlockSpec((1, b), lambda bh, i, u, tq, tm: (bh, tq[i, u])),
+                pl.BlockSpec((1, b), lambda bh, i, u, tq, tm: (bh, tq[i, u])),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh, i, 0)),
+                pl.BlockSpec((1, b, d), lambda bh, i, u, tq, tm: (bh, i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((b, d), jnp.float32),
+                pltpu.VMEM((b, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tq, tmsk, q, k, v, do, lse, delta)
+
+
+# --------------------------------------------------------------------------
+# backward: dK/dV over the global key columns (blocks < g)
+# --------------------------------------------------------------------------
+
+def _dkv_global_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                       dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                       num_qblocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+
+    # global slots are live for every query row; rows whose gradient must not
+    # flow here (the dense-recomputed global query rows) arrive with do == 0.
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    p = jnp.exp(s - lse)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dov = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    ds = p * (dov - delta)
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_qblocks - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...] * scale
+        dv_ref[0] = dv_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "grp", "num_global_blocks", "interpret"))
+def bigbird_attn_dkv_global(q, k, v, do, lse, delta, *, block_size: int,
+                            grp: int, num_global_blocks: int,
+                            interpret: bool = False):
+    """dK/dV for the global key blocks (< g), reduced over ALL query blocks.
+
+    Grid (BHq, g, nb) — linear work.  Returns (dk_g, dv_g), each
+    (BHq, g*b, d) float32, per query head (caller sums the GQA group).
+    """
+    BH, S, d = q.shape
+    b = block_size
+    nb = S // b
+    g = num_global_blocks
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(_dkv_global_kernel, scale=scale, num_qblocks=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, g, nb),
+        in_specs=[
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh // grp, i, 0)),
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh // grp, i, 0)),
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, b), lambda bh, i, j: (bh, j)),
+            pl.BlockSpec((1, b), lambda bh, i, j: (bh, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, b, d), lambda bh, i, j: (bh, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, d), jnp.float32),
+            pltpu.VMEM((b, d), jnp.float32),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, g * b, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, g * b, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

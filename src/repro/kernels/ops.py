@@ -3,8 +3,16 @@
 Each op here has a pure-jnp oracle in `repro.kernels.ref` and is swept over
 shapes/dtypes in tests/test_kernels.py.  ``interpret=None`` auto-selects
 interpret mode on CPU so the same call sites run on TPU and in this container.
+
+`bigbird_attention_fused` is fully trainable: a `jax.custom_vjp` pairs the
+forward kernel (which saves per-row logsumexp residuals) with flash-style
+backward Pallas kernels (dQ over the forward slot map, dK/dV over the
+transposed map + a dense reduction for the global key columns).  See
+DESIGN.md §Kernel autodiff contract.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +22,7 @@ from repro.core import patterns
 from repro.core.ref_attention import masked_softmax_attention
 from repro.kernels import bigbird_attn, wkv6
 
-__all__ = ["bigbird_attention_fused", "wkv6_scan"]
+__all__ = ["bigbird_attention_fused", "wkv6_scan", "mamba_scan"]
 
 
 def _auto_interpret(interpret):
@@ -23,11 +31,14 @@ def _auto_interpret(interpret):
     return interpret
 
 
-def _overwrite_global_rows(out, q, k, v, cfg, grp):
-    """Dense recompute of the global query rows (paper App. D)."""
+def _global_rows(q, k, v, cfg, grp):
+    """Dense attention of the global query rows (paper App. D).
+
+    Differentiable by construction: the backward pass takes jax.vjp of this
+    function (recompute policy — no quadratic residual is ever saved).
+    Returns (B, Hq, g*b, d).
+    """
     g, b = cfg.num_global_blocks, cfg.block_size
-    if not g:
-        return out
     S = q.shape[2]
     ng = g * b
     qg = q[:, :, :ng]
@@ -37,29 +48,125 @@ def _overwrite_global_rows(out, q, k, v, cfg, grp):
         m = jnp.ones((ng, S), dtype=bool)
     kf = jnp.repeat(k, grp, axis=1) if grp > 1 else k
     vf = jnp.repeat(v, grp, axis=1) if grp > 1 else v
-    og = masked_softmax_attention(qg, kf, vf, m, scale=1.0 / np.sqrt(q.shape[-1]))
+    return masked_softmax_attention(qg, kf, vf, m, scale=1.0 / np.sqrt(q.shape[-1]))
+
+
+def _overwrite_global_rows(out, q, k, v, cfg, grp):
+    """Dense recompute of the global query rows (paper App. D)."""
+    if not cfg.num_global_blocks:
+        return out
+    ng = cfg.num_global_blocks * cfg.block_size
+    og = _global_rows(q, k, v, cfg, grp)
     return out.at[:, :, :ng].set(og.astype(out.dtype))
 
 
-def bigbird_attention_fused(q, k, v, cfg: patterns.BigBirdConfig,
-                            layer: int = 0, interpret=None):
-    """Fused-kernel BigBird attention.  q (B,Hq,S,d); k,v (B,Hkv,S,d)."""
-    interpret = _auto_interpret(interpret)
+def _diag_slot(cfg):
+    return (cfg.num_global_blocks + cfg.num_window_blocks - 1
+            if cfg.causal else -1)
+
+
+def _fused_fwd(q, k, v, cfg, layer, interpret):
+    """Sparse kernel + dense global-row overwrite.  Returns (out, lse)."""
     B, Hq, S, d = q.shape
     Hkv = k.shape[1]
     grp = Hq // Hkv
     pat = patterns.build_pattern(cfg, S, layer=layer)
     idx = jnp.asarray(pat.key_blocks, jnp.int32)
     msk = jnp.asarray(pat.key_mask.astype(np.int32))
-    diag_slot = (cfg.num_global_blocks + cfg.num_window_blocks - 1
-                 if cfg.causal else -1)
-    out = bigbird_attn.bigbird_attn_pallas(
+    out, lse = bigbird_attn.bigbird_attn_fwd(
         q.reshape(B * Hq, S, d), k.reshape(B * Hkv, S, d),
         v.reshape(B * Hkv, S, d), idx, msk,
-        block_size=cfg.block_size, grp=grp, diag_slot=diag_slot,
+        block_size=cfg.block_size, grp=grp, diag_slot=_diag_slot(cfg),
         interpret=interpret)
     out = out.reshape(B, Hq, S, d)
-    return _overwrite_global_rows(out, q, k, v, cfg, grp)
+    out = _overwrite_global_rows(out, q, k, v, cfg, grp)
+    return out, lse.reshape(B, Hq, S)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _bigbird_fused(q, k, v, cfg, layer, interpret):
+    out, _ = _fused_fwd(q, k, v, cfg, layer, interpret)
+    return out
+
+
+def _bigbird_fused_fwd(q, k, v, cfg, layer, interpret):
+    out, lse = _fused_fwd(q, k, v, cfg, layer, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _bigbird_fused_bwd(cfg, layer, interpret, res, do):
+    q, k, v, out, lse = res
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    grp = Hq // Hkv
+    b = cfg.block_size
+    g = cfg.num_global_blocks
+    ng = g * b
+    pat = patterns.build_pattern(cfg, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks, jnp.int32)
+    msk = jnp.asarray(pat.key_mask.astype(np.int32))
+
+    # gradient of the dense-recomputed global query rows does NOT flow
+    # through the sparse kernel (their kernel output was overwritten)
+    do_s = do.at[:, :, :ng].set(0.0) if g else do
+    dof = do_s.astype(jnp.float32)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)      # (B,Hq,S)
+
+    q3 = q.reshape(B * Hq, S, d)
+    k3 = k.reshape(B * Hkv, S, d)
+    v3 = v.reshape(B * Hkv, S, d)
+    do3 = do_s.reshape(B * Hq, S, d)
+    lse3 = lse.reshape(B * Hq, S)
+    dl3 = delta.reshape(B * Hq, S)
+
+    dq = bigbird_attn.bigbird_attn_dq(
+        q3, k3, v3, do3, lse3, dl3, idx, msk, block_size=b, grp=grp,
+        diag_slot=_diag_slot(cfg), interpret=interpret)          # (BHq,S,d) f32
+
+    tq, tmsk = patterns.transposed_pattern(cfg, S, layer=layer)
+    if tmsk.any():
+        dk_h, dv_h = bigbird_attn.bigbird_attn_dkv(
+            q3, k3, v3, do3, lse3, dl3,
+            jnp.asarray(tq, jnp.int32), jnp.asarray(tmsk.astype(np.int32)),
+            block_size=b, grp=grp, causal=cfg.causal, interpret=interpret)
+    else:
+        dk_h = jnp.zeros((B * Hq, S, d), jnp.float32)
+        dv_h = jnp.zeros((B * Hq, S, d), jnp.float32)
+    if g:
+        dk_g, dv_g = bigbird_attn.bigbird_attn_dkv_global(
+            q3, k3, v3, do3, lse3, dl3, block_size=b, grp=grp,
+            num_global_blocks=g, interpret=interpret)
+        dk_h = dk_h.at[:, :ng].add(dk_g)
+        dv_h = dv_h.at[:, :ng].add(dv_g)
+
+    dq = dq.reshape(B, Hq, S, d)
+    dk = dk_h.reshape(B, Hkv, grp, S, d).sum(axis=2)             # GQA group sum
+    dv = dv_h.reshape(B, Hkv, grp, S, d).sum(axis=2)
+
+    if g:
+        # dense global-row recompute: its dK/dV span the whole sequence
+        og, gvjp = jax.vjp(lambda q_, k_, v_: _global_rows(q_, k_, v_, cfg, grp),
+                           q, k, v)
+        dq_g, dk_g2, dv_g2 = gvjp(do[:, :, :ng].astype(og.dtype))
+        dq = dq + dq_g.astype(jnp.float32)
+        dk = dk + dk_g2.astype(jnp.float32)
+        dv = dv + dv_g2.astype(jnp.float32)
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_bigbird_fused.defvjp(_bigbird_fused_fwd, _bigbird_fused_bwd)
+
+
+def bigbird_attention_fused(q, k, v, cfg: patterns.BigBirdConfig,
+                            layer: int = 0, interpret=None):
+    """Fused-kernel BigBird attention.  q (B,Hq,S,d); k,v (B,Hkv,S,d).
+
+    Trainable: jax.grad/value_and_grad flow through custom Pallas backward
+    kernels (flash-style recompute; nothing quadratic is materialized).
+    """
+    interpret = _auto_interpret(interpret)
+    return _bigbird_fused(q, k, v, cfg, layer, interpret)
 
 
 def wkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret=None):

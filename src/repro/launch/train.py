@@ -41,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--impl", default="pallas",
+                    choices=["pallas", "blockified", "reference"],
+                    help="sparse-attention implementation (pallas = fused "
+                         "kernels with custom_vjp backward, the default)")
     ap.add_argument("--mlm", action="store_true", default=None)
     ap.add_argument("--fail-at", type=int, default=None,
                     help="simulate a failure at this step (FT test)")
@@ -50,6 +54,8 @@ def main(argv=None):
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.seq:
         cfg = dataclasses.replace(cfg, max_seq=max(cfg.max_seq, args.seq))
+    from repro.configs.common import with_attn_impl
+    cfg = with_attn_impl(cfg, args.impl)
     mlm = args.mlm if args.mlm is not None else (args.arch == "bigbird-base")
 
     opt = S.make_optimizer(kind=configs.optimizer_for(args.arch),
@@ -76,7 +82,7 @@ def main(argv=None):
 
     nparams = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state["params"]))
     print(f"[train] arch={args.arch} params={nparams/1e6:.1f}M "
-          f"batch={args.batch} seq={args.seq} mlm={mlm}")
+          f"batch={args.batch} seq={args.seq} mlm={mlm} impl={args.impl}")
 
     pending = None
     t0 = time.time()

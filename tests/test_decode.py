@@ -63,6 +63,7 @@ def test_encdec_decode_consistency():
     assert float(jnp.max(jnp.abs(lg_dec - full[:, S_dec]))) < 2e-3
 
 
+@pytest.mark.slow
 def test_bigbird_bounded_decode_matches_pattern_attention():
     """Decode with the BigBird cache read must equal the teacher-forced
     forward of the BigBird-causal model (the same graph)."""

@@ -127,6 +127,119 @@ def test_random_blocks_vary_with_seed(seed1, seed2):
     assert (p1.key_blocks[:, g + w:] != p2.key_blocks[:, g + w:]).any()
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    nb1=st.integers(8, 16),
+    grow=st.integers(1, 24),
+    w=st.sampled_from([1, 3, 5]),
+    g=st.integers(0, 2),
+    r=st.integers(0, 3),
+    seed=st.integers(0, 5),
+)
+def test_causal_pattern_rows_prefix_stable(nb1, grow, w, g, r, seed):
+    """Causal pattern rows must not change as S grows (prefix stability):
+    this is what makes prefill and bounded decode attend the same graph."""
+    b = 16
+    if g + w + r > nb1:
+        return
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=w,
+                                 num_global_blocks=g, num_random_blocks=r,
+                                 causal=True, seed=seed)
+    p1 = patterns.build_pattern(cfg, nb1 * b)
+    p2 = patterns.build_pattern(cfg, (nb1 + grow) * b)
+    assert (p1.key_blocks == p2.key_blocks[:nb1]).all()
+    assert (p1.key_mask == p2.key_mask[:nb1]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(8, 32),
+    w=st.sampled_from([1, 3, 5]),
+    g=st.integers(0, 2),
+    r=st.integers(0, 3),
+    causal=st.booleans(),
+    seed=st.integers(0, 5),
+)
+def test_key_mask_exactly_marks_dead_slots(nb, w, g, r, causal, seed):
+    """key_mask must be *exact*: a slot is dead iff it is out-of-range
+    (causal past-the-start window), a duplicate of a global slot, or an
+    unfillable random slot — and every live index is in range."""
+    b = 8
+    if g + w + r > nb or (not causal and w % 2 == 0):
+        return
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=w,
+                                 num_global_blocks=g, num_random_blocks=r,
+                                 causal=causal, seed=seed)
+    pat = patterns.build_pattern(cfg, nb * b)
+    offs = patterns._window_offsets(cfg)
+    for j in range(nb):
+        live = pat.key_blocks[j][pat.key_mask[j]]
+        # every live slot index is in range (causal: in the past for j >= g)
+        assert (live >= 0).all() and (live < nb).all()
+        if causal and j >= g:
+            assert (live <= j).all()
+        # global slots: always live, indices 0..g-1
+        assert pat.key_mask[j, :g].all()
+        assert (pat.key_blocks[j, :g] == np.arange(g)).all()
+        # window slots: dead iff out-of-range (causal) or global-duplicate
+        for t in range(w):
+            tgt = j + int(offs[t])
+            wrapped = max(tgt, 0) if causal else tgt % nb
+            expect = (tgt >= 0 if causal else True) and wrapped >= g
+            assert bool(pat.key_mask[j, g + t]) == expect, (j, t)
+            if expect:
+                assert pat.key_blocks[j, g + t] == (
+                    min(wrapped, nb - 1) if causal else wrapped)
+        # random slots: exactly min(r, #free candidates) are live, and each
+        # live one is a fresh (non-duplicate) in-range candidate
+        hi = j if causal else nb
+        win_idx = {int(np.clip(j + o, 0, nb - 1)) if causal else
+                   int((j + o) % nb) for o in offs}
+        forbidden = set(range(g)) | win_idx | {j}
+        n_free = len([c for c in range(g, hi) if c not in forbidden])
+        rand_live = pat.key_mask[j, g + w:]
+        assert rand_live.sum() == min(r, n_free), (j, rand_live)
+        picks = pat.key_blocks[j, g + w:][rand_live]
+        assert len(set(picks.tolist())) == len(picks)
+        for c in picks:
+            assert g <= c < hi and int(c) not in forbidden
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nb=st.integers(8, 24),
+    w=st.sampled_from([1, 3]),
+    g=st.integers(0, 2),
+    r=st.integers(0, 2),
+    causal=st.booleans(),
+)
+def test_transposed_pattern_is_exact_inverse(nb, w, g, r, causal):
+    """The backward-pass transposed map must contain exactly the live
+    non-global slots of the non-global query rows (per key block, padded
+    with mask) — global query rows' sparse gradients are identically zero
+    (dense recompute), so their edges are excluded."""
+    b = 8
+    if g + w + r > nb or (not causal and w % 2 == 0):
+        return
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=w,
+                                 num_global_blocks=g, num_random_blocks=r,
+                                 causal=causal)
+    pat = patterns.build_pattern(cfg, nb * b)
+    tq, tmask = patterns.transposed_pattern(cfg, nb * b)
+    assert tq.shape == tmask.shape and tq.shape[0] == nb
+    # forward multiset of (key block -> query block) edges: non-global
+    # slots of non-global query rows
+    fwd = {}
+    for j in range(g, nb):
+        for t in range(g, pat.slots):
+            if pat.key_mask[j, t]:
+                fwd.setdefault(int(pat.key_blocks[j, t]), []).append(j)
+    for i in range(nb):
+        got = sorted(tq[i][tmask[i]].tolist())
+        assert got == sorted(fwd.get(i, [])), i
+    assert (tq[~tmask] == 0).all()           # padding entries are masked
+
+
 def test_linear_edge_count():
     """The headline claim: edges grow linearly in n (not quadratically)."""
     counts = []

@@ -4,6 +4,7 @@ bit-identical streams under staggered admission."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.attention import AttentionSpec
 from repro.models import decode as D
@@ -177,6 +178,7 @@ def test_generate_stop_token():
 # continuous batching
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_staggered_requests_bit_identical_to_solo():
     """Requests admitted mid-flight (heterogeneous prompt lengths and
     positions) must produce exactly the tokens a solo run produces."""

@@ -17,6 +17,10 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as S
 from repro.models import model as M
 
+# system tier: multi-step training runs + subprocess mesh tests — excluded
+# from the CI fast tier (-m "not slow"), run in the main-branch full tier
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
