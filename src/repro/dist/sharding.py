@@ -32,6 +32,11 @@ _PREFS = {
     "kv_heads": ("model",),
     "experts": ("model",),
     "mlp": ("model",),
+    # paged-KV physical page dim: REPLICATE.  Page ids are host-assigned
+    # request metadata — splitting them over a mesh axis would turn every
+    # page-table lookup into a cross-shard gather; kv_heads/embed keep
+    # carrying the model parallelism of the paged leaves instead.
+    "pages": (),
     # never sharded: layers (scan dim), conv, state, head_dim
 }
 

@@ -418,3 +418,114 @@ def bigbird_attn_dkv_global(q, k, v, do, lse, delta, *, block_size: int,
         ],
         interpret=interpret,
     )(q, k, v, do, lse, delta)
+
+
+# --------------------------------------------------------------------------
+# paged bounded decode (forward-only, serving path)
+# --------------------------------------------------------------------------
+
+def _paged_decode_kernel(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
+                         v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                         block_size: int, grp: int, num_slots: int):
+    i = pl.program_id(0)                                 # slot (batch row)
+    t = pl.program_id(1)                                 # pattern slot
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = block_size
+    pos = pos_ref[i]
+    jq = pos // b                                        # query's logical block
+    blk = idx_ref[jq, t]                                 # logical key block
+    live = msk_ref[jq, t] > 0
+    # logical key positions inside this page; strict bound <= pos
+    kpos = blk * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    valid = live & (kpos <= pos)                         # (1, b)
+
+    q = q_ref[0].astype(jnp.float32)                     # (Hq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (Hkv, b, d)
+    v = v_ref[0].astype(jnp.float32)
+    hq, d = q.shape
+    hkv = k.shape[0]
+    qg = q.reshape(hkv, grp, d)
+    s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    s = s.reshape(hq, b)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)            # (Hq, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pg = p.reshape(hkv, grp, b)
+    pv = jax.lax.dot_general(pg, v, (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(hq, d)
+
+    @pl.when(t == num_slots - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "grp", "interpret"))
+def bigbird_paged_decode(q, kc, vc, page_tables, pos, idx, msk, *,
+                         block_size: int, grp: int, interpret: bool = False):
+    """Paged bounded-decode attention (forward-only, serving hot path).
+
+    q (B, Hq, d) — one new token per slot; kc/vc (P, Hkv, b, d) — the flat
+    physical page store; page_tables (B, max_pages) int32; pos (B,) int32;
+    idx/msk (nb, L) int32 — the pattern slot maps at the LOGICAL cache
+    length nb = max_pages.
+
+    Grid (B, L): cell (i, t) resolves pattern slot t of slot i's current
+    query block through two scalar-prefetched levels — pattern block
+    `idx[pos[i]//b, t]`, then physical page `pt[i, ...]` — and streams the
+    page through a flash-style softmax.  The packed key tensor never
+    exists, and (unlike the slot-contiguous XLA gather) no (B, L*b) HBM
+    re-materialization happens either: pages go HBM->VMEM once.
+    `grp` = Hq // Hkv (GQA): query head h reads kv head h // grp."""
+    B, Hq, d = q.shape
+    b = block_size
+    L = idx.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    Hkv = kc.shape[1]
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block_size=b, grp=grp, num_slots=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(B, L),
+            in_specs=[
+                pl.BlockSpec((1, Hq, d),
+                             lambda i, t, pt, pos, idx, msk: (i, 0, 0)),
+                pl.BlockSpec(
+                    (1, Hkv, b, d),
+                    lambda i, t, pt, pos, idx, msk:
+                        (pt[i, idx[pos[i] // b, t]], 0, 0, 0)),
+                pl.BlockSpec(
+                    (1, Hkv, b, d),
+                    lambda i, t, pt, pos, idx, msk:
+                        (pt[i, idx[pos[i] // b, t]], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, Hq, d),
+                                   lambda i, t, pt, pos, idx, msk: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hq, 1), jnp.float32),
+                pltpu.VMEM((Hq, 1), jnp.float32),
+                pltpu.VMEM((Hq, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, d), q.dtype),
+        interpret=interpret,
+    )(page_tables, pos, idx, msk, q, kc, vc)

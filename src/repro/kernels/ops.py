@@ -22,7 +22,8 @@ from repro.core import patterns
 from repro.core.ref_attention import masked_softmax_attention
 from repro.kernels import bigbird_attn, wkv6
 
-__all__ = ["bigbird_attention_fused", "wkv6_scan", "mamba_scan"]
+__all__ = ["bigbird_attention_fused", "bigbird_paged_decode_attn",
+           "wkv6_scan", "mamba_scan"]
 
 
 def _auto_interpret(interpret):
@@ -167,6 +168,32 @@ def bigbird_attention_fused(q, k, v, cfg: patterns.BigBirdConfig,
     """
     interpret = _auto_interpret(interpret)
     return _bigbird_fused(q, k, v, cfg, layer, interpret)
+
+
+def bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
+                              cfg: patterns.BigBirdConfig, layer: int = 0,
+                              interpret=None):
+    """Paged bounded-decode read via the scalar-prefetched Pallas kernel.
+
+    q (B, Hq, 1, dh); kc/vc (P, Hkv, b, dh) — flat physical page stores;
+    page_tables (B, max_pages) int32; pos (B,) int32.  Forward-only (the
+    serving decode path never differentiates; DESIGN.md §Paged cache).
+    The XLA two-level gather in models/decode._bigbird_decode_attn_paged
+    is the parity baseline (tests/test_kernels.py)."""
+    interpret = _auto_interpret(interpret)
+    B, Hq, _, dh = q.shape
+    Hkv = kc.shape[1]
+    grp = Hq // Hkv
+    b = cfg.block_size
+    S = page_tables.shape[1] * b
+    pat = patterns.build_pattern(cfg, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks, jnp.int32)
+    msk = jnp.asarray(pat.key_mask.astype(np.int32))
+    out = bigbird_attn.bigbird_paged_decode(
+        q[:, :, 0], kc, vc, jnp.asarray(page_tables, jnp.int32),
+        jnp.asarray(pos, jnp.int32), idx, msk,
+        block_size=b, grp=grp, interpret=interpret)
+    return out[:, :, None].astype(q.dtype)
 
 
 def wkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret=None):

@@ -11,6 +11,15 @@ dry-run cells.  Attention layers support two cache-read modes:
 
 SSM/RWKV layers carry O(1) recurrent state — decode cost independent of
 context length, which is why rwkv6/jamba run long_500k natively.
+
+Paged KV layout (DESIGN.md §Paged cache): when `cache_spec` is built with
+`num_pages=`, every attention K/V leaf becomes ONE flat physical store
+`(num_pages, Hkv, page_size, dh)` shared by all requests — page size equals
+the BigBird pattern block size `b`, so one pattern block is one page and the
+bounded-decode gather becomes a two-level lookup: pattern block -> page
+table -> physical page.  `decode_step(..., page_tables=)` and
+`prefill_chunk` are the paged entry points; recurrent-state leaves keep
+their per-slot `(B, ...)` layout (they are O(1) per slot already).
 """
 from __future__ import annotations
 
@@ -30,10 +39,27 @@ F32 = jnp.float32
 # cache construction
 # --------------------------------------------------------------------------
 
+def page_size_for(cfg: M.ModelConfig) -> int:
+    """Page size of the paged KV layout: the attention pattern block size.
+
+    All attention layers of a config must agree on block_size (one physical
+    page granularity per pool); configs with no attention layers have no
+    paged leaves and the value is only a placeholder."""
+    sizes = {cfg.attn_spec(ls).block_size
+             for ls in cfg.layer_pattern if ls.kind == "attn"}
+    assert len(sizes) <= 1, f"mixed attention block sizes {sizes} cannot page"
+    return sizes.pop() if sizes else 64
+
+
 def _layer_cache_shapes(cfg: M.ModelConfig, ls: M.LayerSpec, B, max_len,
-                        enc_len=0):
+                        enc_len=0, num_pages=None):
     d, dh, hkv = cfg.d_model, cfg.hd, cfg.num_kv_heads
     if ls.kind == "attn":
+        if num_pages is not None:
+            assert cfg.kind != "encdec", "paged cache is decoder-only"
+            b = page_size_for(cfg)
+            return {"k": ((num_pages, hkv, b, dh), cfg.dtype),
+                    "v": ((num_pages, hkv, b, dh), cfg.dtype)}
         c = {"k": ((B, hkv, max_len, dh), cfg.dtype),
              "v": ((B, hkv, max_len, dh), cfg.dtype)}
         if cfg.kind == "encdec":
@@ -52,8 +78,14 @@ def _layer_cache_shapes(cfg: M.ModelConfig, ls: M.LayerSpec, B, max_len,
     raise ValueError(ls.kind)
 
 
-def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True):
-    """Cache tree of ShapeDtypeStructs (abstract) or zeros (concrete)."""
+def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True,
+               num_pages=None):
+    """Cache tree of ShapeDtypeStructs (abstract) or zeros (concrete).
+
+    ``num_pages`` switches the attention K/V leaves to the paged layout —
+    one flat `(num_pages, Hkv, page_size, dh)` physical store (no batch
+    dim: pages are pool-global and mapped per request by a page table).
+    Recurrent-state leaves keep the per-slot `(B, ...)` layout."""
     make = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
            (lambda s, dt: jnp.zeros(s, dt))
     pattern, repeats = cfg.layer_pattern, cfg.repeats
@@ -61,23 +93,32 @@ def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True):
     out = {}
     if scanned:
         for i, ls in enumerate(pattern):
-            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len)
+            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len,
+                                         num_pages)
             out[f"p{i}"] = {k: make((repeats,) + s, dt)
                             for k, (s, dt) in shapes.items()}
     else:
         for i in range(cfg.num_layers):
             ls = pattern[i % len(pattern)]
-            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len)
+            shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len,
+                                         num_pages)
             out[f"layer{i}"] = {k: make(s, dt) for k, (s, dt) in shapes.items()}
     return out
 
 
-def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0):
+def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
+                       num_pages=None):
     """Logical-axis tree matching cache_spec (for the sharding engine)."""
+    paged_kv = num_pages is not None
+
     def axes_for(key, ndim, stacked):
         base = {
-            "k": ("batch", "kv_heads", "seq", None),
-            "v": ("batch", "kv_heads", "seq", None),
+            # paged K/V: the page dim replicates (pages are request-mapped
+            # metadata, not a tensor-parallel dim); heads shard as before
+            "k": (("pages", "kv_heads", None, None) if paged_kv
+                  else ("batch", "kv_heads", "seq", None)),
+            "v": (("pages", "kv_heads", None, None) if paged_kv
+                  else ("batch", "kv_heads", "seq", None)),
             "ck": ("batch", "kv_heads", "seq", None),
             "cv": ("batch", "kv_heads", "seq", None),
             "h": ("batch", "mlp", None),
@@ -88,7 +129,8 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0):
         }[key]
         return (("layers",) + base) if stacked else base
 
-    spec = cache_spec(cfg, B, max_len, enc_len, abstract=True)
+    spec = cache_spec(cfg, B, max_len, enc_len, abstract=True,
+                      num_pages=num_pages)
     scanned = cfg.scan_layers and cfg.repeats > 1
     return {grp: {k: axes_for(k, v.ndim, scanned) for k, v in leaves.items()}
             for grp, leaves in spec.items()}
@@ -149,8 +191,77 @@ def _bigbird_decode_attn(q, kc, vc, pos, bb: patterns.BigBirdConfig, layer):
     return out.reshape(B, Hq, 1, dh).astype(q.dtype)
 
 
+def _paged_gather(kc, page_tables, blocks):
+    """Two-level gather: logical blocks -> physical pages -> key rows.
+
+    kc (P, H, b, dh) physical page store; page_tables (B, max_pages) int32;
+    blocks (B, n) logical block ids.  Returns (B, H, n*b, dh) laid out in
+    the same slot-major order as the contiguous gather, so downstream math
+    is bit-identical to the slot-contiguous path."""
+    phys = jnp.take_along_axis(page_tables, blocks, axis=1)       # (B, n)
+    g = kc[phys]                                         # (B, n, H, b, dh)
+    B, n, H, b, dh = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, H, n * b, dh)
+
+
+def _paged_write_token(kc, k_new, page_tables, pos):
+    """Write one token's KV at its logical `pos` through the page table.
+
+    kc (P, H, b, dh); k_new (B, H, dh); pos (B,).  Each slot writes its own
+    page — pages are never shared between writers (copy-on-write is resolved
+    host-side before the step; see serve/batching.PagePool)."""
+    b = kc.shape[2]
+    pg = jnp.take_along_axis(page_tables, (pos // b)[:, None], axis=1)[:, 0]
+    return kc.at[pg, :, pos % b].set(k_new.astype(kc.dtype))
+
+
+def _bigbird_decode_attn_paged(q, kc, vc, page_tables, pos,
+                               bb: patterns.BigBirdConfig, layer, impl):
+    """Bounded decode over the paged cache: pattern blocks -> page table ->
+    physical pages.  XLA-gather baseline; `impl="pallas"` dispatches to the
+    scalar-prefetched Pallas paged-decode kernel (forward-only)."""
+    if impl == "pallas":
+        from repro.kernels import ops                      # lazy import
+        return ops.bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
+                                             bb, layer=layer)
+    B, Hq, _, dh = q.shape
+    b = bb.block_size
+    S = page_tables.shape[1] * b
+    Hkv = kc.shape[1]
+    grp = Hq // Hkv
+    pat = patterns.build_pattern(bb, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks)          # (nb, Ls)
+    msk = jnp.asarray(pat.key_mask)
+    jq = pos // b                              # (B,)
+    row_idx, row_msk = idx[jq], msk[jq]        # (B, Ls)
+    kg = _paged_gather(kc, page_tables, row_idx)
+    vg = _paged_gather(vc, page_tables, row_idx)
+    flat = (row_idx[..., None] * b + jnp.arange(b)).reshape(B, -1)   # (B,Ls*b)
+    valid = jnp.repeat(row_msk, b, axis=-1) & (flat <= pos[:, None])
+    qf = q.reshape(B, Hkv, grp, 1, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kg,
+                        preferred_element_type=F32) / np.sqrt(dh)
+    logits = jnp.where(valid[:, None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vg.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vg,
+                     preferred_element_type=F32)
+    return out.reshape(B, Hq, 1, dh).astype(q.dtype)
+
+
+def _full_decode_attn_paged(q, kc, vc, page_tables, pos):
+    """Full-fallback read over the paged cache: gather every logical block
+    in order, then run the standard masked dense read (bit-identical to the
+    slot-contiguous fallback)."""
+    B = q.shape[0]
+    n = page_tables.shape[1]
+    blocks = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (B, n))
+    kg = _paged_gather(kc, page_tables, blocks)
+    vg = _paged_gather(vc, page_tables, blocks)
+    return _full_decode_attn(q, kg, vg, pos)
+
+
 def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
-                       layer, pos):
+                       layer, pos, page_tables=None):
     B = x.shape[0]
     pm = p["mix"]
     h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
@@ -161,20 +272,31 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     v = (h @ pm["wv"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
-    # per-slot cache write: row i lands at its own pos[i]
-    write = jax.vmap(
-        lambda cr, ur, pr: jax.lax.dynamic_update_slice(cr, ur, (0, pr, 0)))
-    kc = write(c["k"], k.astype(c["k"].dtype), pos)
-    vc = write(c["v"], v.astype(c["v"].dtype), pos)
+    if page_tables is None:
+        # per-slot cache write: row i lands at its own pos[i]
+        write = jax.vmap(
+            lambda cr, ur, pr: jax.lax.dynamic_update_slice(cr, ur, (0, pr, 0)))
+        kc = write(c["k"], k.astype(c["k"].dtype), pos)
+        vc = write(c["v"], v.astype(c["v"].dtype), pos)
+        S = kc.shape[2]
+    else:
+        kc = _paged_write_token(c["k"], k[:, :, 0], page_tables, pos)
+        vc = _paged_write_token(c["v"], v[:, :, 0], page_tables, pos)
+        S = page_tables.shape[1] * kc.shape[2]
     use_bb = spec.kind in ("bigbird", "window")
     if use_bb:
-        S = kc.shape[2]
         bb = spec.bigbird_config(S)
         nb = S // bb.block_size if S % bb.block_size == 0 else -1
         if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
                       + bb.num_random_blocks) > nb:
             use_bb = False                 # cache too short for the pattern
-    if use_bb:
+    if page_tables is not None:
+        if use_bb:
+            o = _bigbird_decode_attn_paged(q, kc, vc, page_tables, pos, bb,
+                                           layer, spec.impl)
+        else:
+            o = _full_decode_attn_paged(q, kc, vc, page_tables, pos)
+    elif use_bb:
         o = _bigbird_decode_attn(q, kc, vc, pos, bb, layer)
     else:
         o = _full_decode_attn(q, kc, vc, pos)
@@ -212,9 +334,10 @@ def _decode_rwkv_layer(p, c, x, cfg: M.ModelConfig):
                  "cm": cm.astype(c["cm"].dtype)}
 
 
-def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos):
+def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos, page_tables=None):
     if ls.kind == "attn":
-        x, new_c = _decode_attn_layer(p, c, x, cfg, cfg.attn_spec(ls), layer, pos)
+        x, new_c = _decode_attn_layer(p, c, x, cfg, cfg.attn_spec(ls), layer,
+                                      pos, page_tables)
     elif ls.kind == "mamba":
         x, new_c = _decode_mamba_layer(p, c, x, cfg)
     elif ls.kind == "rwkv":
@@ -230,12 +353,18 @@ def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos):
     return x, new_c
 
 
-def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
+                page_tables=None):
     """tokens (B, 1) int32; pos () or (B,) int32 -> (logits (B, V) f32, cache).
 
     Scalar `pos` (all slots at the same position) is broadcast; a (B,)
     vector gives every slot its own position — the contract the serving
-    Engine's slot pool (repro/serve/batching.py) relies on."""
+    Engine's slot pool (repro/serve/batching.py) relies on.
+
+    `page_tables` (B, max_pages) int32 selects the paged cache layout: the
+    cache tree must come from `cache_spec(..., num_pages=)`, each row maps
+    that slot's logical blocks to physical pages, and the attention
+    write/read go through the table (DESIGN.md §Paged cache)."""
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
         pos = jnp.full((tokens.shape[0],), pos)
@@ -251,7 +380,7 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos):
             new_c = {}
             for i, ls in enumerate(pattern):
                 x, nc = _decode_layer(pslice[f"p{i}"], cslice[f"p{i}"],
-                                      x, cfg, ls, i, pos)
+                                      x, cfg, ls, i, pos, page_tables)
                 new_c[f"p{i}"] = nc
             return x, new_c
         x, new_cache = jax.lax.scan(body, x, (stack, cache))
@@ -260,11 +389,196 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos):
         for i in range(cfg.num_layers):
             ls = pattern[i % len(pattern)]
             x, nc = _decode_layer(stack[f"layer{i}"], cache[f"layer{i}"],
-                                  x, cfg, ls, i, pos)
+                                  x, cfg, ls, i, pos, page_tables)
             new_cache[f"layer{i}"] = nc
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     w_out = M._unembed_weight(params, cfg)
     logits = (x[:, 0] @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# chunked prefill into the paged cache
+# --------------------------------------------------------------------------
+
+def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
+                      layer, page_tables, start: int, bucket_len: int,
+                      write_tables=None):
+    """One attention layer of a prefill chunk covering positions
+    [start, start+C), reading/writing the paged cache.
+
+    `start` is STATIC (chunk launches are compiled per chunk offset) so
+    every gather has a fixed shape and the pattern-row/causal masks are
+    host-side constants.  `bucket_len` is the padded length the ONE-SHOT
+    prefill of this prompt would run at: the per-layer BigBird-vs-full
+    fallback decision is made against it, exactly mirroring
+    core.attention() — chunked and one-shot prefill therefore build the
+    same graph.  Under causal attention the math then matches one-shot
+    prefill bit-for-bit: a query at position p attends exactly the keys
+    <= p that the pattern admits, regardless of how the prompt was split
+    into chunks (masked scores contribute exactly 0)."""
+    assert spec.causal, "chunked prefill is causal-only (decoder LM serving)"
+    B, C, _ = x.shape
+    pm = p["mix"]
+    h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    positions = start + jnp.arange(C)
+    q = (h @ pm["wq"]).reshape(B, C, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ pm["wk"]).reshape(B, C, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ pm["wv"]).reshape(B, C, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    b = c["k"].shape[-2]                       # physical page size
+    assert C % b == 0 and start % b == 0, (C, start, b)
+    nc, qb0 = C // b, start // b
+    assert qb0 + nc <= page_tables.shape[1], \
+        f"chunk [{start},{start + C}) crosses the logical cache end"
+    grp = hq // hkv
+    # scatter this chunk's KV blocks into the slot's pages; `write_tables`
+    # (default: the read tables) lets the caller redirect blocks it must
+    # not touch — prefix-SHARED pages — to the dump page
+    wt = page_tables if write_tables is None else write_tables
+    phys_w = wt[:, qb0:qb0 + nc]                                 # (B, nc)
+    as_blocks = lambda t: t.reshape(B, hkv, nc, b, dh).transpose(0, 2, 1, 3, 4)
+    kc = c["k"].at[phys_w].set(as_blocks(k).astype(c["k"].dtype))
+    vc = c["v"].at[phys_w].set(as_blocks(v).astype(c["v"].dtype))
+
+    # the same fallback rule core.attention() applies at the one-shot
+    # bucket: pattern larger than the (padded) prompt -> exact full attn
+    use_bb = spec.kind in ("bigbird", "window")
+    if use_bb:
+        bb = spec.bigbird_config(bucket_len)
+        nbk = bucket_len // b if bucket_len % b == 0 else -1
+        if nbk < 0 or (bb.num_global_blocks + bb.num_window_blocks
+                       + bb.num_random_blocks) > nbk:
+            use_bb = False
+
+    end = start + C
+    if use_bb:
+        S_log = page_tables.shape[1] * b
+        pat = patterns.build_pattern(bb, S_log, layer=layer)
+        rows = pat.key_blocks[qb0:qb0 + nc]                      # (nc, Ls) np
+        rmsk = pat.key_mask[qb0:qb0 + nc]
+        Ls = rows.shape[1]
+        blocks = jnp.broadcast_to(
+            jnp.asarray(rows.reshape(-1), jnp.int32)[None], (B, nc * Ls))
+        kg = _paged_gather(kc, page_tables, blocks).reshape(B, hkv, nc,
+                                                           Ls * b, dh)
+        vg = _paged_gather(vc, page_tables, blocks).reshape(B, hkv, nc,
+                                                           Ls * b, dh)
+        flat = (rows[..., None] * b + np.arange(b)).reshape(nc, Ls * b)
+        qpos = (start + np.arange(C)).reshape(nc, b)
+        valid = (np.repeat(rmsk, b, axis=1)[:, None, :]
+                 & (flat[:, None, :] <= qpos[:, :, None]))       # (nc,b,Ls*b)
+        qf = q.reshape(B, hkv, grp, nc, b, dh)
+        s = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qf, kg,
+                       preferred_element_type=F32) / np.sqrt(dh)
+        s = jnp.where(jnp.asarray(valid)[None, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+        o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", pr, vg,
+                       preferred_element_type=F32)
+        o = o.reshape(B, hq, C, dh).astype(q.dtype)
+        # global *query* rows attend densely to everything <= their position
+        gb = bb.num_global_blocks
+        if qb0 < gb:
+            ngb = min(gb - qb0, nc)
+            pre = jnp.broadcast_to(
+                jnp.arange(end // b, dtype=jnp.int32)[None], (B, end // b))
+            ka = _paged_gather(kc, page_tables, pre)             # (B,H,end,dh)
+            va = _paged_gather(vc, page_tables, pre)
+            qg = q[:, :, :ngb * b].reshape(B, hkv, grp, ngb * b, dh)
+            sg = jnp.einsum("bhgqd,bhkd->bhgqk", qg, ka,
+                            preferred_element_type=F32) / np.sqrt(dh)
+            cm = (start + np.arange(ngb * b))[:, None] >= np.arange(end)[None]
+            sg = jnp.where(jnp.asarray(cm)[None, None, None], sg, -1e30)
+            pg = jax.nn.softmax(sg, axis=-1).astype(va.dtype)
+            og = jnp.einsum("bhgqk,bhkd->bhgqd", pg, va,
+                            preferred_element_type=F32)
+            og = og.reshape(B, hq, ngb * b, dh)
+            o = o.at[:, :, :ngb * b].set(og.astype(o.dtype))
+    else:
+        # pattern does not fit the prompt bucket: exact full causal attention
+        pre = jnp.broadcast_to(
+            jnp.arange(end // b, dtype=jnp.int32)[None], (B, end // b))
+        ka = _paged_gather(kc, page_tables, pre)
+        va = _paged_gather(vc, page_tables, pre)
+        qf = q.reshape(B, hkv, grp, C, dh)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, ka,
+                       preferred_element_type=F32) / np.sqrt(dh)
+        cm = (start + np.arange(C))[:, None] >= np.arange(end)[None]
+        s = jnp.where(jnp.asarray(cm)[None, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(va.dtype)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", pr, va,
+                       preferred_element_type=F32)
+        o = o.reshape(B, hq, C, dh).astype(q.dtype)
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, C, hq * dh)
+    x = x + o @ pm["wo"]
+    if "ffn" in p:
+        if cfg.layer_pattern[layer % cfg.period].moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, {"k": kc, "v": vc}
+
+
+def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
+                  *, start: int, last_index, bucket_len: int,
+                  write_tables=None):
+    """Prefill ONE chunk of a prompt into the paged cache.
+
+    tokens (B, C) int32 — chunk token window covering positions
+    [start, start+C); page_tables (B, max_pages) int32; `start` static and
+    page-aligned; `last_index` (B,) int32 — GLOBAL index of the last real
+    prompt token (logits are gathered at `clip(last_index - start, 0, C-1)`
+    and are only meaningful for the chunk that contains it); `bucket_len`
+    static — the padded length one-shot prefill would use, which fixes the
+    per-layer BigBird-vs-full graph decision so chunked and one-shot
+    prefill build identical caches; `write_tables` — optional write-side
+    view of the page tables (blocks redirected to the dump page are
+    computed but not persisted — the Engine uses this to keep
+    prefix-SHARED pages write-free).
+
+    Attention-only causal configs (recurrent layers chunk through their
+    state sequentially and keep the one-shot admit path).
+    Returns (logits (B, V) f32, cache)."""
+    assert all(ls.kind == "attn" for ls in cfg.layer_pattern), \
+        "chunked prefill supports attention-only configs"
+    assert cfg.kind != "encdec", "chunked prefill is decoder-only"
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    stack = params["layers"]
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, xs):
+            pslice, cslice = xs
+            new_c = {}
+            for i, ls in enumerate(pattern):
+                x, nc = _chunk_attn_layer(
+                    pslice[f"p{i}"], cslice[f"p{i}"], x, cfg,
+                    cfg.attn_spec(ls), i, page_tables, start, bucket_len,
+                    write_tables)
+                new_c[f"p{i}"] = nc
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    else:
+        new_cache = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            x, nc = _chunk_attn_layer(
+                stack[f"layer{i}"], cache[f"layer{i}"], x, cfg,
+                cfg.attn_spec(ls), i, page_tables, start, bucket_len,
+                write_tables)
+            new_cache[f"layer{i}"] = nc
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    C = x.shape[1]
+    li = jnp.clip(jnp.asarray(last_index, jnp.int32) - start, 0, C - 1)
+    h_last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0]
+    logits = (h_last @ w_out).astype(F32)[..., :cfg.vocab_size]
     return logits, new_cache
 
 

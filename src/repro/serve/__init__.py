@@ -11,8 +11,9 @@
 
 See DESIGN.md §Serving Engine for the full contract.
 """
-from repro.serve.api import GenerateOutput, Request, Result
+from repro.serve.api import GenerateOutput, PoolStats, Request, Result
 from repro.serve.engine import Engine
 from repro.serve.sampling import SamplingSpec
 
-__all__ = ["Engine", "Request", "Result", "GenerateOutput", "SamplingSpec"]
+__all__ = ["Engine", "Request", "Result", "GenerateOutput", "PoolStats",
+           "SamplingSpec"]

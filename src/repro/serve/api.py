@@ -37,7 +37,22 @@ class Result:
     tokens: List[int]                      # generated tokens (incl. stop)
     prompt_len: int
     finish_reason: str                     # "stop" | "length"
-    ttft_steps: int = 0                    # engine steps from admit to 1st tok
+    ttft_steps: int = 0                    # engine steps from submit to 1st tok
+    pages_used: int = 0                    # KV pages this request mapped
+    shared_prefix_pages: int = 0           # of which reused from a co-resident
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Page-pool occupancy snapshot (`Engine.stats()`)."""
+    num_pages: int                         # usable pages (dump page excluded)
+    page_size: int                         # tokens per page (= pattern block)
+    pages_in_use: int
+    peak_pages_in_use: int
+    prefix_hits: int                       # admits that reused >= 1 page
+    prefix_pages_shared: int               # cumulative pages not re-admitted
+    requests_admitted: int
+    kv_bytes_per_page: int                 # KV bytes one page holds (all layers)
 
 
 @dataclasses.dataclass

@@ -1,32 +1,47 @@
-"""Slot-based continuous batching over the model-zoo cache families.
+"""Block-paged continuous batching over the model-zoo cache families.
 
-A `SlotPool` owns ONE fixed-capacity device cache tree (attention KV,
-mamba state, rwkv state — whatever `models/decode.cache_spec` builds for
-the config) whose batch dim is a pool of `capacity` slots.  Requests are
-admitted into free slots at step boundaries by overwriting a slot's rows
-with a freshly prefilled single-request cache, and evicted by simply
-marking the slot free — the stale rows are dead weight until the next
-admit overwrites them, so admission/eviction never reshapes or re-jits
-anything.
+A `PagePool` owns ONE device cache tree whose attention K/V leaves are a
+flat pool of physical pages `(num_pages, Hkv, page_size, dh)` — page size
+equals the BigBird pattern block size, so one pattern block is one page
+and the bounded-decode read is a two-level lookup (pattern block -> page
+table -> page).  Requests own *page lists* instead of contiguous slot
+rows: admission allocates exactly the pages a request's prompt + budget
+needs, eviction returns them, and memory — not a `capacity x max_len`
+reservation — is the only concurrency limit the pool enforces.
 
-Padding-free accounting: every slot carries its own `pos`, and
-`models/decode.decode_step` takes the whole (capacity,) position vector,
-so one decode step serves heterogeneous prompt lengths; idle slots
-compute garbage that nothing reads.
+Page 0 is a reserved DUMP page: idle/prefilling rows of the batched
+decode step write their garbage KV through all-zero page-table rows, so
+the garbage lands on a page no live request ever maps (reads through a
+zero entry are masked by position before they can contribute).
 
-Cache layout note: for scanned configs (`cfg.scan_layers`, repeats > 1)
-the per-group leaves are (repeats, B, ...) — batch is dim 1 — while
-unscanned leaves are (B, ...).  The slot writer handles both.
+Shared global-prefix pages: the first `g` (global-block) pages of a
+prompt are content-addressed — keyed by the exact token prefix they
+cover plus the prefill graph — and REFCOUNTED, so co-resident requests
+with a common prompt prefix map the same physical pages and the pages
+are admitted (computed + written) once.  Copy-on-write protects sharers:
+a write targeting a page with refcount > 1 first moves the writer onto a
+private copy (`ensure_writable`).  Under the admission policy writes
+never actually land on shared pages — decode writes at pos >= prompt_len
+while shared pages cover full pages strictly below it — so the CoW path
+is a guard, not a hot path (DESIGN.md §Paged cache).
+
+Recurrent-state leaves (mamba `h/conv`, rwkv `tm/s/cm`) are O(1) per
+request and keep the per-slot `(capacity, ...)` layout inside the same
+tree.  Cache layout note: scanned configs (`cfg.scan_layers`, repeats >
+1) prepend a repeats dim to every leaf; writers handle both.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode as Dec
+
+DUMP_PAGE = 0
 
 
 @dataclasses.dataclass
@@ -39,18 +54,56 @@ class SlotState:
     stop_token: Optional[int]
     tokens: list               # emitted tokens (host ints)
     prompt_len: int
-    admit_step: int            # engine step counter at admission (TTFT)
+    admit_step: int            # engine step counter at admission
+    phase: str = "decode"      # "prefill" (chunks pending) | "decode"
+    prefill_pos: int = 0       # next prompt position to prefill
+    pages: list = dataclasses.field(default_factory=list)
+    shared_pages: int = 0      # leading pages reused from the prefix index
 
 
-class SlotPool:
-    """Fixed-capacity slot pool over one device cache tree."""
+class PagePool:
+    """Refcounted page pool + per-slot page tables over one cache tree."""
 
-    def __init__(self, cfg, capacity: int, max_len: int):
+    def __init__(self, cfg, capacity: int, max_len: int,
+                 num_pages: Optional[int] = None):
         self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
-        self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False)
+        self.page_size = Dec.page_size_for(cfg)
+        self.max_pages = -(-max_len // self.page_size)
+        self._paged = any(ls.kind == "attn" for ls in cfg.layer_pattern)
+        # default budget matches the old slot-contiguous reservation (so the
+        # paged pool can always admit what the monolithic pool could) + the
+        # dump page; callers shrink it to trade capacity for memory.
+        self.num_pages = (num_pages if num_pages is not None
+                          else capacity * self.max_pages + 1)
+        assert self.num_pages >= 2, "pool needs the dump page + 1 real page"
+        self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False,
+                                    num_pages=self.num_pages)
         self._scanned = cfg.scan_layers and cfg.repeats > 1
+        self.page_tables = np.zeros((capacity, self.max_pages), np.int32)
         self.slots: list = [None] * capacity       # SlotState | None
-        self._writer = self._make_writer()
+        self._free: list = list(range(1, self.num_pages))
+        self.refcount = np.zeros(self.num_pages, np.int64)
+        # content-addressed prefix index: several co-resident requests may
+        # hold equivalent (bit-identical) copies of the same prefix page —
+        # all are indexed, so the key survives any one holder's eviction
+        self._prefix: dict = {}      # (graph_key, token_bytes) -> {page ids}
+        self._page_key: dict = {}    # page id -> its prefix-index key
+        # the number of leading pages eligible for prefix sharing: the
+        # pattern's global blocks (read by every query, forever)
+        self._g_share = max(
+            (cfg.attn_spec(ls).bigbird_config(
+                max(self.max_pages, 1) * self.page_size).num_global_blocks
+             for ls in cfg.layer_pattern
+             if ls.kind == "attn"
+             and cfg.attn_spec(ls).kind in ("bigbird", "window")),
+            default=0)
+        # stats
+        self.peak_pages_in_use = 0
+        self.prefix_hits = 0           # admits that reused >= 1 page
+        self.prefix_pages_shared = 0   # cumulative pages NOT re-admitted
+        self.requests_admitted = 0
+        self._writer = jax.jit(self._write_impl, donate_argnums=(0,))
+        self._copier = jax.jit(self._copy_impl, donate_argnums=(0,))
 
     # -- occupancy ---------------------------------------------------------
 
@@ -60,37 +113,259 @@ class SlotPool:
     def active_slots(self):
         return [i for i, s in enumerate(self.slots) if s is not None]
 
-    # -- admission / eviction ---------------------------------------------
+    def decode_slots(self):
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.phase == "decode"]
 
-    def _make_writer(self):
-        scanned = self._scanned
+    def prefill_slots(self):
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.phase == "prefill"]
 
-        def write(pool, one, slot):
-            if scanned:                  # leaves (repeats, B, ...): batch dim 1
-                return jax.tree.map(
-                    lambda c, n: c.at[:, slot].set(n[:, 0]), pool, one)
-            return jax.tree.map(lambda c, n: c.at[slot].set(n[0]), pool, one)
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
 
-        return jax.jit(write, donate_argnums=(0,))
+    def pages_needed(self, prompt_len: int, max_new: int) -> int:
+        """Logical pages a request occupies: prompt + decode writes (the
+        last sampled token is never written).  Chunk-grid padding beyond
+        this needs no pages — pad-region writes fall through the zeroed
+        page-table tail onto the dump page."""
+        b = self.page_size
+        return min(-(-(prompt_len + max_new - 1) // b), self.max_pages)
 
-    def admit(self, slot: int, one_request_cache, state: SlotState):
-        """Overwrite `slot`'s cache rows with a B=1 prefilled cache."""
+    # -- prefix sharing ----------------------------------------------------
+
+    def shareable_pages(self, prompt: np.ndarray) -> int:
+        """Max leading pages of `prompt` eligible for sharing: full pages
+        inside the global-block region, always leaving the page holding the
+        last prompt token (which the final prefill chunk recomputes)."""
+        L = int(prompt.size)
+        return max(0, min(self._g_share, (L - 1) // self.page_size))
+
+    def lookup_prefix(self, prompt: np.ndarray, graph_key) -> list:
+        """Longest chain of already-resident prefix pages for `prompt`."""
+        pages = []
+        b = self.page_size
+        for j in range(1, self.shareable_pages(prompt) + 1):
+            copies = self._prefix.get((graph_key, prompt[:j * b].tobytes()))
+            if not copies:
+                break
+            pages.append(min(copies))          # deterministic pick
+        return pages
+
+    def register_prefix(self, slot: int, upto_pos: int, prompt: np.ndarray,
+                        graph_key) -> None:
+        """Publish the slot's written global-prefix pages (content now final
+        — only pages fully covered by positions < upto_pos are eligible, so
+        a later sharer never reads a page before its writer filled it)."""
+        s = self.slots[slot]
+        b = self.page_size
+        hi = min(self.shareable_pages(prompt), upto_pos // b)
+        for j in range(1, hi + 1):
+            key = (graph_key, prompt[:j * b].tobytes())
+            pg = s.pages[j - 1]
+            if self._page_key.get(pg, key) != key:
+                continue               # CoW moved this slot off a shared page
+            self._prefix.setdefault(key, set()).add(pg)
+            self._page_key[pg] = key
+
+    # -- page allocation / release ----------------------------------------
+
+    def can_admit(self, prompt: np.ndarray, max_new: int,
+                  graph_key=None) -> bool:
+        need = self.pages_needed(int(prompt.size), max_new)
+        need -= len(self.lookup_prefix(prompt, graph_key))
+        return len(self._free) >= need
+
+    def allocate(self, slot: int, prompt: np.ndarray, max_new: int,
+                 graph_key=None,
+                 state: Optional[SlotState] = None) -> SlotState:
+        """Bind a page list + page-table row to `slot` for a new request.
+
+        Leading pages come from the prefix index when the token prefix (and
+        prefill graph) match — those are refcount-bumped, not rewritten."""
         assert self.slots[slot] is None, f"slot {slot} occupied"
+        assert state is not None
         assert state.pos + state.max_new <= self.max_len + 1, \
             f"request needs {state.pos + state.max_new} > max_len {self.max_len}"
-        self.cache = self._writer(self.cache, one_request_cache, slot)
+        need = self.pages_needed(int(prompt.size), max_new)
+        shared = self.lookup_prefix(prompt, graph_key)
+        fresh_n = need - len(shared)
+        assert fresh_n >= 0
+        if len(self._free) < fresh_n:
+            raise RuntimeError(
+                f"page pool exhausted: need {fresh_n}, free {len(self._free)}")
+        fresh = [self._free.pop() for _ in range(fresh_n)]
+        pages = shared + fresh
+        for pg in pages:
+            self.refcount[pg] += 1
+        state.pages = pages
+        state.shared_pages = len(shared)
+        self.page_tables[slot, :] = DUMP_PAGE
+        self.page_tables[slot, :need] = pages
         self.slots[slot] = state
+        self.requests_admitted += 1
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_pages_shared += len(shared)
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return state
 
     def evict(self, slot: int):
+        """Release the slot: decref its pages; pages at refcount 0 return to
+        the free list (and leave the prefix index — sharing is between
+        co-resident requests only)."""
+        s = self.slots[slot]
+        if s is not None:
+            for pg in s.pages:
+                self.refcount[pg] -= 1
+                assert self.refcount[pg] >= 0
+                if self.refcount[pg] == 0:
+                    key = self._page_key.pop(pg, None)
+                    if key is not None:
+                        copies = self._prefix.get(key)
+                        if copies is not None:
+                            copies.discard(pg)
+                            if not copies:
+                                del self._prefix[key]
+                    self._free.append(pg)
+        self.page_tables[slot, :] = DUMP_PAGE
         self.slots[slot] = None
+
+    # -- copy-on-write guard ----------------------------------------------
+
+    def ensure_writable(self, slot: int, logical_block: int) -> bool:
+        """CoW guard: if the page the slot is about to write is shared
+        (refcount > 1), move the slot onto a private copy first.  The
+        admission policy keeps shared pages strictly below every write
+        position, so this never fires in normal serving; it exists to make
+        the sharing contract locally safe rather than globally argued."""
+        s = self.slots[slot]
+        if s is None or logical_block >= len(s.pages):
+            return False
+        old = s.pages[logical_block]
+        if self.refcount[old] <= 1:
+            return False
+        if not self._free:
+            raise RuntimeError("page pool exhausted during copy-on-write")
+        new = self._free.pop()
+        self.cache = self._copier(self.cache, jnp.asarray(new, jnp.int32),
+                                  jnp.asarray(old, jnp.int32))
+        self.refcount[old] -= 1
+        self.refcount[new] = 1
+        s.pages[logical_block] = new
+        if s.shared_pages > logical_block:
+            s.shared_pages = logical_block
+        self.page_tables[slot, logical_block] = new
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return True
+
+    # -- device writers ----------------------------------------------------
+
+    def _copy_impl(self, cache, dst, src):
+        out = {}
+        for gname, leaves in cache.items():
+            ng = {}
+            for key, c in leaves.items():
+                if key in ("k", "v") and self._paged:
+                    if self._scanned:
+                        ng[key] = c.at[:, dst].set(c[:, src])
+                    else:
+                        ng[key] = c.at[dst].set(c[src])
+                else:
+                    ng[key] = c
+            out[gname] = ng
+        return out
+
+    def _write_impl(self, cache, one, pages, blocks, slot):
+        """Scatter a B=1 contiguous prefilled cache into the slot's pages
+        (attn leaves) and the slot's row (recurrent leaves).
+
+        one: attn K/V (1, Hkv, Sp, dh) with Sp a page multiple; `pages`
+        and `blocks` are aligned (m,) int32 vectors — physical page id and
+        source block index (prefix-shared pages are excluded by the
+        caller, so shared content is never rewritten)."""
+        b = self.page_size
+        out = {}
+        for gname, leaves in cache.items():
+            og, ng = one[gname], {}
+            for key, c in leaves.items():
+                o = og[key]
+                if key in ("k", "v"):
+                    if self._scanned:      # c (R,P,H,b,d); o (R,1,H,Sp,d)
+                        R, _, H, _, d = c.shape
+                        blk = o[:, 0].reshape(R, H, -1, b, d) \
+                               .transpose(0, 2, 1, 3, 4)       # (R,nb,H,b,d)
+                        ng[key] = c.at[:, pages].set(
+                            blk[:, blocks].astype(c.dtype))
+                    else:                  # c (P,H,b,d); o (1,H,Sp,d)
+                        H, d = c.shape[1], c.shape[3]
+                        blk = o[0].reshape(H, -1, b, d) \
+                               .transpose(1, 0, 2, 3)          # (nb,H,b,d)
+                        ng[key] = c.at[pages].set(
+                            blk[blocks].astype(c.dtype))
+                else:
+                    if self._scanned:      # c (R,cap,...); o (R,1,...)
+                        ng[key] = c.at[:, slot].set(o[:, 0].astype(c.dtype))
+                    else:
+                        ng[key] = c.at[slot].set(o[0].astype(c.dtype))
+            out[gname] = ng
+        return out
+
+    def write_prefill(self, slot: int, one_request_cache):
+        """Write a one-shot B=1 prefilled cache through the slot's page
+        table, skipping prefix-shared pages."""
+        s = self.slots[slot]
+        b = self.page_size
+        # source blocks available in the contiguous prefill
+        leaf = next((l["k"] for l in one_request_cache.values() if "k" in l),
+                    None)
+        nb_src = (leaf.shape[2 + self._scanned] // b) if leaf is not None \
+            else 0
+        lo, hi = s.shared_pages, min(len(s.pages), nb_src)
+        pages = jnp.asarray([s.pages[j] for j in range(lo, hi)] or [DUMP_PAGE],
+                            jnp.int32)
+        blocks = jnp.asarray(list(range(lo, hi)) or [0], jnp.int32)
+        self.cache = self._writer(self.cache, one_request_cache, pages,
+                                  blocks, jnp.asarray(slot, jnp.int32))
 
     # -- per-step device arrays -------------------------------------------
 
     def position_vector(self) -> np.ndarray:
-        """(capacity,) int32 of per-slot write positions (idle slots pinned
-        to max_len - 1: in-bounds, overwritten at their next admit)."""
+        """(capacity,) int32 of per-slot write positions; idle/prefilling
+        slots are pinned to max_len - 1 (in-bounds; their table rows are
+        zeroed for the step so the garbage write lands on the dump page)."""
         pos = np.full((self.capacity,), self.max_len - 1, np.int32)
         for i, s in enumerate(self.slots):
-            if s is not None:
+            if s is not None and s.phase == "decode":
                 pos[i] = s.pos
         return pos
+
+    def table_matrix(self) -> np.ndarray:
+        """(capacity, max_pages) int32 for the batched decode step: live
+        rows for decoding slots, dump-page rows for everyone else."""
+        pt = np.full_like(self.page_tables, DUMP_PAGE)
+        for i in self.decode_slots():
+            pt[i] = self.page_tables[i]
+        return pt
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """(1, max_pages) int32 page-table row for a prefill chunk."""
+        return self.page_tables[slot:slot + 1].copy()
+
+    # -- accounting --------------------------------------------------------
+
+    def reset_stats(self):
+        """Zero the cumulative counters (benchmarks: after warmup)."""
+        self.peak_pages_in_use = self.pages_in_use
+        self.prefix_hits = 0
+        self.prefix_pages_shared = 0
+        self.requests_admitted = 0
+
+    def kv_bytes_per_page(self) -> int:
+        n = 0
+        for leaves in jax.tree.leaves(
+                {g: {k: v for k, v in lv.items() if k in ("k", "v")}
+                 for g, lv in self.cache.items()}):
+            n += leaves.size * leaves.dtype.itemsize // self.num_pages
+        return n

@@ -1,22 +1,27 @@
 """The generation Engine: compiled prefill/decode executables + a fully
-jitted token loop + slot-based continuous batching.
+jitted token loop + block-paged continuous batching.
 
 Two serving modes over one set of compiled artifacts:
 
   * `generate(prompts, ...)` — batch-synchronous: ONE jitted call runs
     prefill and the whole stop-token-aware decode loop under
     `jax.lax.while_loop` (no per-token Python dispatch);
-  * `submit() / step() / drain()` — continuous batching: requests are
-    admitted into a fixed-capacity `SlotPool` at step boundaries, one
-    jitted decode step serves all slots at their own positions, and
-    finished slots free up for the next admit without any reshape/re-jit.
+  * `submit() / step() / drain()` — continuous batching over a `PagePool`:
+    requests own refcounted page lists instead of contiguous slot rows,
+    prompts are prefilled `prefill_chunk` blocks at a time INTERLEAVED
+    with decode steps (admitting a long prompt no longer stalls
+    co-residents' token cadence), and common global-prefix pages are
+    admitted once and shared (DESIGN.md §Paged cache).
 
 Executables are cached by bucketed shapes: prompts are right-padded to a
 power-of-two bucket (exact under causal attention because logits are
-gathered at the per-row `last_index`, see models/decode.prefill), so a
-handful of compilations serve every prompt length.  Configs with
-recurrent layers (mamba/rwkv state caches) prefill at the exact prompt
-length instead — right-padding would pollute their running state.
+gathered at the per-row `last_index`, see models/decode.prefill), decode
+loops are compiled per power-of-two `max_new` bucket with the true limit
+passed as a traced operand (one executable serves every `max_new` in the
+bucket), and prefill chunks are compiled per chunk offset.  Configs with
+recurrent layers (mamba/rwkv state) prefill at the exact prompt length in
+one shot — right-padding or chunk-splitting would corrupt their running
+state.
 """
 from __future__ import annotations
 
@@ -31,8 +36,8 @@ import numpy as np
 from repro.models import decode as Dec
 from repro.models import model as M
 from repro.serve import sampling as Smp
-from repro.serve.api import GenerateOutput, Request, Result
-from repro.serve.batching import SlotPool, SlotState
+from repro.serve.api import GenerateOutput, PoolStats, Request, Result
+from repro.serve.batching import PagePool, SlotState
 from repro.serve.sampling import SamplingSpec
 
 I32 = jnp.int32
@@ -42,30 +47,46 @@ def _has_recurrent_layers(cfg: M.ModelConfig) -> bool:
     return any(ls.kind in ("mamba", "rwkv") for ls in cfg.layer_pattern)
 
 
+def _attn_only(cfg: M.ModelConfig) -> bool:
+    return all(ls.kind == "attn" for ls in cfg.layer_pattern)
+
+
 class Engine:
     """Owns params + compiled serving executables for one ModelConfig."""
 
     def __init__(self, cfg: M.ModelConfig, params, *, max_len: int = 0,
-                 capacity: int = 4):
+                 capacity: int = 4, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = 4):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
                                    else cfg.max_seq)
         self.capacity = capacity
         self._exact_prefill = _has_recurrent_layers(cfg)
+        # chunked prefill needs attention-only causal stacks; everything
+        # else admits one-shot (recurrent state must stream sequentially)
+        self._chunked = (prefill_chunk is not None and _attn_only(cfg)
+                         and cfg.kind == "lm"
+                         and all(cfg.attn_spec(ls).causal
+                                 for ls in cfg.layer_pattern))
 
         # compiled executables; jax.jit keys its cache by the (bucketed)
         # input shapes, so each bucket compiles exactly once per engine
-        self._prefill = jax.jit(
-            lambda p, b, li: Dec.prefill(p, cfg, b, self.max_len,
-                                         last_index=li))
+        self._admit_prefill = jax.jit(
+            lambda p, b, li, ml: Dec.prefill(p, cfg, b, ml, last_index=li),
+            static_argnums=(3,))
         self._slot_step = jax.jit(self._slot_step_impl, donate_argnums=(1,))
-        self._generate = {}            # max_new -> jitted loop
+        self._generate = {}            # bucketed max_new -> jitted loop
+        self._chunk_fns = {}           # (start, bucket_len) -> jitted chunk
 
-        # continuous-batching state
-        self.pool = SlotPool(cfg, capacity, self.max_len)
+        # continuous-batching state (decoder-only LMs; encdec/patch archs
+        # serve through generate() and never touch the pool)
+        self.pool = (PagePool(cfg, capacity, self.max_len, num_pages)
+                     if cfg.kind == "lm" else None)
+        self._chunk_tokens = (prefill_chunk * self.pool.page_size
+                              if self._chunked else None)
         self._queue: collections.deque = collections.deque()
-        self._slot_meta: dict = {}     # slot -> (sampling spec, base key)
+        self._slot_meta: dict = {}     # slot -> (request, base key, submit step)
         self._next_id = 0
         self._step_count = 0
 
@@ -82,6 +103,43 @@ class Engine:
         while b < n:
             b *= 2
         return min(b, self.max_len)
+
+    def bucket_new(self, n: int) -> int:
+        """Compiled decode-loop bucket for max_new: power of two, with the
+        true limit passed as a traced operand (tail steps are skipped by
+        the loop condition, not by a separate executable)."""
+        b = 16
+        while b < n:
+            b *= 2
+        return b
+
+    def _page_bucket(self, n: int) -> int:
+        """Prompt bucket rounded up to a whole number of pages — the
+        length one-shot admit prefill runs at and the graph key chunked
+        prefill mirrors (models/decode.prefill_chunk `bucket_len`)."""
+        b = self.pool.page_size
+        return -(-self.bucket_len(n) // b) * b
+
+    def _graph_key(self, n: int):
+        """Prefix-sharing key: the per-layer attention graph the prefill of
+        an n-token prompt runs (BigBird pattern config, or the full-attn
+        fallback when the pattern outgrows the prompt bucket).  Two prompts
+        with equal keys and equal prefix tokens produce bit-identical
+        prefix K/V pages, even from different prompt buckets — the bucket
+        only enters the computation through this decision."""
+        bl = self._page_bucket(n)
+        nbk = bl // self.pool.page_size
+        key = []
+        for ls in self.cfg.layer_pattern:
+            spec = self.cfg.attn_spec(ls)
+            if spec.kind in ("bigbird", "window"):
+                bb = spec.bigbird_config(bl)
+                fits = (bb.num_global_blocks + bb.num_window_blocks
+                        + bb.num_random_blocks) <= nbk
+                key.append(bb if fits else "full")
+            else:
+                key.append("full")
+        return tuple(key)
 
     def _pad_prompts(self, prompts):
         """Right-pad to one bucket; returns (tokens (B,Sb), last_index (B,))."""
@@ -100,22 +158,22 @@ class Engine:
     # batch-synchronous generation (fully jitted loop)
     # ------------------------------------------------------------------
 
-    def _make_generate(self, max_new: int):
+    def _make_generate(self, bucket: int):
         cfg = self.cfg
 
-        def gen(params, batch, last_index, samp, stop):
+        def gen(params, batch, last_index, samp, stop, limit):
             logits, cache = Dec.prefill(params, cfg, batch, self.max_len,
                                         last_index=last_index)
             B = logits.shape[0]
             tok0 = Smp.sample_tokens(
                 logits, Smp.fold_step_keys(samp["keys"], 0),
                 samp["temperature"], samp["top_k"], samp["top_p"])
-            out = jnp.zeros((B, max_new), I32).at[:, 0].set(tok0)
+            out = jnp.zeros((B, bucket), I32).at[:, 0].set(tok0)
             done = (stop >= 0) & (tok0 == stop)
 
             def cond(carry):
                 i, _, _, _, done, _ = carry
-                return (i < max_new) & jnp.logical_not(done.all())
+                return (i < limit) & jnp.logical_not(done.all())
 
             def body(carry):
                 i, tok, pos, cache, done, out = carry
@@ -158,12 +216,14 @@ class Engine:
             last_index = jnp.maximum(last_index, F - 1)
         assert int(jnp.max(last_index)) + max_new <= self.max_len, \
             "prompt + max_new exceeds engine max_len"
-        if max_new not in self._generate:
-            self._generate[max_new] = self._make_generate(max_new)
+        bucket = self.bucket_new(max_new)
+        if bucket not in self._generate:
+            self._generate[bucket] = self._make_generate(bucket)
         samp = Smp.uniform_spec_arrays(sampling, B)
         stop = jnp.asarray(-1 if stop_token is None else stop_token, I32)
-        out = np.asarray(self._generate[max_new](
-            self.params, batch, last_index, samp, stop))
+        out = np.asarray(self._generate[bucket](
+            self.params, batch, last_index, samp, stop,
+            jnp.asarray(max_new, I32)))[:, :max_new]
         lengths = np.full((B,), max_new, np.int32)
         if stop_token is not None:
             for i in range(B):
@@ -176,11 +236,23 @@ class Engine:
     # continuous batching: submit / step / drain
     # ------------------------------------------------------------------
 
-    def _slot_step_impl(self, params, cache, tok, pos, samp, step_keys):
-        logits, cache = Dec.decode_step(params, self.cfg, cache, tok, pos)
+    def _slot_step_impl(self, params, cache, tok, pos, pt, samp, step_keys):
+        logits, cache = Dec.decode_step(params, self.cfg, cache, tok, pos,
+                                        page_tables=pt)
         nxt = Smp.sample_tokens(logits, step_keys, samp["temperature"],
                                 samp["top_k"], samp["top_p"])
         return nxt, cache
+
+    def _chunk_fn(self, start: int, bucket_len: int):
+        key = (start, bucket_len)
+        if key not in self._chunk_fns:
+            cfg = self.cfg
+            self._chunk_fns[key] = jax.jit(
+                lambda p, cache, toks, pt, wt, li: Dec.prefill_chunk(
+                    p, cfg, cache, toks, pt, start=start, last_index=li,
+                    bucket_len=bucket_len, write_tables=wt),
+                donate_argnums=(1,))
+        return self._chunk_fns[key]
 
     def submit(self, request: Request) -> int:
         """Queue a request; it is admitted at the next step() boundary."""
@@ -191,38 +263,94 @@ class Engine:
             "frontend_embeds — use generate()"
         assert request.prompt.size + request.max_new_tokens <= self.max_len + 1, \
             "prompt + max_new_tokens exceeds engine max_len"
+        assert self.pool.pages_needed(
+            int(request.prompt.size), request.max_new_tokens) \
+            <= self.pool.num_pages - 1, \
+            "request needs more pages than the pool owns"
         if request.request_id is None:
             request.request_id = self._next_id
             self._next_id += 1
         self._queue.append((request, self._step_count))
         return request.request_id
 
+    def _sample_first(self, logits, sampling: SamplingSpec) -> int:
+        samp1 = Smp.spec_arrays([sampling])
+        return int(Smp.sample_tokens(
+            logits, Smp.fold_step_keys(samp1["keys"], 0),
+            samp1["temperature"], samp1["top_k"], samp1["top_p"])[0])
+
     def _admit_one(self, slot: int, request: Request, submit_step: int):
         prompt = request.prompt
         L = int(prompt.size)
-        toks, last_index = self._pad_prompts([prompt])
-        logits, cache1 = self._prefill(self.params, {"tokens": toks},
-                                       last_index)
         base_key = jax.random.PRNGKey(request.sampling.seed)
-        samp1 = Smp.spec_arrays([request.sampling])
-        tok0 = int(Smp.sample_tokens(
-            logits, Smp.fold_step_keys(samp1["keys"], 0),
-            samp1["temperature"], samp1["top_k"], samp1["top_p"])[0])
+        graph_key = self._graph_key(L) if self._chunked else None
         state = SlotState(
-            request_id=request.request_id, pos=L, generated=1,
+            request_id=request.request_id, pos=L, generated=0,
             max_new=request.max_new_tokens, stop_token=request.stop_token,
-            tokens=[tok0], prompt_len=L,
-            admit_step=self._step_count)
-        self.pool.admit(slot, cache1, state)
-        self._slot_meta[slot] = (request.sampling, base_key, submit_step)
+            tokens=[], prompt_len=L, admit_step=self._step_count,
+            phase="prefill" if self._chunked else "decode")
+        self.pool.allocate(slot, prompt, request.max_new_tokens,
+                           graph_key=graph_key, state=state)
+        self._slot_meta[slot] = (request, base_key, submit_step)
+        if self._chunked:
+            # prefix-shared pages cover whole chunks -> skip their compute;
+            # the final chunk (holding position L-1) always runs
+            C = self._chunk_tokens
+            state.prefill_pos = (state.shared_pages
+                                 * self.pool.page_size // C) * C
+        else:
+            toks, last_index = self._pad_prompts([prompt])
+            logits, cache1 = self._admit_prefill(
+                self.params, {"tokens": toks}, last_index,
+                self._page_bucket(L))
+            self.pool.write_prefill(slot, cache1)
+            tok0 = self._sample_first(logits, request.sampling)
+            state.tokens, state.generated = [tok0], 1
+
+    def _run_prefill_chunk(self, slot: int):
+        """One chunk of one prefilling slot: forward [start, start+C) into
+        its pages; on the final chunk, sample the first token (TTFT)."""
+        s = self.pool.slots[slot]
+        request, _, _ = self._slot_meta[slot]
+        prompt, L = request.prompt, s.prompt_len
+        start = s.prefill_pos
+        # the final chunk is clamped so it never crosses the logical cache
+        # end (the page table has no rows past max_pages); C is a function
+        # of `start`, so the (start, bucket) executable key still holds
+        S_log = self.pool.max_pages * self.pool.page_size
+        C = min(self._chunk_tokens, S_log - start)
+        toks = np.zeros((1, C), np.int32)
+        real = prompt[start:start + C]
+        toks[0, :real.size] = real
+        # never write prefix-shared pages (refcount > 1): the write view of
+        # the table redirects their blocks to the dump page, while reads
+        # keep resolving to the real shared pages
+        wt = self.pool.table_row(slot)
+        wt[0, :s.shared_pages] = 0
+        fn = self._chunk_fn(start, self._page_bucket(L))
+        logits, self.pool.cache = fn(
+            self.params, self.pool.cache, jnp.asarray(toks),
+            jnp.asarray(self.pool.table_row(slot)), jnp.asarray(wt),
+            jnp.asarray([L - 1], np.int32))
+        s.prefill_pos = start + C
+        self.pool.register_prefix(slot, min(s.prefill_pos, L), prompt,
+                                  self._graph_key(L))
+        if s.prefill_pos >= L:                 # prompt done -> first token
+            tok0 = self._sample_first(logits, request.sampling)
+            s.tokens, s.generated = [tok0], 1
+            s.phase = "decode"
+            s.admit_step = self._step_count    # the TTFT event
 
     def _finish(self, slot: int, reason: str) -> Result:
         state = self.pool.slots[slot]
         _, _, submit_step = self._slot_meta.pop(slot)
+        pages_used = len(state.pages)
+        shared = state.shared_pages
         self.pool.evict(slot)
         return Result(request_id=state.request_id, tokens=state.tokens,
                       prompt_len=state.prompt_len, finish_reason=reason,
-                      ttft_steps=state.admit_step - submit_step + 1)
+                      ttft_steps=state.admit_step - submit_step + 1,
+                      pages_used=pages_used, shared_prefix_pages=shared)
 
     def _slot_done(self, state: SlotState) -> Optional[str]:
         if state.stop_token is not None and \
@@ -232,22 +360,57 @@ class Engine:
             return "length"
         return None
 
+    def stats(self) -> Optional[PoolStats]:
+        """Page-pool snapshot; None for configs without a slot path
+        (encdec / patch archs serve through generate() only)."""
+        p = self.pool
+        if p is None:
+            return None
+        return PoolStats(
+            num_pages=p.num_pages - 1, page_size=p.page_size,
+            pages_in_use=p.pages_in_use,
+            peak_pages_in_use=p.peak_pages_in_use,
+            prefix_hits=p.prefix_hits,
+            prefix_pages_shared=p.prefix_pages_shared,
+            requests_admitted=p.requests_admitted,
+            kv_bytes_per_page=p.kv_bytes_per_page())
+
     def step(self) -> List[Result]:
-        """One serving step: admit queued requests into free slots, then one
-        batched decode step over every active slot.  Returns newly finished
+        """One serving step: admit queued requests into free slots, run one
+        prefill chunk per admitted-but-unfinished prompt, then one batched
+        decode step over every decoding slot.  Returns newly finished
         requests."""
         finished: List[Result] = []
+        if self.pool is None:          # no slot path (encdec/patch archs)
+            self._step_count += 1
+            return finished
 
         for slot in self.pool.free_slots():
             if not self._queue:
                 break
+            request, _ = self._queue[0]
+            graph_key = (self._graph_key(int(request.prompt.size))
+                         if self._chunked else None)
+            if not self.pool.can_admit(request.prompt,
+                                       request.max_new_tokens, graph_key):
+                break                  # head-of-line: wait for pages
             request, submit_step = self._queue.popleft()
             self._admit_one(slot, request, submit_step)
-            reason = self._slot_done(self.pool.slots[slot])
-            if reason:                 # stop/length hit on the prefill token
-                finished.append(self._finish(slot, reason))
+            s = self.pool.slots[slot]
+            if s.phase == "decode":
+                reason = self._slot_done(s)
+                if reason:             # stop/length hit on the prefill token
+                    finished.append(self._finish(slot, reason))
 
-        active = self.pool.active_slots()
+        for slot in self.pool.prefill_slots():
+            self._run_prefill_chunk(slot)
+            s = self.pool.slots[slot]
+            if s.phase == "decode":
+                reason = self._slot_done(s)
+                if reason:
+                    finished.append(self._finish(slot, reason))
+
+        active = self.pool.decode_slots()
         if active:
             B = self.capacity
             tok = np.zeros((B, 1), np.int32)
@@ -256,15 +419,18 @@ class Engine:
             keys = [jax.random.PRNGKey(0)] * B
             for i in active:
                 s = self.pool.slots[i]
+                self.pool.ensure_writable(i, s.pos // self.pool.page_size)
                 tok[i, 0] = s.tokens[-1]
                 counts[i] = s.generated
-                specs[i], keys[i] = self._slot_meta[i][0], self._slot_meta[i][1]
+                specs[i] = self._slot_meta[i][0].sampling
+                keys[i] = self._slot_meta[i][1]
             samp = Smp.spec_arrays(specs)
             step_keys = jax.vmap(jax.random.fold_in)(
                 jnp.stack(keys), jnp.asarray(counts))
             nxt, self.pool.cache = self._slot_step(
                 self.params, self.pool.cache, jnp.asarray(tok),
-                jnp.asarray(self.pool.position_vector()), samp, step_keys)
+                jnp.asarray(self.pool.position_vector()),
+                jnp.asarray(self.pool.table_matrix()), samp, step_keys)
             nxt = np.asarray(nxt)
             for i in active:
                 s = self.pool.slots[i]
@@ -281,6 +447,7 @@ class Engine:
     def drain(self) -> List[Result]:
         """Run step() until the queue and every slot are empty."""
         results: List[Result] = []
-        while self._queue or self.pool.active_slots():
+        while self._queue or (self.pool is not None
+                              and self.pool.active_slots()):
             results.extend(self.step())
         return sorted(results, key=lambda r: r.request_id)

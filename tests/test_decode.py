@@ -125,3 +125,138 @@ def test_cache_spec_shapes_match_prefill():
     for s, c in zip(jax.tree.leaves(jax.tree.map(lambda x: x.shape, spec)),
                     jax.tree.leaves(jax.tree.map(lambda x: x.shape, cache))):
         assert s == c
+
+
+# --------------------------------------------------------------------------
+# paged cache: layout parity, chunked prefill, fallback boundary
+# --------------------------------------------------------------------------
+
+def _bb_cfg(b=8, w=3, g=1, r=1, layers=2, maxseq=256, kind="bigbird",
+            impl="blockified"):
+    spec = AttentionSpec(kind=kind, causal=True, block_size=b,
+                         num_window_blocks=w, num_global_blocks=g,
+                         num_random_blocks=r, impl=impl)
+    return M.ModelConfig(name="paged", d_model=32, num_layers=layers,
+                         num_heads=4, num_kv_heads=2, d_ff=64,
+                         vocab_size=128, attn=spec, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=maxseq)
+
+
+def _paged_from_contiguous(cfg, cache, maxlen, num_pages, perm):
+    """Copy a contiguous cache (B, H, maxlen, dh) into a paged tree using
+    the (B, max_pages) page assignment `perm`."""
+    b = D.page_size_for(cfg)
+    paged = D.cache_spec(cfg, perm.shape[0], maxlen, abstract=False,
+                         num_pages=num_pages)
+    for grp in cache:
+        for key in ("k", "v"):
+            src = cache[grp][key]          # (B, H, maxlen, dh)
+            dst = paged[grp][key]          # (P, H, b, dh)
+            for i in range(perm.shape[0]):
+                for j in range(perm.shape[1]):
+                    dst = dst.at[perm[i, j]].set(
+                        src[i, :, j * b:(j + 1) * b])
+            paged[grp][key] = dst
+    return paged
+
+
+@pytest.mark.parametrize("maxlen,expect_bb", [(64, True), (32, False)])
+def test_paged_decode_step_bitwise_matches_contiguous(maxlen, expect_bb):
+    """decode_step over the paged cache must equal the slot-contiguous
+    cache EXACTLY (same gather order, same contractions) — in both the
+    bounded-bigbird read and the full-fallback read (short cache)."""
+    cfg = _bb_cfg()
+    params = M.init(cfg, KEY)
+    B, S = 2, maxlen - 9
+    toks = jax.random.randint(KEY, (B, S), 4, cfg.vocab_size)
+    _, cache = D.prefill(params, cfg, {"tokens": toks, "labels": toks}, maxlen)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 4, cfg.vocab_size)
+    pos = jnp.asarray([S, S - 7], jnp.int32)
+
+    b = D.page_size_for(cfg)
+    max_pages = maxlen // b
+    P = 2 * B * max_pages + 1
+    perm = np.random.default_rng(7).permutation(
+        np.arange(1, P))[:B * max_pages].reshape(B, max_pages).astype(np.int32)
+    paged = _paged_from_contiguous(cfg, cache, maxlen, P, perm)
+
+    lg_c, _ = D.decode_step(params, cfg, cache, nxt, pos)
+    lg_p, newp = D.decode_step(params, cfg, paged, nxt, pos,
+                               page_tables=jnp.asarray(perm))
+    np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p))
+    # the paged write landed each row's KV on its own page at pos % b
+    for i in range(B):
+        pg = perm[i, int(pos[i]) // b]
+        row = newp["layer0"]["k"][pg, :, int(pos[i]) % b]
+        assert float(jnp.abs(row).sum()) > 0
+
+
+def test_chunked_prefill_equals_one_shot():
+    """prefill_chunk over [0,C), [C,2C), ... must build the same cache and
+    final-token logits as one bucketed one-shot prefill."""
+    cfg = _bb_cfg()
+    params = M.init(cfg, KEY)
+    L, maxlen, C = 40, 64, 16
+    b = D.page_size_for(cfg)
+    prompt = jax.random.randint(KEY, (1, L), 4, cfg.vocab_size)
+
+    bucket = 64                                    # pow2 bucket of 40
+    toks_pad = jnp.zeros((1, bucket), jnp.int32).at[:, :L].set(prompt)
+    lg_ref, cache_ref = D.prefill(params, cfg, {"tokens": toks_pad}, bucket,
+                                  last_index=jnp.asarray([L - 1]))
+
+    max_pages = maxlen // b
+    P = 2 * max_pages
+    need = -(-L // b)
+    pt = np.zeros((1, max_pages), np.int32)
+    pt[0, :need] = np.arange(1, need + 1)
+    paged = D.cache_spec(cfg, 1, maxlen, abstract=False, num_pages=P)
+    lg = None
+    for start in range(0, -(-L // C) * C, C):
+        toks = np.zeros((1, C), np.int32)
+        real = np.asarray(prompt[0, start:start + C])
+        toks[0, :real.size] = real
+        lg, paged = D.prefill_chunk(
+            params, cfg, paged, jnp.asarray(toks), jnp.asarray(pt),
+            start=start, last_index=jnp.asarray([L - 1]), bucket_len=bucket)
+    np.testing.assert_allclose(lg, lg_ref, atol=2e-5, rtol=2e-5)
+    # written pages hold the same KV rows the one-shot cache holds
+    for grp in ("layer0", "layer1"):
+        for key in ("k", "v"):
+            for j in range(need):
+                hi = min((j + 1) * b, L)
+                np.testing.assert_allclose(
+                    paged[grp][key][pt[0, j], :, :hi - j * b],
+                    cache_ref[grp][key][0, :, j * b:hi], atol=2e-5)
+
+
+def test_bounded_decode_fallback_boundary():
+    """Cache lengths just below / at / above the pattern-coverage threshold
+    T = g+w+r blocks: below T the bigbird read must fall back to full
+    (bit-identical to a full-attention spec); at and above T the bounded
+    read must match the teacher-forced pattern forward."""
+    b, w, g, r = 8, 3, 1, 1
+    T = g + w + r                                   # 5 blocks -> 40 tokens
+    for nb, bounded in ((T - 1, False), (T, True), (T + 3, True)):
+        MAX = nb * b
+        cfg = _bb_cfg(b=b, w=w, g=g, r=r, maxseq=MAX)
+        params = M.init(cfg, KEY)
+        S = MAX - 1
+        toks = jax.random.randint(KEY, (1, S), 4, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        _, cache = D.prefill(params, cfg, batch, MAX)
+        nxt = jax.random.randint(jax.random.PRNGKey(1), (1, 1), 4,
+                                 cfg.vocab_size)
+        lg_dec, _ = D.decode_step(params, cfg, cache, nxt, S)
+        toks2 = jnp.concatenate([toks, nxt], axis=1)
+        full = M.logits_fn(params, cfg, dict(batch, tokens=toks2,
+                                             labels=toks2))
+        assert float(jnp.max(jnp.abs(lg_dec - full[:, S]))) < 2e-3, \
+            f"nb={nb} parity with teacher-forced forward"
+        if not bounded:
+            # below threshold the bigbird cache read IS the full read
+            cfg_full = _bb_cfg(b=b, w=w, g=g, r=r, maxseq=MAX, kind="full")
+            lg_full, _ = D.decode_step(params, cfg_full, cache, nxt, S)
+            np.testing.assert_array_equal(np.asarray(lg_dec),
+                                          np.asarray(lg_full))

@@ -141,3 +141,51 @@ def test_wkv6_decay_forgets_past():
     v2 = v.at[:, :4].set(0.0)
     out2 = ops.wkv6_scan(r, k2, v2, w, u, chunk=8)
     np.testing.assert_allclose(out[:, -1], out2[:, -1], atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# paged bounded-decode kernel (serving path, forward-only)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 2)])
+def test_paged_decode_kernel_matches_gather(Hq, Hkv):
+    """Pallas paged-decode kernel vs the XLA two-level-gather baseline in
+    models/decode (interpret mode on CPU), over permuted page tables,
+    heterogeneous positions and GQA groups."""
+    from repro.models import decode as D
+    b, max_pages, P, dh, B = 8, 16, 70, 16, 3
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=3,
+                                 num_global_blocks=1, num_random_blocks=1,
+                                 causal=True, seed=2)
+    kc = _mk((P, Hkv, b, dh), jnp.float32)
+    vc = _mk((P, Hkv, b, dh), jnp.float32)
+    q = _mk((B, Hq, 1, dh), jnp.float32)
+    perm = RNG.permutation(np.arange(1, P))[:B * max_pages]
+    pt = jnp.asarray(perm.reshape(B, max_pages).astype(np.int32))
+    pos = jnp.asarray([7, 66, 127], jnp.int32)    # first/middle/last block
+    base = D._bigbird_decode_attn_paged(q, kc, vc, pt, pos, cfg, 0,
+                                        impl="gather")
+    kern = ops.bigbird_paged_decode_attn(q, kc, vc, pt, pos, cfg, layer=0)
+    np.testing.assert_allclose(kern, base, atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_kernel_masks_unwritten_tail():
+    """Page-table entries past the allocated region point at the dump page;
+    its (garbage) contents must not leak into the output."""
+    from repro.models import decode as D
+    b, max_pages, P, dh, B, H = 8, 8, 20, 16, 1, 2
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=2,
+                                 num_global_blocks=1, num_random_blocks=1,
+                                 causal=True)
+    kc = _mk((P, H, b, dh), jnp.float32)
+    vc = _mk((P, H, b, dh), jnp.float32)
+    q = _mk((B, H, 1, dh), jnp.float32)
+    pos = jnp.asarray([3 * b + 2], jnp.int32)     # only blocks 0..3 written
+    pt = np.zeros((B, max_pages), np.int32)
+    pt[0, :4] = [5, 6, 7, 8]
+    out1 = ops.bigbird_paged_decode_attn(q, kc, vc, jnp.asarray(pt), pos, cfg)
+    kc2 = kc.at[0].add(99.0)                      # poison the dump page
+    vc2 = vc.at[0].add(99.0)
+    out2 = ops.bigbird_paged_decode_attn(q, kc2, vc2, jnp.asarray(pt), pos,
+                                         cfg)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)

@@ -241,3 +241,185 @@ def test_slot_stop_token_finishes_early():
     res = eng.drain()[0]
     assert res.finish_reason == "stop"
     assert res.tokens == free_run.tokens[:3]
+
+
+# --------------------------------------------------------------------------
+# paged pool: chunked prefill, prefix sharing, CoW, bucketed max_new
+# --------------------------------------------------------------------------
+
+def test_generate_max_new_bucketing_shares_executable():
+    """max_new values in one power-of-two bucket share one compiled loop,
+    and greedy streams agree on the common prefix (the traced `limit` only
+    stops the loop early)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    engine = Engine(cfg, params, max_len=64, capacity=1)
+    prompt = np.asarray(jax.random.randint(KEY, (16,), 4, cfg.vocab_size))
+    a = engine.generate([prompt], max_new=5)
+    b = engine.generate([prompt], max_new=12)
+    assert len(engine._generate) == 1          # both hit the 16 bucket
+    assert a.tokens.shape[1] == 5 and b.tokens.shape[1] == 12
+    np.testing.assert_array_equal(a.tokens[0], b.tokens[0, :5])
+    c = engine.generate([prompt], max_new=20)  # new bucket: 32
+    assert len(engine._generate) == 2
+    np.testing.assert_array_equal(b.tokens[0], c.tokens[0, :12])
+
+
+def test_chunked_prefill_engine_matches_one_shot_engine():
+    """Streams from a chunked-prefill engine must equal the one-shot-admit
+    engine token for token (chunked prefill is exact, not approximate)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(11)
+    reqs = lambda: [
+        Request(prompt=rng1.integers(4, cfg.vocab_size, size=l)
+                .astype(np.int32),
+                max_new_tokens=6, sampling=SamplingSpec(seed=i))
+        for i, (rng1, l) in enumerate(
+            [(np.random.default_rng(s), l) for s, l in
+             ((1, 19), (2, 40), (3, 11))])]
+    one = Engine(cfg, params, max_len=64, capacity=3, prefill_chunk=None)
+    chk = Engine(cfg, params, max_len=64, capacity=3, prefill_chunk=2)
+    assert not one._chunked and chk._chunked
+    for r in reqs():
+        one.submit(r)
+    for r in reqs():
+        chk.submit(r)
+    a, b = one.drain(), chk.drain()
+    for ra, rb in zip(a, b):
+        assert ra.tokens == rb.tokens, (ra.request_id, ra.tokens, rb.tokens)
+
+
+def test_shared_prefix_refcount_lifecycle():
+    """Co-resident requests with a common prompt prefix share the global-
+    prefix page (admitted once, refcount 2); evicting one sharer keeps the
+    page alive for the other, whose stream stays solo-identical; draining
+    everything returns every page to the free list."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(4, cfg.vocab_size, size=8).astype(np.int32)  # 1 page
+    tails = [rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+             for n in (20, 24)]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+
+    solo = []
+    for i, p in enumerate(prompts):
+        eng = Engine(cfg, params, max_len=64, capacity=2)
+        eng.submit(Request(prompt=p, max_new_tokens=12,
+                           sampling=SamplingSpec(seed=i)))
+        solo.append(eng.drain()[0].tokens)
+
+    eng = Engine(cfg, params, max_len=64, capacity=2)
+    eng.submit(Request(prompt=prompts[0], max_new_tokens=6,
+                       sampling=SamplingSpec(seed=0)))
+    eng.step(); eng.step()                    # req0 resident, prefix indexed
+    eng.submit(Request(prompt=prompts[1], max_new_tokens=12,
+                       sampling=SamplingSpec(seed=1)))
+    eng.step()
+    s1 = eng.pool.slots[1]
+    assert s1 is not None and s1.shared_pages == 1
+    shared_pg = s1.pages[0]
+    assert eng.pool.refcount[shared_pg] == 2  # both sharers still resident
+    assert eng.pool.prefix_hits == 1
+    results = {r.request_id: r for r in eng.drain()}
+    # req0 (max_new=6) finished and was evicted first; the shared page must
+    # have survived for req1, whose stream matches its solo run exactly
+    assert results[1].tokens == solo[1]
+    assert results[1].shared_prefix_pages == 1
+    assert results[0].tokens == solo[0][:6]
+    assert eng.pool.refcount[shared_pg] == 0
+    assert len(eng.pool._free) == eng.pool.num_pages - 1   # all returned
+    assert not eng.pool._prefix and not eng.pool._page_key
+
+
+def test_copy_on_write_guard():
+    """A write aimed at a page with refcount > 1 must move the writer onto
+    a private copy with identical contents (sharers unaffected)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    eng = Engine(cfg, params, max_len=64, capacity=2)
+    rng = np.random.default_rng(9)
+    for i in range(2):
+        eng.submit(Request(prompt=rng.integers(4, cfg.vocab_size, size=12)
+                           .astype(np.int32),
+                           max_new_tokens=10, sampling=SamplingSpec(seed=i)))
+    eng.step()
+    pool = eng.pool
+    # force slot1's first page to alias slot0's first page (artificial share)
+    old = pool.slots[1].pages[0]
+    alias = pool.slots[0].pages[0]
+    pool.refcount[old] -= 1
+    pool._free.append(old)
+    pool.slots[1].pages[0] = alias
+    pool.refcount[alias] += 1
+    pool.page_tables[1, 0] = alias
+    before = np.asarray(pool.cache["layer0"]["k"][alias])
+    assert pool.ensure_writable(1, 0) is True
+    new = pool.slots[1].pages[0]
+    assert new != alias and pool.refcount[alias] == 1
+    assert pool.refcount[new] == 1 and pool.page_tables[1, 0] == new
+    np.testing.assert_array_equal(
+        np.asarray(pool.cache["layer0"]["k"][new]), before)
+    assert pool.ensure_writable(1, 0) is False   # already private
+
+
+def test_page_exhaustion_queues_requests():
+    """A pool smaller than the working set serializes admissions instead of
+    failing; every request still completes with full-length output."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(6)
+    # each request needs ceil((24+8-1)/8)=4 pages; give the pool 5 usable
+    eng = Engine(cfg, params, max_len=64, capacity=3, num_pages=6)
+    for i in range(3):
+        eng.submit(Request(prompt=rng.integers(4, cfg.vocab_size, size=24)
+                           .astype(np.int32),
+                           max_new_tokens=8, sampling=SamplingSpec(seed=i)))
+    results = eng.drain()
+    assert [r.request_id for r in results] == [0, 1, 2]
+    assert all(len(r.tokens) == 8 for r in results)
+    assert eng.pool.peak_pages_in_use <= 5
+
+
+def test_scanned_config_paged_serving():
+    """Scanned stacks (repeats > 1) page their (repeats, P, H, b, dh)
+    leaves through the same tables; chunked == one-shot there too."""
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    cfg = M.ModelConfig(name="scan-serve", d_model=32, num_layers=4,
+                        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
+                        attn=bb, dtype=jnp.float32, scan_layers=True,
+                        remat="none", loss_chunk=32, max_seq=256)
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(4, 128, size=l).astype(np.int32) for l in (19, 33)]
+
+    def run(chunk):
+        eng = Engine(cfg, params, max_len=64, capacity=2,
+                     prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=p, max_new_tokens=6,
+                               sampling=SamplingSpec(seed=i)))
+        return [r.tokens for r in eng.drain()]
+
+    assert run(None) == run(2)
+
+
+def test_final_chunk_clamped_at_logical_cache_end():
+    """A near-max_len prompt whose last chunk would cross max_pages must be
+    served by a clamped final chunk, not crash (and still match one-shot)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    # max_len 40 -> 5 pages; chunk 4 blocks = 32 tokens; 36-token prompt:
+    # second chunk would cover blocks 4..7 but the table ends at block 5
+    prompt = np.asarray(jax.random.randint(KEY, (36,), 4, cfg.vocab_size))
+    chk = Engine(cfg, params, max_len=40, capacity=1, prefill_chunk=4)
+    chk.submit(Request(prompt=prompt, max_new_tokens=4,
+                       sampling=SamplingSpec(seed=0)))
+    got = chk.drain()[0].tokens
+    one = Engine(cfg, params, max_len=40, capacity=1, prefill_chunk=None)
+    one.submit(Request(prompt=prompt, max_new_tokens=4,
+                       sampling=SamplingSpec(seed=0)))
+    assert got == one.drain()[0].tokens
