@@ -82,7 +82,7 @@ def main():
     mono = fracs[128] < fracs[256] < fracs[512]
     row("ctxlen_longer_resolves_more", 0.0,
         f"monotone={mono} (exact availability bound; trained losses at 80 "
-        f"CPU steps don't yet exploit it — see building_blocks note)")
+        "CPU steps don't yet exploit it — see building_blocks note)")
     return losses
 
 

@@ -1,0 +1,121 @@
+"""CI perf gate: diff a fresh SERVING_JSON against the committed baseline.
+
+    python benchmarks/perf_gate.py --fresh bench-serving.txt \
+        [--baseline benchmarks/baselines/BENCH_serving.json]
+
+Two classes of metric, gated differently:
+
+* STRUCTURAL metrics (page accounting) are deterministic functions of the
+  engine code, independent of machine speed, and gate HARD: any growth of
+  `kv_bytes_per_request_paged` beyond 1%, or a change of `page_size` /
+  `max_concurrency_paged` / `kv_reduction`, fails the build.  A memory
+  regression in the paged pool cannot hide behind a fast runner.
+* TIMING metrics (ttft_s, decode_tok_s, continuous_tok_s) gate on wide
+  relative bands (default 4x), because shared CI runners are noisy; the
+  bands catch order-of-magnitude regressions (a de-jitted hot loop, an
+  accidental recompile per token) without flaking on scheduler jitter.
+
+Exit code 0 = within bands, 1 = regression, 2 = usage/parse error.
+
+Re-baselining: land the new numbers in
+`benchmarks/baselines/BENCH_serving.json` in the same PR; put
+`[bench-baseline]` in the HEAD commit's message to skip the gate for that
+run (the CI workflow checks exactly the commit under test, so the escape
+hatch cannot leak to later runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BASELINE = "benchmarks/baselines/BENCH_serving.json"
+
+STRUCTURAL_EXACT = ("page_size", "max_concurrency_paged", "kv_reduction")
+KV_GROWTH_TOL = 0.01  # hard gate: paged KV bytes/request may grow <= 1%
+
+
+def parse_serving_json(text: str) -> dict:
+    """Extract the SERVING_JSON payload from benchmark output (or accept a
+    bare JSON document, for pre-extracted baselines)."""
+    for line in text.splitlines():
+        if line.startswith("SERVING_JSON "):
+            return json.loads(line[len("SERVING_JSON "):])
+    return json.loads(text)
+
+
+def check(fresh: dict, base: dict, timing_band: float) -> list:
+    """Compare fresh vs baseline; returns a list of violation strings."""
+    bad = []
+
+    kv_f = fresh["kv_bytes_per_request_paged"]
+    kv_b = base["kv_bytes_per_request_paged"]
+    if kv_f > kv_b * (1.0 + KV_GROWTH_TOL):
+        bad.append(
+            f"kv_bytes_per_request_paged grew {kv_b} -> {kv_f} "
+            f"(hard gate: <= {KV_GROWTH_TOL:.0%})"
+        )
+    for key in STRUCTURAL_EXACT:
+        if fresh.get(key) != base.get(key):
+            bad.append(f"{key} changed {base.get(key)} -> {fresh.get(key)}")
+
+    if fresh["ttft_s"] > base["ttft_s"] * timing_band:
+        bad.append(
+            f"ttft_s {fresh['ttft_s']} vs baseline {base['ttft_s']} "
+            f"(band {timing_band}x)"
+        )
+    for key in ("decode_tok_s", "continuous_tok_s"):
+        if fresh[key] * timing_band < base[key]:
+            bad.append(
+                f"{key} {fresh[key]} vs baseline {base[key]} "
+                f"(band {timing_band}x)"
+            )
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="benchmark output file")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument(
+        "--timing-band",
+        type=float,
+        default=4.0,
+        help="allowed relative slowdown for timing metrics (default 4x)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.fresh) as f:
+            fresh = parse_serving_json(f.read())
+        with open(args.baseline) as f:
+            base = parse_serving_json(f.read())
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"perf-gate: cannot load inputs: {e}")
+        return 2
+
+    try:
+        bad = check(fresh, base, args.timing_band)
+    except KeyError as e:
+        print(f"perf-gate: metric missing from SERVING_JSON: {e}")
+        return 2
+    if bad:
+        print("perf-gate: REGRESSION vs", args.baseline)
+        for v in bad:
+            print("  -", v)
+        print(
+            "re-baseline intentionally: update the baseline file and push "
+            "with [bench-baseline] in the commit message"
+        )
+        return 1
+    print(
+        f"perf-gate: OK (kv {fresh['kv_bytes_per_request_paged']}B/req, "
+        f"ttft {fresh['ttft_s']}s, decode {fresh['decode_tok_s']} tok/s, "
+        f"continuous {fresh['continuous_tok_s']} tok/s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

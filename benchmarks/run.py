@@ -23,6 +23,32 @@ BENCHES = ["scaling", "blockify", "building_blocks", "encdec_parity",
            "context_length", "roofline_table", "serving"]
 
 
+def _run_one(name: str) -> bool:
+    """Import + run one benchmark; True on success.
+
+    Failure handling is deliberately broad: a sub-benchmark that raises,
+    or that aborts itself via SystemExit (argparse errors included), must
+    turn into a nonzero harness exit — a silently-green failing bench
+    would defeat the CI perf gate that diffs this run's SERVING_JSON.
+    The harness's own argv is hidden from sub-benchmark argparsers."""
+    argv = sys.argv
+    sys.argv = [name]
+    try:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        mod.main()
+        return True
+    except SystemExit as e:           # sub-bench bailed out on its own —
+        traceback.print_exc()         # even exit(0) means it never produced
+        print(f"{name},0.0,ERROR:SystemExit({e.code})")   # its rows
+        return False
+    except Exception as e:            # report and continue with the rest
+        traceback.print_exc()
+        print(f"{name},0.0,ERROR:{type(e).__name__}")
+        return False
+    finally:
+        sys.argv = argv
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
@@ -32,13 +58,8 @@ def main() -> None:
     for name in names:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
-        try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
-        except Exception as e:  # pragma: no cover - report and continue
+        if not _run_one(name):
             failures.append(name)
-            traceback.print_exc()
-            print(f"{name},0.0,ERROR:{type(e).__name__}")
         print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
     if failures:
         print(f"# FAILURES: {failures}")

@@ -14,11 +14,21 @@ replaced (capacity x max_len reservation per slot):
   reduction is judged against), max_concurrency_{paged,slot} under the same
   HBM budget.
 
+`--mesh DxM` serves the continuous-batching section over a (data, model)
+mesh (DESIGN.md §Mesh-parallel serving): slots/pages shard over data, kv
+heads over model.  SERVING_JSON then carries per-shard KV bytes and the
+aggregate tok/s, plus `outputs_digest` — a hash of every request's token
+stream, which must be IDENTICAL across mesh shapes (the sharded
+bit-identity contract; the CI multi-device job diffs 2x2 against 1x1).
+
 Prints the standard `name,us_per_call,derived` CSV rows plus one JSON line
-(`SERVING_JSON {...}`) for the bench trajectory.
+(`SERVING_JSON {...}`) for the bench trajectory and the CI perf gate
+(benchmarks/perf_gate.py).
 """
 from __future__ import annotations
 
+import argparse
+import hashlib
 import json
 import time
 
@@ -46,9 +56,27 @@ def _build():
     return cfg, params
 
 
-def main():
+def _digest(results) -> str:
+    """Schedule-independent hash of every request's token stream."""
+    payload = json.dumps(sorted((r.request_id, r.tokens) for r in results))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve the continuous section over a (data, model) "
+                         "mesh, e.g. 2x2 (needs D*M visible devices)")
+    args = ap.parse_args(argv)
+    mesh = None
+    mesh_name = "1x1"
+    if args.mesh and args.mesh != "1x1":
+        from repro.serve import mesh as Mx
+        mesh = Mx.parse_mesh(args.mesh)
+        mesh_name = args.mesh
+
     cfg, params = _build()
-    engine = Engine(cfg, params, max_len=MAXLEN, capacity=B)
+    engine = Engine(cfg, params, max_len=MAXLEN, capacity=B, mesh=mesh)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(4, cfg.vocab_size, size=PROMPT).astype(np.int32)
                for _ in range(B)]
@@ -127,20 +155,24 @@ def main():
     row("serving_decode", (t_gen - ttft) / dec_steps * 1e6,
         f"{dec_tps:.1f}tok/s")
     row("serving_continuous", t_cb / max(cb_toks, 1) * 1e6,
-        f"{cb_tps:.1f}tok/s")
+        f"{cb_tps:.1f}tok/s;mesh={mesh_name}")
     row("serving_kv_bytes_req", kv_paged,
         f"paged;slot={kv_slot:.0f};-{reduction * 100:.0f}%")
     row("serving_concurrency", conc_paged,
         f"paged-vs-slot={conc_slot};same-HBM")
     print("SERVING_JSON " + json.dumps({
         "batch": B, "prompt_len": PROMPT, "gen": GEN, "max_len": MAXLEN,
+        "mesh": mesh_name,
+        "data_shards": st.data_shards,
         "ttft_s": round(ttft, 4),
         "decode_tok_s": round(dec_tps, 1),
         "continuous_tok_s": round(cb_tps, 1),
         "continuous_requests": len(results),
+        "outputs_digest": _digest(results),
         "page_size": st.page_size,
         "kv_bytes_per_request_paged": round(kv_paged),
         "kv_bytes_per_request_slot": round(kv_slot),
+        "kv_bytes_per_shard": st.kv_bytes_per_shard,
         "kv_reduction": round(reduction, 4),
         "unused_tail_frac": round(tail_frac, 4),
         "unused_tail_frac_pages": round(tail_pages, 4),
@@ -149,6 +181,7 @@ def main():
         "prefix_hits": st.prefix_hits,
         "prefix_pages_shared": st.prefix_pages_shared,
         "peak_pages_in_use": st.peak_pages_in_use,
+        "peak_pages_per_shard": st.peak_pages_per_shard,
     }))
 
 

@@ -6,7 +6,6 @@ bigbird-base config.  ``input_specs`` returns ShapeDtypeStruct stand-ins
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 import jax

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.attention import AttentionSpec
-from repro.models.model import LayerSpec, ModelConfig
+from repro.models.model import ModelConfig
 
 FULL_CAUSAL = AttentionSpec(kind="full", causal=True)
 

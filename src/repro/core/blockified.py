@@ -18,7 +18,6 @@ the beyond-paper fused Pallas kernel.  Both must match
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

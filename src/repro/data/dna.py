@@ -35,7 +35,7 @@ def synthesize_genome(cfg: GenomeConfig):
     rng = np.random.default_rng(cfg.seed)
     # GC-content drift: mixture of two base distributions over segments
     n = cfg.length
-    seg = rng.integers(2000, 10000)
+    rng.integers(2000, 10000)        # segment-length draw advances rng
     probs_at = np.array([0.3, 0.2, 0.2, 0.3])
     probs_gc = np.array([0.2, 0.3, 0.3, 0.2])
     out = []
@@ -132,7 +132,6 @@ def mlm_batches(genome: str, tok: DnaTokenizer, batch: int, seq_len: int,
     """Infinite MLM batch generator over the genome."""
     rng = np.random.default_rng(seed)
     enc_cache = tok.encode(genome[:600_000])
-    step = 0
     while True:
         B = batch
         tokens = np.zeros((B, seq_len), dtype=np.int32)

@@ -32,11 +32,15 @@ _PREFS = {
     "kv_heads": ("model",),
     "experts": ("model",),
     "mlp": ("model",),
-    # paged-KV physical page dim: REPLICATE.  Page ids are host-assigned
-    # request metadata — splitting them over a mesh axis would turn every
-    # page-table lookup into a cross-shard gather; kv_heads/embed keep
-    # carrying the model parallelism of the paged leaves instead.
-    "pages": (),
+    # paged-KV physical page dim: split along DATA.  Each data shard owns an
+    # independent sub-pool (its own dump page, free list, and local page-id
+    # space), and every slot's page-table row only ever references its own
+    # shard's sub-pool — a page-table lookup never crosses the data axis.
+    # kv_heads carry the model parallelism of the paged leaves.
+    "pages": ("data",),
+    # per-slot serving operands (page tables, positions, tokens): the slot
+    # roster is partitioned over data like the pages it maps.
+    "slots": ("data",),
     # never sharded: layers (scan dim), conv, state, head_dim
 }
 
@@ -105,3 +109,56 @@ def data_shard_count(mesh) -> int:
     for a in ("pod", "data"):
         n *= sizes.get(a, 1)
     return n
+
+
+def validate_serving_mesh(cfg, mesh, capacity: int,
+                          num_pages=None) -> tuple:
+    """Validate a (data, model) mesh for the paged serving path.
+
+    Mesh-parallel decode splits KV heads (and the query-head groups that
+    read them) along `model` and the slot roster / page sub-pools along
+    `data`; unlike the elastic training rules (which silently degrade to
+    replication), serving sharding is an explicit contract — an indivisible
+    head count or slot roster is a configuration error, not a fallback.
+
+    Returns (data, model) sizes."""
+    sizes = mesh_axis_sizes(mesh)
+    unknown = set(sizes) - {"data", "model"}
+    if unknown:
+        raise ValueError(
+            f"serving mesh supports axes (data, model); got {unknown}")
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+    if cfg.num_kv_heads % model != 0:
+        raise ValueError(
+            f"model axis {model} must divide num_kv_heads "
+            f"{cfg.num_kv_heads}")
+    if cfg.num_heads % model != 0:
+        raise ValueError(
+            f"model axis {model} must divide num_heads {cfg.num_heads}")
+    if capacity % data != 0:
+        raise ValueError(
+            f"data axis {data} must divide engine capacity {capacity}")
+    if num_pages is not None and num_pages % data != 0:
+        raise ValueError(
+            f"data axis {data} must divide num_pages {num_pages}")
+    return data, model
+
+
+def serving_cache_pspecs(cfg, B, max_len, num_pages):
+    """PartitionSpec tree for the paged serving cache under shard_map.
+
+    Unlike `spec_for` (preference order + divisibility fallback), these are
+    the EXACT specs the sharded decode/prefill executables require: paged
+    K/V leaves split pages over `data` and kv heads over `model`; recurrent
+    per-slot leaves split their slot dim over `data`.  Callers must have
+    passed `validate_serving_mesh` first."""
+    from repro.models import decode as Dec
+    axes_tree = Dec.cache_logical_axes(cfg, B, max_len, num_pages=num_pages)
+    mapping = {"pages": "data", "kv_heads": "model", "batch": "data"}
+
+    def to_spec(axes):
+        return PartitionSpec(*[mapping.get(a) for a in axes])
+
+    return {grp: {k: to_spec(a) for k, a in leaves.items()}
+            for grp, leaves in axes_tree.items()}

@@ -63,7 +63,6 @@ def usable_device_count(n_devices: int, *, model_parallel: int = 16,
 def reshard_state(state, cfg, opt, new_mesh):
     """Re-place a host-restored state tree onto a (possibly different) mesh."""
     from repro.launch import steps as S
-    from repro.models.params import map_leaves
     from jax.sharding import NamedSharding
 
     ps = S.state_pspec_tree(cfg, opt, new_mesh)

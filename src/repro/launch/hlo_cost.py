@@ -254,7 +254,6 @@ def analyze(text):
     flops = 0.0
     bytes_hbm = 0.0
     coll = defaultdict(float)
-    unknown_loops = 0
 
     for cname, comp in comps.items():
         m = mult.get(cname, 0.0)

@@ -7,6 +7,12 @@ Demonstrates the bounded BigBird-decode path: for sparse-attention archs the
 per-token cache read is O((g+w+r)*b) regardless of context length.  The
 whole decode loop runs inside one jitted `lax.while_loop` — no per-token
 Python dispatch (Engine.generate).
+
+`--mesh DxM` (e.g. `--mesh 2x2`) serves through the mesh-parallel
+continuous-batching path instead: slots and KV pages shard over the data
+axis, kv heads over the model axis, and every request's token stream is
+bit-identical to the replicated run (DESIGN.md §Mesh-parallel serving).
+Needs D*M visible devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
@@ -15,10 +21,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.models import model as M
-from repro.serve import Engine, SamplingSpec
+from repro.serve import Engine, Request, SamplingSpec
 
 
 def main(argv=None):
@@ -32,6 +39,8 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve over a (data, model) mesh, e.g. 2x2")
     args = ap.parse_args(argv)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -55,9 +64,45 @@ def main(argv=None):
             key, (B, cfg.frontend_len, cfg.d_model), cfg.dtype)
         max_len = max(max_len, cfg.frontend_len + gen)
 
-    engine = Engine(cfg, params, max_len=max_len, capacity=B)
     sampling = SamplingSpec(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed)
+
+    if args.mesh:
+        # mesh-parallel serving goes through the paged continuous-batching
+        # path (submit/step/drain) — the sharded hot loop.  It requires a
+        # causal attention-only LM; encoder-style (MLM) bigbird configs are
+        # served with their pattern flipped causal, the standard
+        # decoder-only serving arrangement.
+        import dataclasses
+
+        from repro.serve import mesh as Mx
+        if (cfg.kind == "lm" and cfg.attn.kind in ("bigbird", "window")
+                and not cfg.attn.causal
+                and all(ls.kind == "attn" and ls.attn is None
+                        for ls in cfg.layer_pattern)):
+            # causality changes no param shape: the existing weights serve
+            cfg = dataclasses.replace(
+                cfg, attn=dataclasses.replace(cfg.attn, causal=True))
+            print(f"[serve] mesh serving: flipped {args.arch} causal")
+        mesh = Mx.parse_mesh(args.mesh)
+        engine = Engine(cfg, params, max_len=max_len, capacity=B, mesh=mesh)
+        st = engine.stats()
+        print(f"[serve] mesh {args.mesh}: {st.data_shards} data shard(s) x "
+              f"{st.pages_per_shard} pages, "
+              f"{st.kv_bytes_per_shard / 2**20:.1f} MiB KV per shard")
+        for i in range(B):
+            engine.submit(Request(prompt=np.asarray(prompt[i]),
+                                  max_new_tokens=gen, sampling=sampling))
+        t0 = time.time()
+        results = engine.drain()
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in results)
+        print(f"[serve] arch={cfg.name} mesh={args.mesh} generated {toks} "
+              f"tokens in {dt:.2f}s ({toks/dt:.1f} tok/s aggregate)")
+        print("[serve] sample:", results[0].tokens[:16])
+        return jnp.asarray([r.tokens for r in results])
+
+    engine = Engine(cfg, params, max_len=max_len, capacity=B)
 
     t0 = time.time()
     out = engine.generate([jnp.asarray(p) for p in prompt], gen,

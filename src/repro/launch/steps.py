@@ -8,7 +8,6 @@ benchmarks all share.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.dist import sharding as Sh
 from repro.models import decode as Dec
 from repro.models import model as M
-from repro.models.params import abstract_params, map_leaves
+from repro.models.params import abstract_params
 from repro.optim import optimizers as Opt
 from repro.optim import schedules
 

@@ -22,7 +22,6 @@ import numpy as np
 from repro import configs
 from repro.ckpt import checkpoint as CKPT
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.ft.elastic import plan_mesh
 from repro.launch import steps as S
 from repro.models import model as M
 

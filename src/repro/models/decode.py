@@ -113,8 +113,8 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
 
     def axes_for(key, ndim, stacked):
         base = {
-            # paged K/V: the page dim replicates (pages are request-mapped
-            # metadata, not a tensor-parallel dim); heads shard as before
+            # paged K/V: pages split over data (per-shard sub-pools with
+            # local page-id spaces), kv heads over model (tensor parallel)
             "k": (("pages", "kv_heads", None, None) if paged_kv
                   else ("batch", "kv_heads", "seq", None)),
             "v": (("pages", "kv_heads", None, None) if paged_kv
@@ -134,6 +134,38 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
     scanned = cfg.scan_layers and cfg.repeats > 1
     return {grp: {k: axes_for(k, v.ndim, scanned) for k, v in leaves.items()}
             for grp, leaves in spec.items()}
+
+
+# --------------------------------------------------------------------------
+# mesh-parallel head slicing (DESIGN.md §Mesh-parallel serving)
+# --------------------------------------------------------------------------
+
+def _local_heads(q, k, v, kv_leaf, model_axis):
+    """Slice the model shard's head range out of full q/k/v projections.
+
+    Inside `shard_map` over a (data, model) mesh the paged K/V leaf carries
+    only this shard's kv heads (`kv_leaf.shape[-3]` = Hkv / model), while
+    the projections q/k/v (B, H, T, dh) were computed at FULL width from
+    replicated params — bit-identical to the unsharded run by construction
+    (each output column of a matmul is an independent dot product, and
+    slicing selects columns).  Query heads are grouped per kv head
+    (h_q = h_kv * grp + g), so one contiguous slice serves GQA too.
+    Returns (q_local, k_local, v_local)."""
+    hq, hkv = q.shape[1], k.shape[1]
+    hkv_l = kv_leaf.shape[-3]
+    hq_l = hkv_l * (hq // hkv)
+    m = jax.lax.axis_index(model_axis)
+    q = jax.lax.dynamic_slice_in_dim(q, m * hq_l, hq_l, 1)
+    k = jax.lax.dynamic_slice_in_dim(k, m * hkv_l, hkv_l, 1)
+    v = jax.lax.dynamic_slice_in_dim(v, m * hkv_l, hkv_l, 1)
+    return q, k, v
+
+
+def _gather_heads(o, model_axis):
+    """Reassemble the full per-head attention output across the model axis
+    (shard m contributed heads [m*hq_l, (m+1)*hq_l) — tiled all_gather
+    concatenates in axis order, restoring the replicated layout exactly)."""
+    return jax.lax.all_gather(o, model_axis, axis=1, tiled=True)
 
 
 # --------------------------------------------------------------------------
@@ -261,7 +293,7 @@ def _full_decode_attn_paged(q, kc, vc, page_tables, pos):
 
 
 def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
-                       layer, pos, page_tables=None):
+                       layer, pos, page_tables=None, model_axis=None):
     B = x.shape[0]
     pm = p["mix"]
     h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
@@ -272,6 +304,10 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     v = (h @ pm["wv"]).reshape(B, 1, hkv, dh).transpose(0, 2, 1, 3)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
+    if model_axis is not None:
+        assert page_tables is not None, \
+            "mesh-parallel decode runs over the paged cache"
+        q, k, v = _local_heads(q, k, v, c["k"], model_axis)
     if page_tables is None:
         # per-slot cache write: row i lands at its own pos[i]
         write = jax.vmap(
@@ -300,6 +336,8 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         o = _bigbird_decode_attn(q, kc, vc, pos, bb, layer)
     else:
         o = _full_decode_attn(q, kc, vc, pos)
+    if model_axis is not None:
+        o = _gather_heads(o, model_axis)
     o = o.transpose(0, 2, 1, 3).reshape(B, 1, hq * dh)
     x = x + o @ pm["wo"]
     new_c = dict(c)
@@ -334,10 +372,11 @@ def _decode_rwkv_layer(p, c, x, cfg: M.ModelConfig):
                  "cm": cm.astype(c["cm"].dtype)}
 
 
-def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos, page_tables=None):
+def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos, page_tables=None,
+                  model_axis=None):
     if ls.kind == "attn":
         x, new_c = _decode_attn_layer(p, c, x, cfg, cfg.attn_spec(ls), layer,
-                                      pos, page_tables)
+                                      pos, page_tables, model_axis)
     elif ls.kind == "mamba":
         x, new_c = _decode_mamba_layer(p, c, x, cfg)
     elif ls.kind == "rwkv":
@@ -354,7 +393,7 @@ def _decode_layer(p, c, x, cfg, ls: M.LayerSpec, layer, pos, page_tables=None):
 
 
 def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
-                page_tables=None):
+                page_tables=None, model_axis=None):
     """tokens (B, 1) int32; pos () or (B,) int32 -> (logits (B, V) f32, cache).
 
     Scalar `pos` (all slots at the same position) is broadcast; a (B,)
@@ -364,7 +403,14 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
     `page_tables` (B, max_pages) int32 selects the paged cache layout: the
     cache tree must come from `cache_spec(..., num_pages=)`, each row maps
     that slot's logical blocks to physical pages, and the attention
-    write/read go through the table (DESIGN.md §Paged cache)."""
+    write/read go through the table (DESIGN.md §Paged cache).
+
+    `model_axis` names the tensor-parallel mesh axis when this runs inside
+    `shard_map`: the paged K/V leaves then carry only the shard's local kv
+    heads, attention computes on that head slice, and the per-head outputs
+    are all-gathered before the output projection — everything else is
+    replicated full-width math, keeping the sharded step bit-identical to
+    the unsharded one (DESIGN.md §Mesh-parallel serving)."""
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
         pos = jnp.full((tokens.shape[0],), pos)
@@ -380,7 +426,8 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
             new_c = {}
             for i, ls in enumerate(pattern):
                 x, nc = _decode_layer(pslice[f"p{i}"], cslice[f"p{i}"],
-                                      x, cfg, ls, i, pos, page_tables)
+                                      x, cfg, ls, i, pos, page_tables,
+                                      model_axis)
                 new_c[f"p{i}"] = nc
             return x, new_c
         x, new_cache = jax.lax.scan(body, x, (stack, cache))
@@ -389,7 +436,8 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
         for i in range(cfg.num_layers):
             ls = pattern[i % len(pattern)]
             x, nc = _decode_layer(stack[f"layer{i}"], cache[f"layer{i}"],
-                                  x, cfg, ls, i, pos, page_tables)
+                                  x, cfg, ls, i, pos, page_tables,
+                                  model_axis)
             new_cache[f"layer{i}"] = nc
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     w_out = M._unembed_weight(params, cfg)
@@ -403,7 +451,7 @@ def decode_step(params, cfg: M.ModelConfig, cache, tokens, pos,
 
 def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
                       layer, page_tables, start: int, bucket_len: int,
-                      write_tables=None):
+                      write_tables=None, model_axis=None):
     """One attention layer of a prefill chunk covering positions
     [start, start+C), reading/writing the paged cache.
 
@@ -428,6 +476,10 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     v = (h @ pm["wv"]).reshape(B, C, hkv, dh).transpose(0, 2, 1, 3)
     q = L.rope(q, positions, cfg.rope_theta)
     k = L.rope(k, positions, cfg.rope_theta)
+    hq_full = hq
+    if model_axis is not None:
+        q, k, v = _local_heads(q, k, v, c["k"], model_axis)
+        hq, hkv = q.shape[1], k.shape[1]       # local head counts
 
     b = c["k"].shape[-2]                       # physical page size
     assert C % b == 0 and start % b == 0, (C, start, b)
@@ -513,7 +565,9 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
                        preferred_element_type=F32)
         o = o.reshape(B, hq, C, dh).astype(q.dtype)
 
-    o = o.transpose(0, 2, 1, 3).reshape(B, C, hq * dh)
+    if model_axis is not None:
+        o = _gather_heads(o, model_axis)
+    o = o.transpose(0, 2, 1, 3).reshape(B, C, hq_full * dh)
     x = x + o @ pm["wo"]
     if "ffn" in p:
         if cfg.layer_pattern[layer % cfg.period].moe:
@@ -525,7 +579,7 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
 
 def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
                   *, start: int, last_index, bucket_len: int,
-                  write_tables=None):
+                  write_tables=None, model_axis=None):
     """Prefill ONE chunk of a prompt into the paged cache.
 
     tokens (B, C) int32 — chunk token window covering positions
@@ -541,7 +595,9 @@ def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
     prefix-SHARED pages write-free).
 
     Attention-only causal configs (recurrent layers chunk through their
-    state sequentially and keep the one-shot admit path).
+    state sequentially and keep the one-shot admit path).  `model_axis`
+    (inside shard_map): tensor-parallel head slicing, same contract as
+    `decode_step`.
     Returns (logits (B, V) f32, cache)."""
     assert all(ls.kind == "attn" for ls in cfg.layer_pattern), \
         "chunked prefill supports attention-only configs"
@@ -560,7 +616,7 @@ def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
                 x, nc = _chunk_attn_layer(
                     pslice[f"p{i}"], cslice[f"p{i}"], x, cfg,
                     cfg.attn_spec(ls), i, page_tables, start, bucket_len,
-                    write_tables)
+                    write_tables, model_axis)
                 new_c[f"p{i}"] = nc
             return x, new_c
         x, new_cache = jax.lax.scan(body, x, (stack, cache))
@@ -571,7 +627,7 @@ def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
             x, nc = _chunk_attn_layer(
                 stack[f"layer{i}"], cache[f"layer{i}"], x, cfg,
                 cfg.attn_spec(ls), i, page_tables, start, bucket_len,
-                write_tables)
+                write_tables, model_axis)
             new_cache[f"layer{i}"] = nc
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     w_out = M._unembed_weight(params, cfg)

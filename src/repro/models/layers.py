@@ -7,13 +7,11 @@ norms/softmax/router run in f32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import patterns
 from repro.core.attention import AttentionSpec, attention
 from repro.models.params import P
 
@@ -368,7 +366,6 @@ def _token_shift(x, prev=None):
 def rwkv_time_mix(p, x, n_heads, head_dim, *, eps=1e-5, wkv_impl="ref",
                   prev_x=None, state=None):
     """Returns (y, (last_x, last_state)).  state (B,H,D,D)."""
-    from repro.kernels import ref as kref
     B, S, d = x.shape
     h = rms_norm(p["norm_tm"], x, eps)
     sx = _token_shift(h, prev_x) - h

@@ -15,12 +15,10 @@ With scan_layers=False (small/smoke configs) every layer gets its own blocks.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.attention import AttentionSpec
 from repro.models import layers as L

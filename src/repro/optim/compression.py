@@ -27,7 +27,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 F32 = jnp.float32
 

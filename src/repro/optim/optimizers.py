@@ -10,7 +10,6 @@ to params apply to the state for free.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

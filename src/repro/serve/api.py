@@ -44,8 +44,12 @@ class Result:
 
 @dataclasses.dataclass
 class PoolStats:
-    """Page-pool occupancy snapshot (`Engine.stats()`)."""
-    num_pages: int                         # usable pages (dump page excluded)
+    """Page-pool occupancy snapshot (`Engine.stats()`).
+
+    Aggregates cover the whole pool; the `*_per_shard` fields break the
+    partitioned pool down along the mesh's data axis (single-entry lists
+    when serving unsharded)."""
+    num_pages: int                         # usable pages (dump pages excluded)
     page_size: int                         # tokens per page (= pattern block)
     pages_in_use: int
     peak_pages_in_use: int
@@ -53,6 +57,11 @@ class PoolStats:
     prefix_pages_shared: int               # cumulative pages not re-admitted
     requests_admitted: int
     kv_bytes_per_page: int                 # KV bytes one page holds (all layers)
+    data_shards: int = 1                   # data-axis partitions of the pool
+    pages_per_shard: int = 0               # usable pages per data shard
+    pages_in_use_per_shard: List[int] = dataclasses.field(default_factory=list)
+    peak_pages_per_shard: List[int] = dataclasses.field(default_factory=list)
+    kv_bytes_per_shard: int = 0            # physical KV bytes one shard holds
 
 
 @dataclasses.dataclass

@@ -9,10 +9,12 @@ rows: admission allocates exactly the pages a request's prompt + budget
 needs, eviction returns them, and memory — not a `capacity x max_len`
 reservation — is the only concurrency limit the pool enforces.
 
-Page 0 is a reserved DUMP page: idle/prefilling rows of the batched
-decode step write their garbage KV through all-zero page-table rows, so
-the garbage lands on a page no live request ever maps (reads through a
-zero entry are masked by position before they can contribute).
+Local page 0 of every data shard's sub-pool is a reserved DUMP page:
+idle/prefilling rows of the batched decode step write their garbage KV
+through all-zero (local-id) page-table rows, so the garbage lands on a
+page no live request ever maps (reads through a zero entry are masked by
+position before they can contribute).  With one data shard that is global
+page 0 — the original contract, unchanged.
 
 Shared global-prefix pages: the first `g` (global-block) pages of a
 prompt are content-addressed — keyed by the exact token prefix they
@@ -33,7 +35,7 @@ tree.  Cache layout note: scanned configs (`cfg.scan_layers`, repeats >
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +43,7 @@ import numpy as np
 
 from repro.models import decode as Dec
 
-DUMP_PAGE = 0
+DUMP_PAGE = 0      # local id of every shard's dump page
 
 
 @dataclasses.dataclass
@@ -62,30 +64,56 @@ class SlotState:
 
 
 class PagePool:
-    """Refcounted page pool + per-slot page tables over one cache tree."""
+    """Refcounted page pool + per-slot page tables over one cache tree.
+
+    With `data_shards` = D > 1 the pool is PARTITIONED along the mesh's
+    data axis: slots are split into D contiguous rosters, pages into D
+    sub-pools (each with its own dump page, free list, and refcounts), and
+    a slot only ever maps pages of its own shard's sub-pool.  The physical
+    stores keep ONE global leaf `(D * pages_per_shard, Hkv, b, dh)` whose
+    page dim is device-sharded over `data`; host metadata uses GLOBAL page
+    ids, and `table_matrix`/`table_row` emit shard-LOCAL ids — the
+    coordinates the per-shard body of a `shard_map`'d step indexes with
+    (DESIGN.md §Mesh-parallel serving).  D = 1 is exactly the old pool."""
 
     def __init__(self, cfg, capacity: int, max_len: int,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, data_shards: int = 1):
         self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
         self.page_size = Dec.page_size_for(cfg)
         self.max_pages = -(-max_len // self.page_size)
         self._paged = any(ls.kind == "attn" for ls in cfg.layer_pattern)
+        assert capacity % data_shards == 0, (capacity, data_shards)
+        self.data_shards = data_shards
+        self.cap_local = capacity // data_shards
         # default budget matches the old slot-contiguous reservation (so the
-        # paged pool can always admit what the monolithic pool could) + the
-        # dump page; callers shrink it to trade capacity for memory.
-        self.num_pages = (num_pages if num_pages is not None
-                          else capacity * self.max_pages + 1)
-        assert self.num_pages >= 2, "pool needs the dump page + 1 real page"
+        # paged pool can always admit what the monolithic pool could) + one
+        # dump page PER SHARD; callers shrink it to trade capacity for
+        # memory.  An explicit num_pages is the total across shards.
+        if num_pages is None:
+            self.pages_per_shard = self.cap_local * self.max_pages + 1
+        else:
+            assert num_pages % data_shards == 0, (num_pages, data_shards)
+            self.pages_per_shard = num_pages // data_shards
+        self.num_pages = self.pages_per_shard * data_shards
+        assert self.pages_per_shard >= 2, \
+            "each shard needs its dump page + 1 real page"
         self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False,
                                     num_pages=self.num_pages)
         self._scanned = cfg.scan_layers and cfg.repeats > 1
         self.page_tables = np.zeros((capacity, self.max_pages), np.int32)
+        for slot in range(capacity):
+            self.page_tables[slot, :] = self.dump_page(slot)
         self.slots: list = [None] * capacity       # SlotState | None
-        self._free: list = list(range(1, self.num_pages))
+        # per-shard free lists of GLOBAL page ids (shard d owns the range
+        # [d*pps, (d+1)*pps), its dump page d*pps excluded)
+        pps = self.pages_per_shard
+        self._free: list = [list(range(d * pps + 1, (d + 1) * pps))
+                            for d in range(data_shards)]
         self.refcount = np.zeros(self.num_pages, np.int64)
         # content-addressed prefix index: several co-resident requests may
         # hold equivalent (bit-identical) copies of the same prefix page —
-        # all are indexed, so the key survives any one holder's eviction
+        # all are indexed, so the key survives any one holder's eviction.
+        # Sharing is intra-shard only (a table row cannot cross sub-pools).
         self._prefix: dict = {}      # (graph_key, token_bytes) -> {page ids}
         self._page_key: dict = {}    # page id -> its prefix-index key
         # the number of leading pages eligible for prefix sharing: the
@@ -99,11 +127,33 @@ class PagePool:
             default=0)
         # stats
         self.peak_pages_in_use = 0
+        self.peak_pages_per_shard = [0] * data_shards
         self.prefix_hits = 0           # admits that reused >= 1 page
         self.prefix_pages_shared = 0   # cumulative pages NOT re-admitted
         self.requests_admitted = 0
         self._writer = jax.jit(self._write_impl, donate_argnums=(0,))
         self._copier = jax.jit(self._copy_impl, donate_argnums=(0,))
+
+    # -- shard geometry ----------------------------------------------------
+
+    def slot_shard(self, slot: int) -> int:
+        """Data shard owning `slot` (contiguous rosters of cap_local)."""
+        return slot // self.cap_local
+
+    def page_shard(self, page: int) -> int:
+        """Data shard owning GLOBAL page id `page`."""
+        return page // self.pages_per_shard
+
+    def dump_page(self, slot: int) -> int:
+        """GLOBAL id of the dump page of `slot`'s shard (local id 0)."""
+        return self.slot_shard(slot) * self.pages_per_shard
+
+    def _bump_peaks(self):
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+        for d in range(self.data_shards):
+            self.peak_pages_per_shard[d] = max(
+                self.peak_pages_per_shard[d], self.pages_in_use_shard(d))
 
     # -- occupancy ---------------------------------------------------------
 
@@ -123,7 +173,11 @@ class PagePool:
 
     @property
     def pages_in_use(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        free = sum(len(f) for f in self._free)
+        return (self.num_pages - self.data_shards) - free
+
+    def pages_in_use_shard(self, shard: int) -> int:
+        return (self.pages_per_shard - 1) - len(self._free[shard])
 
     def pages_needed(self, prompt_len: int, max_new: int) -> int:
         """Logical pages a request occupies: prompt + decode writes (the
@@ -142,15 +196,19 @@ class PagePool:
         L = int(prompt.size)
         return max(0, min(self._g_share, (L - 1) // self.page_size))
 
-    def lookup_prefix(self, prompt: np.ndarray, graph_key) -> list:
-        """Longest chain of already-resident prefix pages for `prompt`."""
+    def lookup_prefix(self, prompt: np.ndarray, graph_key,
+                      shard: int = 0) -> list:
+        """Longest chain of already-resident prefix pages for `prompt`,
+        restricted to `shard`'s sub-pool (a table row never crosses it)."""
         pages = []
         b = self.page_size
         for j in range(1, self.shareable_pages(prompt) + 1):
             copies = self._prefix.get((graph_key, prompt[:j * b].tobytes()))
-            if not copies:
+            local = [p for p in (copies or ())
+                     if self.page_shard(p) == shard]
+            if not local:
                 break
-            pages.append(min(copies))          # deterministic pick
+            pages.append(min(local))           # deterministic pick
         return pages
 
     def register_prefix(self, slot: int, upto_pos: int, prompt: np.ndarray,
@@ -172,10 +230,10 @@ class PagePool:
     # -- page allocation / release ----------------------------------------
 
     def can_admit(self, prompt: np.ndarray, max_new: int,
-                  graph_key=None) -> bool:
+                  graph_key=None, shard: int = 0) -> bool:
         need = self.pages_needed(int(prompt.size), max_new)
-        need -= len(self.lookup_prefix(prompt, graph_key))
-        return len(self._free) >= need
+        need -= len(self.lookup_prefix(prompt, graph_key, shard))
+        return len(self._free[shard]) >= need
 
     def allocate(self, slot: int, prompt: np.ndarray, max_new: int,
                  graph_key=None,
@@ -183,32 +241,35 @@ class PagePool:
         """Bind a page list + page-table row to `slot` for a new request.
 
         Leading pages come from the prefix index when the token prefix (and
-        prefill graph) match — those are refcount-bumped, not rewritten."""
+        prefill graph) match — those are refcount-bumped, not rewritten.
+        Pages come exclusively from the slot's shard's sub-pool."""
         assert self.slots[slot] is None, f"slot {slot} occupied"
         assert state is not None
         assert state.pos + state.max_new <= self.max_len + 1, \
             f"request needs {state.pos + state.max_new} > max_len {self.max_len}"
+        shard = self.slot_shard(slot)
         need = self.pages_needed(int(prompt.size), max_new)
-        shared = self.lookup_prefix(prompt, graph_key)
+        shared = self.lookup_prefix(prompt, graph_key, shard)
         fresh_n = need - len(shared)
         assert fresh_n >= 0
-        if len(self._free) < fresh_n:
+        if len(self._free[shard]) < fresh_n:
             raise RuntimeError(
-                f"page pool exhausted: need {fresh_n}, free {len(self._free)}")
-        fresh = [self._free.pop() for _ in range(fresh_n)]
+                f"page pool exhausted: need {fresh_n}, "
+                f"free {len(self._free[shard])} (shard {shard})")
+        fresh = [self._free[shard].pop() for _ in range(fresh_n)]
         pages = shared + fresh
         for pg in pages:
             self.refcount[pg] += 1
         state.pages = pages
         state.shared_pages = len(shared)
-        self.page_tables[slot, :] = DUMP_PAGE
+        self.page_tables[slot, :] = self.dump_page(slot)
         self.page_tables[slot, :need] = pages
         self.slots[slot] = state
         self.requests_admitted += 1
         if shared:
             self.prefix_hits += 1
             self.prefix_pages_shared += len(shared)
-        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        self._bump_peaks()
         return state
 
     def evict(self, slot: int):
@@ -228,8 +289,8 @@ class PagePool:
                             copies.discard(pg)
                             if not copies:
                                 del self._prefix[key]
-                    self._free.append(pg)
-        self.page_tables[slot, :] = DUMP_PAGE
+                    self._free[self.page_shard(pg)].append(pg)
+        self.page_tables[slot, :] = self.dump_page(slot)
         self.slots[slot] = None
 
     # -- copy-on-write guard ----------------------------------------------
@@ -246,9 +307,10 @@ class PagePool:
         old = s.pages[logical_block]
         if self.refcount[old] <= 1:
             return False
-        if not self._free:
+        shard = self.slot_shard(slot)
+        if not self._free[shard]:
             raise RuntimeError("page pool exhausted during copy-on-write")
-        new = self._free.pop()
+        new = self._free[shard].pop()
         self.cache = self._copier(self.cache, jnp.asarray(new, jnp.int32),
                                   jnp.asarray(old, jnp.int32))
         self.refcount[old] -= 1
@@ -257,7 +319,7 @@ class PagePool:
         if s.shared_pages > logical_block:
             s.shared_pages = logical_block
         self.page_tables[slot, logical_block] = new
-        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        self._bump_peaks()
         return True
 
     # -- device writers ----------------------------------------------------
@@ -323,8 +385,8 @@ class PagePool:
         nb_src = (leaf.shape[2 + self._scanned] // b) if leaf is not None \
             else 0
         lo, hi = s.shared_pages, min(len(s.pages), nb_src)
-        pages = jnp.asarray([s.pages[j] for j in range(lo, hi)] or [DUMP_PAGE],
-                            jnp.int32)
+        pages = jnp.asarray([s.pages[j] for j in range(lo, hi)]
+                            or [self.dump_page(slot)], jnp.int32)
         blocks = jnp.asarray(list(range(lo, hi)) or [0], jnp.int32)
         self.cache = self._writer(self.cache, one_request_cache, pages,
                                   blocks, jnp.asarray(slot, jnp.int32))
@@ -341,23 +403,37 @@ class PagePool:
                 pos[i] = s.pos
         return pos
 
+    def _local_ids(self, rows: np.ndarray, slots) -> np.ndarray:
+        """GLOBAL page ids -> shard-LOCAL ids, row-wise (a shard_map body
+        indexes its local page-store slice, whose row 0 is its dump)."""
+        out = rows.copy()
+        for r, slot in enumerate(slots):
+            out[r] -= self.slot_shard(slot) * self.pages_per_shard
+        return out
+
     def table_matrix(self) -> np.ndarray:
         """(capacity, max_pages) int32 for the batched decode step: live
-        rows for decoding slots, dump-page rows for everyone else."""
-        pt = np.full_like(self.page_tables, DUMP_PAGE)
-        for i in self.decode_slots():
-            pt[i] = self.page_tables[i]
-        return pt
+        rows for decoding slots, dump-page rows for everyone else — in
+        shard-LOCAL page ids (global == local when data_shards == 1)."""
+        pt = self.page_tables.copy()
+        decoding = set(self.decode_slots())
+        for i in range(self.capacity):
+            if i not in decoding:
+                pt[i] = self.dump_page(i)
+        return self._local_ids(pt, range(self.capacity))
 
     def table_row(self, slot: int) -> np.ndarray:
-        """(1, max_pages) int32 page-table row for a prefill chunk."""
-        return self.page_tables[slot:slot + 1].copy()
+        """(1, max_pages) int32 page-table row for a prefill chunk, in
+        shard-LOCAL page ids."""
+        return self._local_ids(self.page_tables[slot:slot + 1], [slot])
 
     # -- accounting --------------------------------------------------------
 
     def reset_stats(self):
         """Zero the cumulative counters (benchmarks: after warmup)."""
         self.peak_pages_in_use = self.pages_in_use
+        self.peak_pages_per_shard = [self.pages_in_use_shard(d)
+                                     for d in range(self.data_shards)]
         self.prefix_hits = 0
         self.prefix_pages_shared = 0
         self.requests_admitted = 0

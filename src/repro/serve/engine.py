@@ -22,11 +22,16 @@ bucket), and prefill chunks are compiled per chunk offset.  Configs with
 recurrent layers (mamba/rwkv state) prefill at the exact prompt length in
 one shot — right-padding or chunk-splitting would corrupt their running
 state.
+
+`mesh=` (a (data, model) mesh) makes the continuous-batching path
+mesh-parallel: slots and the paged KV pool partition over `data`, kv
+heads over `model`, and the decode/prefill-chunk executables run under
+`shard_map` with token streams bit-identical to the replicated engine
+(DESIGN.md §Mesh-parallel serving).
 """
 from __future__ import annotations
 
 import collections
-import functools
 from typing import List, Optional, Sequence
 
 import jax
@@ -56,7 +61,7 @@ class Engine:
 
     def __init__(self, cfg: M.ModelConfig, params, *, max_len: int = 0,
                  capacity: int = 4, num_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = 4):
+                 prefill_chunk: Optional[int] = 4, mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
@@ -70,6 +75,21 @@ class Engine:
                          and all(cfg.attn_spec(ls).causal
                                  for ls in cfg.layer_pattern))
 
+        # (data, model) serving mesh: slots/pages shard over data, kv heads
+        # over model (DESIGN.md §Mesh-parallel serving).  The sharded path
+        # admits exclusively through chunked prefill.
+        self.mesh = mesh
+        data_shards = 1
+        if mesh is not None:
+            from repro.dist import sharding as Sh
+            data_shards, _ = Sh.validate_serving_mesh(cfg, mesh, capacity,
+                                                      num_pages)
+            if not self._chunked:
+                raise ValueError(
+                    "mesh serving requires the chunked-prefill path: an "
+                    "attention-only causal LM config with prefill_chunk set")
+        self._data_shards = data_shards
+
         # compiled executables; jax.jit keys its cache by the (bucketed)
         # input shapes, so each bucket compiles exactly once per engine
         self._admit_prefill = jax.jit(
@@ -81,8 +101,17 @@ class Engine:
 
         # continuous-batching state (decoder-only LMs; encdec/patch archs
         # serve through generate() and never touch the pool)
-        self.pool = (PagePool(cfg, capacity, self.max_len, num_pages)
+        self.pool = (PagePool(cfg, capacity, self.max_len, num_pages,
+                              data_shards=data_shards)
                      if cfg.kind == "lm" else None)
+        if mesh is not None:
+            from repro.serve import mesh as Mx
+            self._cache_ps = Mx.cache_pspecs(cfg, capacity, self.max_len,
+                                             self.pool.num_pages)
+            self.pool.cache = Mx.place_cache(self.pool.cache, mesh,
+                                             self._cache_ps)
+            self.params = Mx.replicate(params, mesh)
+            self._slot_step = Mx.slot_step_fn(cfg, mesh, self._cache_ps)
         self._chunk_tokens = (prefill_chunk * self.pool.page_size
                               if self._chunked else None)
         self._queue: collections.deque = collections.deque()
@@ -247,11 +276,16 @@ class Engine:
         key = (start, bucket_len)
         if key not in self._chunk_fns:
             cfg = self.cfg
-            self._chunk_fns[key] = jax.jit(
-                lambda p, cache, toks, pt, wt, li: Dec.prefill_chunk(
-                    p, cfg, cache, toks, pt, start=start, last_index=li,
-                    bucket_len=bucket_len, write_tables=wt),
-                donate_argnums=(1,))
+            if self.mesh is not None:
+                from repro.serve import mesh as Mx
+                self._chunk_fns[key] = Mx.chunk_fn(
+                    cfg, self.mesh, self._cache_ps, start, bucket_len)
+            else:
+                self._chunk_fns[key] = jax.jit(
+                    lambda p, cache, toks, pt, wt, li: Dec.prefill_chunk(
+                        p, cfg, cache, toks, pt, start=start, last_index=li,
+                        bucket_len=bucket_len, write_tables=wt),
+                    donate_argnums=(1,))
         return self._chunk_fns[key]
 
     def submit(self, request: Request) -> int:
@@ -265,8 +299,8 @@ class Engine:
             "prompt + max_new_tokens exceeds engine max_len"
         assert self.pool.pages_needed(
             int(request.prompt.size), request.max_new_tokens) \
-            <= self.pool.num_pages - 1, \
-            "request needs more pages than the pool owns"
+            <= self.pool.pages_per_shard - 1, \
+            "request needs more pages than one shard's sub-pool owns"
         if request.request_id is None:
             request.request_id = self._next_id
             self._next_id += 1
@@ -325,13 +359,28 @@ class Engine:
         # never write prefix-shared pages (refcount > 1): the write view of
         # the table redirects their blocks to the dump page, while reads
         # keep resolving to the real shared pages
-        wt = self.pool.table_row(slot)
+        pt = self.pool.table_row(slot)
+        wt = pt.copy()
         wt[0, :s.shared_pages] = 0
+        li = np.asarray([L - 1], np.int32)
+        shard = self.pool.slot_shard(slot)
+        if self.mesh is not None:
+            # SPMD: every data shard runs the same chunk tokens, but only
+            # the owning shard's row maps live pages — the other rows read
+            # and write their local dump page and their math is discarded
+            D = self._data_shards
+            toks = np.broadcast_to(toks, (D, C)).copy()
+            pt_all = np.zeros((D, self.pool.max_pages), np.int32)
+            wt_all = np.zeros((D, self.pool.max_pages), np.int32)
+            pt_all[shard], wt_all[shard] = pt[0], wt[0]
+            pt, wt = pt_all, wt_all
+            li = np.full((D,), L - 1, np.int32)
         fn = self._chunk_fn(start, self._page_bucket(L))
         logits, self.pool.cache = fn(
             self.params, self.pool.cache, jnp.asarray(toks),
-            jnp.asarray(self.pool.table_row(slot)), jnp.asarray(wt),
-            jnp.asarray([L - 1], np.int32))
+            jnp.asarray(pt), jnp.asarray(wt), jnp.asarray(li))
+        if self.mesh is not None:
+            logits = logits[shard:shard + 1]
         s.prefill_pos = start + C
         self.pool.register_prefix(slot, min(s.prefill_pos, L), prompt,
                                   self._graph_key(L))
@@ -367,13 +416,19 @@ class Engine:
         if p is None:
             return None
         return PoolStats(
-            num_pages=p.num_pages - 1, page_size=p.page_size,
+            num_pages=p.num_pages - p.data_shards, page_size=p.page_size,
             pages_in_use=p.pages_in_use,
             peak_pages_in_use=p.peak_pages_in_use,
             prefix_hits=p.prefix_hits,
             prefix_pages_shared=p.prefix_pages_shared,
             requests_admitted=p.requests_admitted,
-            kv_bytes_per_page=p.kv_bytes_per_page())
+            kv_bytes_per_page=p.kv_bytes_per_page(),
+            data_shards=p.data_shards,
+            pages_per_shard=p.pages_per_shard - 1,
+            pages_in_use_per_shard=[p.pages_in_use_shard(d)
+                                    for d in range(p.data_shards)],
+            peak_pages_per_shard=list(p.peak_pages_per_shard),
+            kv_bytes_per_shard=p.pages_per_shard * p.kv_bytes_per_page())
 
     def step(self) -> List[Result]:
         """One serving step: admit queued requests into free slots, run one
@@ -385,15 +440,29 @@ class Engine:
             self._step_count += 1
             return finished
 
-        for slot in self.pool.free_slots():
-            if not self._queue:
-                break
+        free = self.pool.free_slots()
+        while free and self._queue:
             request, _ = self._queue[0]
             graph_key = (self._graph_key(int(request.prompt.size))
                          if self._chunked else None)
-            if not self.pool.can_admit(request.prompt,
-                                       request.max_new_tokens, graph_key):
+            # FIFO head-of-line per pool, but any data shard with a free
+            # slot AND pages may take the head request (admission is
+            # partitioned per shard; slot order is deterministic).
+            # can_admit is shard-constant, so evaluate each shard once.
+            slot, tried = None, set()
+            for i in free:
+                sh = self.pool.slot_shard(i)
+                if sh in tried:
+                    continue
+                tried.add(sh)
+                if self.pool.can_admit(request.prompt,
+                                       request.max_new_tokens, graph_key,
+                                       sh):
+                    slot = i
+                    break
+            if slot is None:
                 break                  # head-of-line: wait for pages
+            free.remove(slot)
             request, submit_step = self._queue.popleft()
             self._admit_one(slot, request, submit_step)
             s = self.pool.slots[slot]

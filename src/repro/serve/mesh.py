@@ -1,0 +1,150 @@
+"""Mesh-parallel serving executables (DESIGN.md §Mesh-parallel serving).
+
+The Engine's sharded path builds its two hot executables here, each a
+`jax.jit(shard_map(...))` over a `(data, model)` mesh:
+
+* `slot_step_fn` — the batched decode step.  Slots, positions, page
+  tables, sampling arrays, and the paged K/V page dim split along
+  `data`; kv heads split along `model`.  Inside the per-shard body,
+  `models/decode.decode_step(model_axis="model")` computes attention on
+  the shard's local head slice and all-gathers only the per-head outputs;
+  everything else is replicated full-width math, so the sharded step is
+  bit-identical to the replicated one.
+* `chunk_fn` — one prefill chunk, compiled per (start, bucket).  Every
+  data shard runs the same chunk tokens (SPMD), but only the owning
+  shard's row carries live page-table entries; the other rows read and
+  write their local dump page, so their compute is discarded by
+  construction.
+
+Host metadata (free lists, refcounts, admission) stays in
+`serve/batching.PagePool`, partitioned per data shard; this module only
+owns device placement and the shard_map wrappers.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as Sh
+from repro.models import decode as Dec
+from repro.serve import sampling as Smp
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5 keeps it in the experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+
+
+def make_mesh(data: int, model: int):
+    """A (data, model) serving mesh over data*model local devices."""
+    need, have = data * model, len(jax.devices())
+    if need > have:
+        raise ValueError(f"mesh {data}x{model} needs {need} devices, have {have}")
+    return jax.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))
+
+
+def parse_mesh(spec: str):
+    """Parse a 'DxM' --mesh flag ('2x2') into a (data, model) mesh."""
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh expects DxM (e.g. 2x2), got {spec!r}") from None
+    return make_mesh(d, m)
+
+
+def cache_pspecs(cfg, capacity: int, max_len: int, num_pages: int):
+    """PartitionSpec tree for the paged serving cache."""
+    return Sh.serving_cache_pspecs(cfg, capacity, max_len, num_pages)
+
+
+def place_cache(cache, mesh, pspecs):
+    """Commit the pool's cache tree to its mesh sharding."""
+    return jax.tree.map(
+        lambda x, ps: jax.device_put(x, NamedSharding(mesh, ps)), cache, pspecs
+    )
+
+
+def replicate(tree, mesh):
+    """Commit a tree (params) fully replicated over the mesh."""
+    return jax.tree.map(lambda x: jax.device_put(x, NamedSharding(mesh, P())), tree)
+
+
+def _samp_specs():
+    return {
+        "temperature": P(DATA_AXIS),
+        "top_k": P(DATA_AXIS),
+        "top_p": P(DATA_AXIS),
+        "keys": P(DATA_AXIS, None),
+    }
+
+
+def slot_step_fn(cfg, mesh, cache_ps):
+    """The sharded batched decode step: (params, cache, tok, pos, tables,
+    samp, step_keys) -> (next tokens, cache)."""
+
+    def body(params, cache, tok, pos, pt, samp, step_keys):
+        logits, cache = Dec.decode_step(
+            params, cfg, cache, tok, pos, page_tables=pt, model_axis=MODEL_AXIS
+        )
+        nxt = Smp.sample_tokens(
+            logits, step_keys, samp["temperature"], samp["top_k"], samp["top_p"]
+        )
+        return nxt, cache
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),
+            cache_ps,
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+            P(DATA_AXIS, None),
+            _samp_specs(),
+            P(DATA_AXIS, None),
+        ),
+        out_specs=(P(DATA_AXIS), cache_ps),
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+def chunk_fn(cfg, mesh, cache_ps, start: int, bucket_len: int):
+    """One sharded prefill chunk: (params, cache, toks, tables,
+    write_tables, last_index) -> (logits (D, V), cache).  Row d of every
+    operand belongs to data shard d; only the owner's row is live."""
+
+    def body(params, cache, toks, pt, wt, li):
+        return Dec.prefill_chunk(
+            params,
+            cfg,
+            cache,
+            toks,
+            pt,
+            start=start,
+            last_index=li,
+            bucket_len=bucket_len,
+            write_tables=wt,
+            model_axis=MODEL_AXIS,
+        )
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),
+            cache_ps,
+            P(DATA_AXIS, None),
+            P(DATA_AXIS, None),
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+        ),
+        out_specs=(P(DATA_AXIS, None), cache_ps),
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(1,))

@@ -18,7 +18,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 F32 = jnp.float32
 

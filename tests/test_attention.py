@@ -1,7 +1,5 @@
 """Attention implementation equivalences against the dense-mask oracle."""
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,8 +9,7 @@ from repro.core.attention import AttentionSpec, attention
 from repro.core.blockified import bigbird_attention_blockified
 from repro.core.chunked_full import chunked_full_attention
 from repro.core.ref_attention import (bigbird_attention_reference,
-                                      full_attention_reference,
-                                      sliding_window_reference)
+                                      full_attention_reference)
 
 RNG = np.random.default_rng(0)
 

@@ -3,7 +3,6 @@
 Per the deliverable: each kernel swept over shapes and dtypes with
 assert_allclose against ref.py.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

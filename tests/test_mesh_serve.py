@@ -1,0 +1,320 @@
+"""Mesh-parallel serving: the sharded bit-identity contract and the
+per-data-shard PagePool invariants (DESIGN.md §Mesh-parallel serving).
+
+These run in the CI multi-device job under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 and self-skip when the
+process has fewer devices than a mesh needs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec
+from repro.dist import sharding as Sh
+from repro.models import model as M
+from repro.serve import Engine, Request, SamplingSpec
+
+try:
+    from _prop import given, settings, st
+except ImportError:
+    from tests._prop import given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+MESHES = ((1, 1), (2, 1), (1, 2), (2, 2))
+
+pytestmark = pytest.mark.multidevice
+
+
+def _need(n):
+    if len(jax.devices()) < n:
+        pytest.skip(
+            f"needs {n} devices (have {len(jax.devices())}); run with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+
+
+def _mesh(d, m):
+    _need(d * m)
+    from repro.serve import mesh as Mx
+
+    return Mx.make_mesh(d, m)
+
+
+def _cfg(impl="blockified", kv_heads=2, scan=False, layers=2):
+    bb = AttentionSpec(
+        kind="bigbird",
+        causal=True,
+        block_size=8,
+        num_window_blocks=3,
+        num_global_blocks=1,
+        num_random_blocks=1,
+        impl=impl,
+    )
+    return M.ModelConfig(
+        name="mesh-test",
+        d_model=32,
+        num_layers=layers,
+        num_heads=4,
+        num_kv_heads=kv_heads,
+        d_ff=64,
+        vocab_size=128,
+        attn=bb,
+        dtype=jnp.float32,
+        scan_layers=scan,
+        remat="none",
+        loss_chunk=32,
+        max_seq=256,
+    )
+
+
+def _serve(cfg, params, prompts, mesh=None, capacity=4, max_new=8):
+    eng = Engine(
+        cfg, params, max_len=64, capacity=capacity, prefill_chunk=2, mesh=mesh
+    )
+    for i, p in enumerate(prompts):
+        spec = SamplingSpec(temperature=0.8, top_k=20, seed=i)
+        eng.submit(Request(prompt=p, max_new_tokens=max_new, sampling=spec))
+    return [r.tokens for r in eng.drain()], eng
+
+
+# --------------------------------------------------------------------------
+# sharded bit-identity across mesh shapes
+# --------------------------------------------------------------------------
+
+
+@given(dxm=st.sampled_from(MESHES), seed=st.integers(0, 3))
+@settings(max_examples=12, deadline=None)
+def test_sharded_decode_bit_identical_to_replicated(dxm, seed):
+    """Property: for every mesh shape and prompt set, the sharded engine
+    emits exactly the replicated engine's token streams."""
+    d, m = dxm
+    _need(d * m)
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(4, cfg.vocab_size, size=int(n)).astype(np.int32)
+        for n in rng.integers(9, 40, size=4)
+    ]
+    ref, _ = _serve(cfg, params, prompts, mesh=None)
+    got, _ = _serve(cfg, params, prompts, mesh=_mesh(d, m))
+    assert got == ref, (d, m)
+
+
+def test_sharded_gqa_and_scanned_and_pallas():
+    """The head-slice contract holds for GQA splits down to one kv head
+    per model shard, for scanned stacks, and for the Pallas paged-decode
+    kernel running per shard."""
+    for name, cfg in (
+        ("gqa", _cfg(kv_heads=2)),
+        ("scan", _cfg(kv_heads=2, scan=True, layers=4)),
+        ("pallas", _cfg(impl="pallas")),
+    ):
+        params = M.init(cfg, KEY)
+        rng = np.random.default_rng(7)
+        prompts = [
+            rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+            for n in (19, 33, 11, 26)
+        ]
+        ref, _ = _serve(cfg, params, prompts, mesh=None)
+        got, _ = _serve(cfg, params, prompts, mesh=_mesh(2, 2))
+        assert got == ref, name
+
+
+def test_sharded_staggered_admission_matches_solo():
+    """Stagger requests across engine steps on a 2x1 mesh: every stream
+    must still match its solo (replicated, sole-resident) run."""
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (19, 33, 11, 26)
+    ]
+
+    def req(i):
+        return Request(
+            prompt=prompts[i],
+            max_new_tokens=10,
+            sampling=SamplingSpec(temperature=0.8, top_k=20, seed=i),
+        )
+
+    solo = []
+    for i in range(4):
+        eng = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2)
+        eng.submit(req(i))
+        solo.append(eng.drain()[0].tokens)
+
+    eng = Engine(
+        cfg, params, max_len=64, capacity=4, prefill_chunk=2, mesh=_mesh(2, 1)
+    )
+    eng.submit(req(0))
+    eng.step()
+    eng.submit(req(1))
+    eng.submit(req(2))
+    eng.step()
+    eng.submit(req(3))
+    results = eng.drain()
+    assert [r.request_id for r in results] == [0, 1, 2, 3]
+    for r, expect in zip(results, solo):
+        assert r.tokens == expect, r.request_id
+
+
+# --------------------------------------------------------------------------
+# per-shard PagePool invariants
+# --------------------------------------------------------------------------
+
+
+def _assert_pool_invariants(pool):
+    """Refcount/ownership invariants that must hold per data shard."""
+    pps = pool.pages_per_shard
+    for slot, s in enumerate(pool.slots):
+        if s is None:
+            continue
+        shard = pool.slot_shard(slot)
+        for pg in s.pages:
+            assert pool.page_shard(pg) == shard, (slot, pg)
+            assert pool.refcount[pg] >= 1
+        live = pool.page_tables[slot, : len(s.pages)]
+        assert all(pool.page_shard(int(p)) == shard for p in live)
+    for d in range(pool.data_shards):
+        assert pool.refcount[d * pps] == 0  # dump pages are never refcounted
+        for pg in pool._free[d]:
+            assert pool.page_shard(pg) == d
+            assert pool.refcount[pg] == 0
+
+
+@given(dxm=st.sampled_from(((1, 1), (2, 1), (2, 2))), seed=st.integers(0, 2))
+@settings(max_examples=9, deadline=None)
+def test_pool_refcount_invariants_per_shard(dxm, seed):
+    """Property: mid-flight and after drain, every slot's pages live in
+    its own shard's sub-pool, refcounts are consistent, and eviction
+    returns pages to the owning shard's free list."""
+    d, m = dxm
+    _need(d * m)
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(seed)
+    # a shared one-page prefix makes prefix pages shard-locally refcounted
+    prefix = rng.integers(4, cfg.vocab_size, size=8).astype(np.int32)
+    tails = [
+        rng.integers(4, cfg.vocab_size, size=int(n)).astype(np.int32)
+        for n in rng.integers(9, 30, size=6)
+    ]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+    mesh = _mesh(d, m) if (d, m) != (1, 1) else None
+    eng = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2, mesh=mesh)
+    for i, p in enumerate(prompts):
+        samp = SamplingSpec(seed=i)
+        eng.submit(Request(prompt=p, max_new_tokens=4 + 2 * (i % 3), sampling=samp))
+    while eng._queue or eng.pool.active_slots():
+        eng.step()
+        _assert_pool_invariants(eng.pool)
+    assert eng.pool.pages_in_use == 0
+    free_total = sum(len(f) for f in eng.pool._free)
+    assert free_total == eng.pool.num_pages - eng.pool.data_shards
+
+
+def test_cow_copy_stays_in_shard():
+    """The copy-on-write guard allocates the private copy from the
+    writer's own shard's free list."""
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    eng = Engine(
+        cfg, params, max_len=64, capacity=4, prefill_chunk=2, mesh=_mesh(2, 1)
+    )
+    pool = eng.pool
+    rng = np.random.default_rng(9)
+    for i in range(4):  # slots 0,1 -> shard 0; slots 2,3 -> shard 1
+        prompt = rng.integers(4, cfg.vocab_size, size=12).astype(np.int32)
+        samp = SamplingSpec(seed=i)
+        eng.submit(Request(prompt=prompt, max_new_tokens=10, sampling=samp))
+    while pool.prefill_slots() or eng._queue:
+        eng.step()
+    slot = pool.cap_local  # first slot of shard 1
+    s = pool.slots[slot]
+    peer = pool.slots[slot + 1]
+    # force an artificial intra-shard share, then trigger the guard
+    old = s.pages[0]
+    alias = peer.pages[0]
+    pool.refcount[old] -= 1
+    pool._free[1].append(old)
+    s.pages[0] = alias
+    pool.refcount[alias] += 1
+    pool.page_tables[slot, 0] = alias
+    assert pool.ensure_writable(slot, 0) is True
+    new = s.pages[0]
+    assert new != alias and pool.page_shard(new) == 1
+    assert pool.refcount[alias] == 1 and pool.refcount[new] == 1
+    _assert_pool_invariants(pool)
+
+
+def test_page_exhaustion_queues_per_shard():
+    """One shard's sub-pool running dry must not block the other shard;
+    the starved shard's requests wait and still complete."""
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(6)
+    # per shard: 5 usable pages; each request needs 4 -> one resident per
+    # shard at a time, remaining requests queue
+    eng = Engine(
+        cfg,
+        params,
+        max_len=64,
+        capacity=4,
+        prefill_chunk=2,
+        num_pages=12,
+        mesh=_mesh(2, 1),
+    )
+    for i in range(4):
+        prompt = rng.integers(4, cfg.vocab_size, size=24).astype(np.int32)
+        samp = SamplingSpec(seed=i)
+        eng.submit(Request(prompt=prompt, max_new_tokens=8, sampling=samp))
+    results = eng.drain()
+    assert [r.request_id for r in results] == [0, 1, 2, 3]
+    assert all(len(r.tokens) == 8 for r in results)
+    assert max(eng.pool.peak_pages_per_shard) <= 5
+
+
+# --------------------------------------------------------------------------
+# validation and stats partitioning
+# --------------------------------------------------------------------------
+
+
+def test_validate_serving_mesh_rejects_bad_shapes():
+    cfg = _cfg(kv_heads=2)
+    mesh = _mesh(1, 4)  # model=4 does not divide num_kv_heads=2
+    with pytest.raises(ValueError, match="num_kv_heads"):
+        Sh.validate_serving_mesh(cfg, mesh, capacity=4)
+    mesh = _mesh(3, 1)  # data=3 does not divide capacity=4
+    with pytest.raises(ValueError, match="capacity"):
+        Sh.validate_serving_mesh(cfg, mesh, capacity=4)
+    mesh = _mesh(2, 1)
+    with pytest.raises(ValueError, match="num_pages"):
+        Sh.validate_serving_mesh(cfg, mesh, capacity=4, num_pages=7)
+
+
+def test_mesh_requires_chunked_prefill_config():
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    with pytest.raises(ValueError, match="chunked-prefill"):
+        Engine(
+            cfg, params, max_len=64, capacity=4, prefill_chunk=None, mesh=_mesh(2, 1)
+        )
+
+
+def test_pool_stats_partitioned_per_shard():
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    prompts = [np.arange(4, 24 + 4 * i, dtype=np.int32) % 100 + 4 for i in range(4)]
+    _, eng = _serve(cfg, params, prompts, mesh=_mesh(2, 1))
+    st_ = eng.stats()
+    assert st_.data_shards == 2
+    assert len(st_.pages_in_use_per_shard) == 2
+    assert len(st_.peak_pages_per_shard) == 2
+    assert st_.num_pages == 2 * st_.pages_per_shard
+    assert sum(st_.pages_in_use_per_shard) == st_.pages_in_use == 0
+    assert st_.kv_bytes_per_shard > 0
+    # both shards admitted work (2 slots each, 4 requests)
+    assert all(p > 0 for p in st_.peak_pages_per_shard)

@@ -270,7 +270,6 @@ def test_chunked_prefill_engine_matches_one_shot_engine():
     engine token for token (chunked prefill is exact, not approximate)."""
     cfg = _small_cfg()
     params = M.init(cfg, KEY)
-    rng = np.random.default_rng(11)
     reqs = lambda: [
         Request(prompt=rng1.integers(4, cfg.vocab_size, size=l)
                 .astype(np.int32),
@@ -329,7 +328,8 @@ def test_shared_prefix_refcount_lifecycle():
     assert results[1].shared_prefix_pages == 1
     assert results[0].tokens == solo[0][:6]
     assert eng.pool.refcount[shared_pg] == 0
-    assert len(eng.pool._free) == eng.pool.num_pages - 1   # all returned
+    free_total = sum(len(f) for f in eng.pool._free)
+    assert free_total == eng.pool.num_pages - 1            # all returned
     assert not eng.pool._prefix and not eng.pool._page_key
 
 
@@ -350,7 +350,7 @@ def test_copy_on_write_guard():
     old = pool.slots[1].pages[0]
     alias = pool.slots[0].pages[0]
     pool.refcount[old] -= 1
-    pool._free.append(old)
+    pool._free[0].append(old)
     pool.slots[1].pages[0] = alias
     pool.refcount[alias] += 1
     pool.page_tables[1, 0] = alias

@@ -3,7 +3,6 @@ sharding rules, elastic replan, straggler policy."""
 import dataclasses
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests: training convergence (CLM + the paper's MLM
 objective), fault-tolerant restart, serving roundtrip, gradient compression,
 multi-device sharding smoke (fake 8-device mesh in a subprocess)."""
-import json
 import os
 import subprocess
 import sys
@@ -9,7 +8,6 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs
