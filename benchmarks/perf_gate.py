@@ -10,10 +10,21 @@ Two classes of metric, gated differently:
   `kv_bytes_per_request_paged` beyond 1%, or a change of `page_size` /
   `max_concurrency_paged` / `kv_reduction`, fails the build.  A memory
   regression in the paged pool cannot hide behind a fast runner.
-* TIMING metrics (ttft_s, decode_tok_s, continuous_tok_s) gate on wide
-  relative bands (default 4x), because shared CI runners are noisy; the
-  bands catch order-of-magnitude regressions (a de-jitted hot loop, an
-  accidental recompile per token) without flaking on scheduler jitter.
+* TIMING metrics (ttft_s, decode_tok_s, continuous_tok_s,
+  spec_continuous_tok_s) gate on wide relative bands (default 4x),
+  because shared CI runners are noisy; the bands catch order-of-magnitude
+  regressions (a de-jitted hot loop, an accidental recompile per token)
+  without flaking on scheduler jitter.
+
+Speculative-decoding metrics (benchmarks/serving.py --spec) gate on both
+sides: `spec_outputs_match` must stay true (greedy speculation is
+lossless BY CONSTRUCTION — a false here means accepted tokens diverged
+from the vanilla stream, a correctness bug no timing band should excuse),
+and `spec_acceptance_rate` may not fall below
+max(base − ACCEPT_DROP_TOL, base · ACCEPT_REL_FLOOR) (the draft pipeline
+silently proposing garbage is a real regression even when wall-clock
+stays inside the wide band).  Spec fields
+are gated only when the baseline carries them.
 
 Exit code 0 = within bands, 1 = regression, 2 = usage/parse error.
 
@@ -34,6 +45,9 @@ BASELINE = "benchmarks/baselines/BENCH_serving.json"
 
 STRUCTURAL_EXACT = ("page_size", "max_concurrency_paged", "kv_reduction")
 KV_GROWTH_TOL = 0.01  # hard gate: paged KV bytes/request may grow <= 1%
+ACCEPT_DROP_TOL = 0.15   # spec acceptance may drop <= 15 points absolute...
+ACCEPT_REL_FLOOR = 0.5   # ...but never below half the baseline rate (the
+#                          absolute band alone is vacuous for small baselines)
 
 
 def parse_serving_json(text: str) -> dict:
@@ -69,6 +83,36 @@ def check(fresh: dict, base: dict, timing_band: float) -> list:
         if fresh[key] * timing_band < base[key]:
             bad.append(
                 f"{key} {fresh[key]} vs baseline {base[key]} "
+                f"(band {timing_band}x)"
+            )
+
+    # speculative-decoding gates, active once the baseline carries them
+    if "spec_acceptance_rate" in base:
+        if "spec_acceptance_rate" not in fresh:
+            bad.append(
+                "spec metrics missing from fresh run "
+                "(benchmarks/serving.py must run with --spec)"
+            )
+            return bad
+        if fresh.get("spec_outputs_match") is not True:
+            bad.append(
+                "spec_outputs_match is not true: greedy speculative decode "
+                "diverged from the vanilla token streams (lossless-"
+                "acceptance correctness bug, not a perf regression)"
+            )
+        a_f, a_b = fresh["spec_acceptance_rate"], base["spec_acceptance_rate"]
+        floor = max(a_b - ACCEPT_DROP_TOL, a_b * ACCEPT_REL_FLOOR)
+        if a_f < floor:
+            bad.append(
+                f"spec_acceptance_rate dropped {a_b} -> {a_f} "
+                f"(floor {floor:.4f}: -{ACCEPT_DROP_TOL} absolute, "
+                f"x{ACCEPT_REL_FLOOR} relative)"
+            )
+        if fresh["spec_continuous_tok_s"] * timing_band < \
+                base["spec_continuous_tok_s"]:
+            bad.append(
+                f"spec_continuous_tok_s {fresh['spec_continuous_tok_s']} vs "
+                f"baseline {base['spec_continuous_tok_s']} "
                 f"(band {timing_band}x)"
             )
     return bad

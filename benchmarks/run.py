@@ -51,8 +51,14 @@ def _run_one(name: str) -> bool:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--only", nargs="*", default=None, metavar="NAME",
+                    help="run only the named sub-benchmark(s), e.g. "
+                         "--only serving (choices: " + ", ".join(BENCHES)
+                         + ")")
     args = ap.parse_args()
+    unknown = [n for n in (args.only or []) if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choices: {BENCHES}")
     names = args.only or BENCHES
     failures = []
     for name in names:

@@ -5,7 +5,14 @@ Measurements over a small BigBird LM (bounded decode, paged KV pool):
   serving_decode        — steady-state jitted-loop decode tok/s;
   serving_continuous    — page-pool throughput with staggered admits,
                           chunked prefill, heterogeneous prompt lengths and
-                          a shared prompt prefix (prefix-page hits).
+                          a shared prompt prefix (prefix-page hits);
+  serving_spec          — (--spec) the same continuous workload through the
+                          speculative draft/verify path (n-gram provider):
+                          spec-vs-vanilla tok/s, acceptance rate, and the
+                          accepted-length histogram.  Greedy speculation is
+                          lossless, so `spec_outputs_match` asserts the
+                          spec digest equals the vanilla digest — a CI-level
+                          restatement of the token-identity contract.
 
 Memory rows compare the paged pool against the slot-contiguous layout it
 replaced (capacity x max_len reservation per slot):
@@ -39,7 +46,7 @@ import numpy as np
 from benchmarks.common import row
 from repro.core.attention import AttentionSpec
 from repro.models import model as M
-from repro.serve import Engine, Request, SamplingSpec
+from repro.serve import Engine, Request, SamplingSpec, SpecConfig
 
 B, PROMPT, GEN, MAXLEN = 4, 256, 24, 512
 
@@ -67,6 +74,11 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve the continuous section over a (data, model) "
                          "mesh, e.g. 2x2 (needs D*M visible devices)")
+    ap.add_argument("--spec", action="store_true",
+                    help="also run the continuous workload through the "
+                         "speculative draft/verify path")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per verify round (default 4)")
     args = ap.parse_args(argv)
     mesh = None
     mesh_name = "1x1"
@@ -102,17 +114,19 @@ def main(argv=None):
     g_prefix = rng.integers(4, cfg.vocab_size,
                             size=engine.pool.page_size).astype(np.int32)
     lens = rng.integers(PROMPT // 4, PROMPT, size=2 * B)
+    # one fixed prompt set: every wave (warmup, vanilla, spec) serves the
+    # same tokens, so greedy digests are comparable across sections
+    wl_prompts = [np.concatenate(
+        [g_prefix, rng.integers(4, cfg.vocab_size,
+                                size=int(l)).astype(np.int32)])
+        for l in lens]
 
     def make_reqs(seed0):
         # heterogeneous decode budgets stagger the finishes, so second-wave
         # admits overlap live first-wave residents (prefix pages shareable)
-        return [Request(
-            prompt=np.concatenate(
-                [g_prefix, rng.integers(4, cfg.vocab_size,
-                                        size=int(l)).astype(np.int32)]),
-            max_new_tokens=GEN + 8 * (i % 4),
-            sampling=SamplingSpec(seed=seed0 + i))
-            for i, l in enumerate(lens)]
+        return [Request(prompt=p, max_new_tokens=GEN + 8 * (i % 4),
+                        sampling=SamplingSpec(seed=seed0 + i))
+                for i, p in enumerate(wl_prompts)]
 
     # warm the chunked-prefill executables every wave will hit
     for r in make_reqs(100):
@@ -131,6 +145,50 @@ def main(argv=None):
     t_cb = time.perf_counter() - t0
     cb_toks = sum(len(r.tokens) for r in results)
     cb_tps = cb_toks / max(t_cb, 1e-9)
+    mean_tpot = float(np.mean([r.tpot_s for r in results]))
+    mean_ttft = float(np.mean([r.ttft_s for r in results]))
+
+    # ---- speculative decoding: same workload, draft/verify path ----------
+    spec_json = {}
+    if args.spec:
+        spec_eng = Engine(cfg, params, max_len=MAXLEN, capacity=B,
+                          spec=SpecConfig(k=args.spec_k, provider="ngram"))
+        for r in make_reqs(100):       # warm the verify/chunk executables
+            spec_eng.submit(r)
+        spec_eng.drain()
+        spec_eng.pool.reset_stats()
+        spec_eng.spec_stats(reset=True)
+        reqs = make_reqs(0)
+        for r in reqs[:B]:
+            spec_eng.submit(r)
+        spec_eng.step()
+        t0 = time.perf_counter()
+        for r in reqs[B:]:
+            spec_eng.submit(r)
+        spec_results = spec_eng.drain()
+        t_sp = time.perf_counter() - t0
+        sp_toks = sum(len(r.tokens) for r in spec_results)
+        sp_tps = sp_toks / max(t_sp, 1e-9)
+        proposed = sum(r.draft_proposed for r in spec_results)
+        accepted = sum(r.draft_accepted for r in spec_results)
+        sstats = spec_eng.spec_stats()
+        spec_json = {
+            "spec_k": args.spec_k,
+            "spec_provider": "ngram",
+            "spec_continuous_tok_s": round(sp_tps, 1),
+            "spec_speedup": round(sp_tps / max(cb_tps, 1e-9), 3),
+            "spec_acceptance_rate": round(accepted / max(proposed, 1), 4),
+            "spec_mean_accepted_len": round(sstats["mean_accepted_len"], 3),
+            "spec_accept_len_hist": sstats["accept_len_hist"],
+            "spec_mean_tpot_s": round(float(np.mean(
+                [r.tpot_s for r in spec_results])), 6),
+            # greedy speculation is lossless: same streams, same digest
+            "spec_outputs_match": _digest(spec_results) == _digest(results),
+        }
+        row("serving_spec", t_sp / max(sp_toks, 1) * 1e6,
+            f"{sp_tps:.1f}tok/s;k={args.spec_k};"
+            f"accept={spec_json['spec_acceptance_rate']:.0%};"
+            f"match={spec_json['spec_outputs_match']}")
 
     # ---- paged-vs-slot-contiguous memory accounting ----------------------
     st = engine.stats()
@@ -168,7 +226,10 @@ def main(argv=None):
         "decode_tok_s": round(dec_tps, 1),
         "continuous_tok_s": round(cb_tps, 1),
         "continuous_requests": len(results),
+        "mean_ttft_s": round(mean_ttft, 6),
+        "mean_tpot_s": round(mean_tpot, 6),
         "outputs_digest": _digest(results),
+        **spec_json,
         "page_size": st.page_size,
         "kv_bytes_per_request_paged": round(kv_paged),
         "kv_bytes_per_request_slot": round(kv_slot),

@@ -26,9 +26,11 @@ _MODULES = {
     "rwkv6-7b": "rwkv6_7b",
     "jamba-1.5-large-398b": "jamba_1_5_large_398b",
     "bigbird-base": "bigbird_base",
+    "bigbird-draft": "bigbird_draft",
 }
 
-ARCHS = tuple(k for k in _MODULES if k != "bigbird-base")
+ARCHS = tuple(k for k in _MODULES
+              if k not in ("bigbird-base", "bigbird-draft"))
 
 # assigned LM shapes: (seq_len, global_batch, mode)
 SHAPES = {

@@ -1,0 +1,38 @@
+"""BigBird-draft — a small causal BigBird LM for speculative drafting.
+
+A ~4-layer, quarter-width sibling of bigbird-base used as the `ModelDraft`
+provider in the speculative-decoding subsystem (serve/spec.py): it drafts
+k greedy tokens per verify round over its own slot-contiguous cache.  The
+draft shares the target's vocabulary (a hard requirement — acceptance
+compares token ids) and keeps the same pattern block size so its bounded
+decode stays O((g+w+r)·b) per token too; every other dimension is shrunk
+for draft-side latency, since drafting sits on the serving critical path.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+from repro.models.model import LayerSpec, ModelConfig
+
+notes = "speculative draft model for bigbird-base serving (beyond-paper)"
+
+DRAFT_ATTN = AttentionSpec(kind="bigbird", causal=True, block_size=64,
+                           num_window_blocks=3, num_global_blocks=2,
+                           num_random_blocks=3, impl="blockified")
+
+CONFIG = ModelConfig(
+    name="bigbird-draft",
+    d_model=192, num_layers=4, num_heads=4, num_kv_heads=4, head_dim=48,
+    d_ff=768, vocab_size=50358,
+    layer_pattern=(LayerSpec(kind="attn"),),
+    attn=DRAFT_ATTN, tie_embeddings=True,
+    dtype=jnp.bfloat16, remat="none", scan_layers=False, max_seq=4096,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, d_model=32, num_layers=1, num_heads=2, num_kv_heads=2,
+    head_dim=16, d_ff=64, vocab_size=512,
+    attn=dataclasses.replace(DRAFT_ATTN, block_size=16, num_window_blocks=3,
+                             num_global_blocks=1, num_random_blocks=1),
+    dtype=jnp.float32, loss_chunk=64, max_seq=256)

@@ -13,10 +13,17 @@ continuous-batching path instead: slots and KV pages shard over the data
 axis, kv heads over the model axis, and every request's token stream is
 bit-identical to the replicated run (DESIGN.md §Mesh-parallel serving).
 Needs D*M visible devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+`--spec K` (e.g. `--spec 4`) serves through the speculative-decoding
+path: a draft provider (`--spec-provider ngram|draft`, the latter a small
+bigbird-draft model) proposes up to K tokens per slot per step and one
+verify forward scores them all — losslessly, so the streams match the
+vanilla engine's exactly (DESIGN.md §Speculative decoding).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,7 +32,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import model as M
-from repro.serve import Engine, Request, SamplingSpec
+from repro.serve import Engine, Request, SamplingSpec, SpecConfig
 
 
 def main(argv=None):
@@ -41,7 +48,15 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve over a (data, model) mesh, e.g. 2x2")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding with K draft tokens/round")
+    ap.add_argument("--spec-provider", default="ngram",
+                    choices=("ngram", "draft"),
+                    help="draft source: prompt-lookup n-grams or a small "
+                         "bigbird-draft model")
     args = ap.parse_args(argv)
+    assert not (args.mesh and args.spec), \
+        "--mesh and --spec are separate demo paths; pick one"
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -67,15 +82,11 @@ def main(argv=None):
     sampling = SamplingSpec(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed)
 
-    if args.mesh:
-        # mesh-parallel serving goes through the paged continuous-batching
-        # path (submit/step/drain) — the sharded hot loop.  It requires a
-        # causal attention-only LM; encoder-style (MLM) bigbird configs are
-        # served with their pattern flipped causal, the standard
-        # decoder-only serving arrangement.
-        import dataclasses
-
-        from repro.serve import mesh as Mx
+    if args.mesh or args.spec:
+        # both demo paths serve through paged continuous batching
+        # (submit/step/drain), which requires a causal attention-only LM;
+        # encoder-style (MLM) bigbird configs are served with their
+        # pattern flipped causal, the standard decoder-only arrangement.
         if (cfg.kind == "lm" and cfg.attn.kind in ("bigbird", "window")
                 and not cfg.attn.causal
                 and all(ls.kind == "attn" and ls.attn is None
@@ -83,7 +94,39 @@ def main(argv=None):
             # causality changes no param shape: the existing weights serve
             cfg = dataclasses.replace(
                 cfg, attn=dataclasses.replace(cfg.attn, causal=True))
-            print(f"[serve] mesh serving: flipped {args.arch} causal")
+            print(f"[serve] continuous serving: flipped {args.arch} causal")
+
+    if args.spec:
+        # speculative decoding: draft/verify with lossless acceptance
+        spec = SpecConfig(k=args.spec, provider="ngram")
+        if args.spec_provider == "draft":
+            dcfg = (configs.smoke("bigbird-draft") if args.smoke
+                    else configs.get("bigbird-draft"))
+            dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size)
+            dparams = M.init(dcfg, jax.random.PRNGKey(args.seed + 1))
+            spec = SpecConfig(k=args.spec, provider="model",
+                              draft_cfg=dcfg, draft_params=dparams)
+        engine = Engine(cfg, params, max_len=max_len, capacity=B, spec=spec)
+        for i in range(B):
+            engine.submit(Request(prompt=np.asarray(prompt[i]),
+                                  max_new_tokens=gen, sampling=sampling))
+        t0 = time.time()
+        results = engine.drain()
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in results)
+        st = engine.spec_stats()
+        with_drafts = [r.acceptance_rate for r in results if r.draft_proposed]
+        acc = np.mean(with_drafts) if with_drafts else 0.0
+        print(f"[serve] arch={cfg.name} spec k={args.spec} "
+              f"provider={args.spec_provider}: {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s), mean accepted/round "
+              f"{st['mean_accepted_len']:.2f}, acceptance {acc:.0%}, "
+              f"mean TPOT {np.mean([r.tpot_s for r in results])*1e3:.1f}ms")
+        print("[serve] sample:", results[0].tokens[:16])
+        return jnp.asarray([r.tokens for r in results])
+
+    if args.mesh:
+        from repro.serve import mesh as Mx
         mesh = Mx.parse_mesh(args.mesh)
         engine = Engine(cfg, params, max_len=max_len, capacity=B, mesh=mesh)
         st = engine.stats()

@@ -639,6 +639,171 @@ def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
 
 
 # --------------------------------------------------------------------------
+# speculative verify: score k+1 candidate tokens in one paged forward
+# --------------------------------------------------------------------------
+
+def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
+                       layer, pos, n_valid, page_tables, model_axis=None):
+    """One attention layer of a verify window: T candidate tokens per slot
+    at positions [pos, pos+T), written and read through the page table.
+
+    Query t reads exactly the keys <= pos+t its pattern row admits — the
+    same gather, mask, and contraction order `decode_step` runs for a
+    single token at pos+t — so the verify logits are bit-identical to T
+    sequential decode steps over the accepted prefix (later candidates'
+    K/V are masked and contribute exactly 0; see DESIGN.md §Speculative
+    decoding).  Writes for candidates past `n_valid` (per-slot draft
+    length) or past the logical cache end are dropped (out-of-range
+    scatter with mode="drop") so padding can never alias a live page."""
+    assert spec.causal, "verify is causal-only (decoder LM serving)"
+    B, T, _ = x.shape
+    pm = p["mix"]
+    h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    positions = pos[:, None] + jnp.arange(T)              # (B, T)
+    q = (h @ pm["wq"]).reshape(B, T, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ pm["wk"]).reshape(B, T, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ pm["wv"]).reshape(B, T, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    hq_full = hq
+    if model_axis is not None:
+        q, k, v = _local_heads(q, k, v, c["k"], model_axis)
+        hq, hkv = q.shape[1], k.shape[1]
+    grp = hq // hkv
+
+    b = c["k"].shape[-2]
+    P = c["k"].shape[0]                    # (shard-local) physical pages
+    max_pages = page_tables.shape[1]
+    S = max_pages * b                      # logical cache length
+    # write the window's K/V at pos+t through the table; invalid tokens
+    # (t > n_valid, or positions past the cache end) are dropped — a
+    # clamped table lookup must never redirect them onto a live page
+    blk = jnp.clip(positions // b, 0, max_pages - 1)
+    pg = jnp.take_along_axis(page_tables, blk, axis=1)        # (B, T)
+    ok = (jnp.arange(T)[None] <= n_valid[:, None]) & (positions < S)
+    pg = jnp.where(ok, pg, P)              # out of bounds -> dropped
+    off = positions % b
+    kc = c["k"].at[pg, :, off].set(
+        k.transpose(0, 2, 1, 3).astype(c["k"].dtype), mode="drop")
+    vc = c["v"].at[pg, :, off].set(
+        v.transpose(0, 2, 1, 3).astype(c["v"].dtype), mode="drop")
+
+    # the same bigbird-vs-full decision decode_step makes at the logical
+    # cache length (the verify == sequential-decode graph key)
+    use_bb = spec.kind in ("bigbird", "window")
+    if use_bb:
+        bb = spec.bigbird_config(S)
+        nb = S // bb.block_size if S % bb.block_size == 0 else -1
+        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
+                      + bb.num_random_blocks) > nb:
+            use_bb = False
+
+    if use_bb:
+        pat = patterns.build_pattern(bb, S, layer=layer)
+        idx = jnp.asarray(pat.key_blocks)              # (nb, Ls)
+        msk = jnp.asarray(pat.key_mask)
+        jq = positions // b                            # (B, T), OOB clamps
+        row_idx, row_msk = idx[jq], msk[jq]            # (B, T, Ls)
+        Ls = row_idx.shape[-1]
+        kg = _paged_gather(kc, page_tables, row_idx.reshape(B, T * Ls)) \
+            .reshape(B, hkv, T, Ls * b, dh)
+        vg = _paged_gather(vc, page_tables, row_idx.reshape(B, T * Ls)) \
+            .reshape(B, hkv, T, Ls * b, dh)
+        flat = (row_idx[..., None] * b
+                + jnp.arange(b)).reshape(B, T, Ls * b)
+        valid = (jnp.repeat(row_msk, b, axis=-1)
+                 & (flat <= positions[:, :, None]))    # (B, T, Ls*b)
+        qf = q.reshape(B, hkv, grp, T, dh)
+        s = jnp.einsum("bhgtd,bhtkd->bhgtk", qf, kg,
+                       preferred_element_type=F32) / np.sqrt(dh)
+        s = jnp.where(valid[:, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+        o = jnp.einsum("bhgtk,bhtkd->bhgtd", pr, vg,
+                       preferred_element_type=F32)
+    else:
+        blocks = jnp.broadcast_to(
+            jnp.arange(max_pages, dtype=jnp.int32)[None], (B, max_pages))
+        ka = _paged_gather(kc, page_tables, blocks)    # (B, H, S, dh)
+        va = _paged_gather(vc, page_tables, blocks)
+        qf = q.reshape(B, hkv, grp, T, dh)
+        s = jnp.einsum("bhgtd,bhsd->bhgts", qf, ka,
+                       preferred_element_type=F32) / np.sqrt(dh)
+        cm = jnp.arange(S)[None, None] <= positions[:, :, None]  # (B, T, S)
+        s = jnp.where(cm[:, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(va.dtype)
+        o = jnp.einsum("bhgts,bhsd->bhgtd", pr, va,
+                       preferred_element_type=F32)
+    o = o.reshape(B, hq, T, dh).astype(q.dtype)
+    if model_axis is not None:
+        o = _gather_heads(o, model_axis)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, hq_full * dh)
+    x = x + o @ pm["wo"]
+    new_c = dict(c)
+    new_c["k"], new_c["v"] = kc, vc
+    if "ffn" in p:
+        if cfg.layer_pattern[layer % cfg.period].moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, new_c
+
+
+def verify_step(params, cfg: M.ModelConfig, cache, tokens, pos, n_valid,
+                page_tables, model_axis=None):
+    """Score a speculative window in ONE paged forward.
+
+    tokens (B, T) int32 — column 0 is the slot's last sampled (not yet
+    written) token, columns 1..n_valid[i] are draft candidates, the rest
+    padding; pos (B,) int32 — the position column 0 writes at (the slot's
+    next write position, exactly `decode_step`'s contract); n_valid (B,)
+    int32 — per-slot draft length (window writes past it are dropped).
+
+    Returns (logits (B, T, V) f32, cache): `logits[:, t]` is the target
+    model's next-token distribution AFTER the candidate at pos+t — the
+    distribution sequential decode would have produced at that step, bit
+    for bit.  Acceptance (greedy exact-match / residual rejection
+    sampling) is the caller's job (serve/spec.py); `decode_step` is the
+    T == 1 special case of this path.  Paged, attention-only, causal-LM
+    only — the same envelope as chunked prefill."""
+    assert all(ls.kind == "attn" for ls in cfg.layer_pattern), \
+        "speculative verify supports attention-only configs"
+    assert cfg.kind != "encdec", "speculative verify is decoder-only"
+    pos = jnp.asarray(pos, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    stack = params["layers"]
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, xs):
+            pslice, cslice = xs
+            new_c = {}
+            for i, ls in enumerate(pattern):
+                x, nc = _verify_attn_layer(
+                    pslice[f"p{i}"], cslice[f"p{i}"], x, cfg,
+                    cfg.attn_spec(ls), i, pos, n_valid, page_tables,
+                    model_axis)
+                new_c[f"p{i}"] = nc
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    else:
+        new_cache = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            x, nc = _verify_attn_layer(
+                stack[f"layer{i}"], cache[f"layer{i}"], x, cfg,
+                cfg.attn_spec(ls), i, pos, n_valid, page_tables, model_axis)
+            new_cache[f"layer{i}"] = nc
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    logits = (x @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
 # prefill (forward pass that also fills the caches)
 # --------------------------------------------------------------------------
 

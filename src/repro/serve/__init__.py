@@ -14,6 +14,7 @@ See DESIGN.md §Serving Engine for the full contract.
 from repro.serve.api import GenerateOutput, PoolStats, Request, Result
 from repro.serve.engine import Engine
 from repro.serve.sampling import SamplingSpec
+from repro.serve.spec import ModelDraft, NGramDraft, SpecConfig
 
 __all__ = ["Engine", "Request", "Result", "GenerateOutput", "PoolStats",
-           "SamplingSpec"]
+           "SamplingSpec", "SpecConfig", "NGramDraft", "ModelDraft"]

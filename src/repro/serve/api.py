@@ -40,6 +40,19 @@ class Result:
     ttft_steps: int = 0                    # engine steps from submit to 1st tok
     pages_used: int = 0                    # KV pages this request mapped
     shared_prefix_pages: int = 0           # of which reused from a co-resident
+    ttft_s: float = 0.0                    # wall-clock submit -> first token
+    tpot_s: float = 0.0                    # wall-clock per output token after
+    #                                        the first (the spec-decode win)
+    draft_proposed: int = 0                # speculative candidates verified
+    draft_accepted: int = 0                # of which the target accepted
+    verify_steps: int = 0                  # draft/verify rounds run
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Accepted fraction of speculative draft tokens (0 when the
+        request never ran a draft/verify round)."""
+        return (self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else 0.0)
 
 
 @dataclasses.dataclass
@@ -59,6 +72,7 @@ class PoolStats:
     kv_bytes_per_page: int                 # KV bytes one page holds (all layers)
     data_shards: int = 1                   # data-axis partitions of the pool
     pages_per_shard: int = 0               # usable pages per data shard
+    pages_reserved: int = 0                # promised to residents, unmapped
     pages_in_use_per_shard: List[int] = dataclasses.field(default_factory=list)
     peak_pages_per_shard: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_per_shard: int = 0            # physical KV bytes one shard holds

@@ -5,9 +5,15 @@ flat pool of physical pages `(num_pages, Hkv, page_size, dh)` — page size
 equals the BigBird pattern block size, so one pattern block is one page
 and the bounded-decode read is a two-level lookup (pattern block -> page
 table -> page).  Requests own *page lists* instead of contiguous slot
-rows: admission allocates exactly the pages a request's prompt + budget
-needs, eviction returns them, and memory — not a `capacity x max_len`
-reservation — is the only concurrency limit the pool enforces.
+rows: admission RESERVES exactly the pages a request's prompt + budget
+needs (so admission ordering is a pure function of the budget), but only
+MAPS the pages covering the prompt — decode maps reserved pages lazily as
+its write position crosses block boundaries (`ensure_capacity`), and the
+speculative-decoding verify path returns wholly-rejected pages to the
+free list (`rollback`), re-crediting the reservation.  Eviction releases
+mapped pages and forfeits the remaining reservation; memory — not a
+`capacity x max_len` reservation — is the only concurrency limit the
+pool enforces.
 
 Local page 0 of every data shard's sub-pool is a reserved DUMP page:
 idle/prefilling rows of the batched decode step write their garbage KV
@@ -46,6 +52,18 @@ from repro.models import decode as Dec
 DUMP_PAGE = 0      # local id of every shard's dump page
 
 
+def pow2_bucket(n: int, cap: int, floor: int = 16) -> int:
+    """The compiled-shape bucket for an n-long operand: the smallest
+    power of two >= n (>= floor), clamped to `cap`.  One policy shared by
+    the Engine's prompt/max_new bucketing and the draft model's prefill
+    (serve/spec.ModelDraft) — the executable-cache keying must not
+    silently diverge between them."""
+    b = floor
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 @dataclasses.dataclass
 class SlotState:
     """Host-side bookkeeping for one occupied slot."""
@@ -61,6 +79,12 @@ class SlotState:
     prefill_pos: int = 0       # next prompt position to prefill
     pages: list = dataclasses.field(default_factory=list)
     shared_pages: int = 0      # leading pages reused from the prefix index
+    reserved: int = 0          # pages reserved but not yet mapped
+    submit_time: float = 0.0   # wall-clock at Engine.submit
+    ttft_time: float = 0.0     # wall-clock when the first token was sampled
+    draft_proposed: int = 0    # speculative draft tokens offered to verify
+    draft_accepted: int = 0    # of which the target model accepted
+    verify_steps: int = 0      # draft/verify rounds this request ran
 
 
 class PagePool:
@@ -109,6 +133,10 @@ class PagePool:
         pps = self.pages_per_shard
         self._free: list = [list(range(d * pps + 1, (d + 1) * pps))
                             for d in range(data_shards)]
+        # pages promised to admitted requests but not yet mapped (lazy
+        # mapping: decode maps them as its write position advances); they
+        # stay in the free list but are invisible to admission and CoW
+        self._reserved = [0] * data_shards
         self.refcount = np.zeros(self.num_pages, np.int64)
         # content-addressed prefix index: several co-resident requests may
         # hold equivalent (bit-identical) copies of the same prefix page —
@@ -179,6 +207,16 @@ class PagePool:
     def pages_in_use_shard(self, shard: int) -> int:
         return (self.pages_per_shard - 1) - len(self._free[shard])
 
+    def pages_available(self, shard: int) -> int:
+        """Free pages not spoken for by an admitted request's reservation
+        — what admission and copy-on-write may actually take."""
+        return len(self._free[shard]) - self._reserved[shard]
+
+    @property
+    def pages_reserved(self) -> int:
+        """Pages promised to admitted requests but not yet mapped."""
+        return sum(self._reserved)
+
     def pages_needed(self, prompt_len: int, max_new: int) -> int:
         """Logical pages a request occupies: prompt + decode writes (the
         last sampled token is never written).  Chunk-grid padding beyond
@@ -233,16 +271,20 @@ class PagePool:
                   graph_key=None, shard: int = 0) -> bool:
         need = self.pages_needed(int(prompt.size), max_new)
         need -= len(self.lookup_prefix(prompt, graph_key, shard))
-        return len(self._free[shard]) >= need
+        return self.pages_available(shard) >= need
 
     def allocate(self, slot: int, prompt: np.ndarray, max_new: int,
                  graph_key=None,
                  state: Optional[SlotState] = None) -> SlotState:
         """Bind a page list + page-table row to `slot` for a new request.
 
-        Leading pages come from the prefix index when the token prefix (and
-        prefill graph) match — those are refcount-bumped, not rewritten.
-        Pages come exclusively from the slot's shard's sub-pool."""
+        The full prompt+budget page count is RESERVED (admission ordering
+        is unchanged by lazy mapping), but only the pages the prompt
+        covers are mapped now; decode maps the rest on demand
+        (`ensure_capacity`).  Leading pages come from the prefix index
+        when the token prefix (and prefill graph) match — those are
+        refcount-bumped, not rewritten.  Pages come exclusively from the
+        slot's shard's sub-pool."""
         assert self.slots[slot] is None, f"slot {slot} occupied"
         assert state is not None
         assert state.pos + state.max_new <= self.max_len + 1, \
@@ -250,20 +292,23 @@ class PagePool:
         shard = self.slot_shard(slot)
         need = self.pages_needed(int(prompt.size), max_new)
         shared = self.lookup_prefix(prompt, graph_key, shard)
-        fresh_n = need - len(shared)
-        assert fresh_n >= 0
-        if len(self._free[shard]) < fresh_n:
+        map_n = min(-(-int(prompt.size) // self.page_size), need)
+        assert len(shared) <= map_n
+        fresh_n = map_n - len(shared)
+        if self.pages_available(shard) < need - len(shared):
             raise RuntimeError(
-                f"page pool exhausted: need {fresh_n}, "
-                f"free {len(self._free[shard])} (shard {shard})")
+                f"page pool exhausted: need {need - len(shared)}, "
+                f"available {self.pages_available(shard)} (shard {shard})")
         fresh = [self._free[shard].pop() for _ in range(fresh_n)]
         pages = shared + fresh
         for pg in pages:
             self.refcount[pg] += 1
         state.pages = pages
         state.shared_pages = len(shared)
+        state.reserved = need - map_n
+        self._reserved[shard] += state.reserved
         self.page_tables[slot, :] = self.dump_page(slot)
-        self.page_tables[slot, :need] = pages
+        self.page_tables[slot, :map_n] = pages
         self.slots[slot] = state
         self.requests_admitted += 1
         if shared:
@@ -272,12 +317,55 @@ class PagePool:
         self._bump_peaks()
         return state
 
+    def ensure_capacity(self, slot: int, logical_block: int):
+        """Map reserved pages so the slot's table covers `logical_block`
+        (decode/verify write positions cross block boundaries lazily —
+        the reservation made at admission guarantees the pages exist)."""
+        s = self.slots[slot]
+        shard = self.slot_shard(slot)
+        assert logical_block < self.max_pages, (logical_block, self.max_pages)
+        while len(s.pages) <= logical_block:
+            assert s.reserved > 0, \
+                f"slot {slot} writing block {logical_block} beyond its " \
+                f"reserved budget ({len(s.pages)} pages mapped)"
+            pg = self._free[shard].pop()
+            assert self.refcount[pg] == 0
+            s.reserved -= 1
+            self._reserved[shard] -= 1
+            self.refcount[pg] = 1
+            s.pages.append(pg)
+            self.page_tables[slot, len(s.pages) - 1] = pg
+        self._bump_peaks()
+
+    def rollback(self, slot: int, keep_blocks: int):
+        """Speculative-decode rollback: unmap the slot's pages past the
+        block holding the last ACCEPTED token, returning them to the free
+        list and re-crediting the reservation.  Only private speculative
+        pages are ever released — shared (refcounted > 1, prefix-indexed)
+        pages sit strictly below the prompt end, which is below any
+        accepted position, so `keep_blocks` can never reach them."""
+        s = self.slots[slot]
+        shard = self.slot_shard(slot)
+        assert keep_blocks >= s.shared_pages, (keep_blocks, s.shared_pages)
+        while len(s.pages) > keep_blocks:
+            pg = s.pages.pop()
+            assert self.refcount[pg] == 1 and pg not in self._page_key, \
+                f"rollback would release shared page {pg}"
+            self.refcount[pg] = 0
+            self._free[shard].append(pg)
+            s.reserved += 1
+            self._reserved[shard] += 1
+            self.page_tables[slot, len(s.pages)] = self.dump_page(slot)
+
     def evict(self, slot: int):
-        """Release the slot: decref its pages; pages at refcount 0 return to
-        the free list (and leave the prefix index — sharing is between
-        co-resident requests only)."""
+        """Release the slot: decref its mapped pages and forfeit its
+        remaining reservation; pages at refcount 0 return to the free list
+        (and leave the prefix index — sharing is between co-resident
+        requests only)."""
         s = self.slots[slot]
         if s is not None:
+            self._reserved[self.slot_shard(slot)] -= s.reserved
+            s.reserved = 0
             for pg in s.pages:
                 self.refcount[pg] -= 1
                 assert self.refcount[pg] >= 0
@@ -308,7 +396,7 @@ class PagePool:
         if self.refcount[old] <= 1:
             return False
         shard = self.slot_shard(slot)
-        if not self._free[shard]:
+        if self.pages_available(shard) <= 0:
             raise RuntimeError("page pool exhausted during copy-on-write")
         new = self._free[shard].pop()
         self.cache = self._copier(self.cache, jnp.asarray(new, jnp.int32),

@@ -28,10 +28,18 @@ mesh-parallel: slots and the paged KV pool partition over `data`, kv
 heads over `model`, and the decode/prefill-chunk executables run under
 `shard_map` with token streams bit-identical to the replicated engine
 (DESIGN.md §Mesh-parallel serving).
+
+`spec=` (a `SpecConfig`) turns on speculative decoding over the
+continuous-batching path: a draft provider proposes up to k tokens per
+slot per step, ONE multi-token verify forward scores them all, and a
+lossless acceptance rule (greedy exact-match / residual rejection
+sampling) emits 1..k+1 tokens per round (serve/spec.py, DESIGN.md
+§Speculative decoding).
 """
 from __future__ import annotations
 
 import collections
+import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -41,9 +49,11 @@ import numpy as np
 from repro.models import decode as Dec
 from repro.models import model as M
 from repro.serve import sampling as Smp
+from repro.serve import spec as Spc
 from repro.serve.api import GenerateOutput, PoolStats, Request, Result
-from repro.serve.batching import PagePool, SlotState
+from repro.serve.batching import PagePool, SlotState, pow2_bucket
 from repro.serve.sampling import SamplingSpec
+from repro.serve.spec import SpecConfig
 
 I32 = jnp.int32
 
@@ -61,7 +71,8 @@ class Engine:
 
     def __init__(self, cfg: M.ModelConfig, params, *, max_len: int = 0,
                  capacity: int = 4, num_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = 4, mesh=None):
+                 prefill_chunk: Optional[int] = 4, mesh=None,
+                 spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
@@ -114,6 +125,30 @@ class Engine:
             self._slot_step = Mx.slot_step_fn(cfg, mesh, self._cache_ps)
         self._chunk_tokens = (prefill_chunk * self.pool.page_size
                               if self._chunked else None)
+
+        # speculative decoding: draft provider + the multi-token verify
+        # executable (serve/spec.py; DESIGN.md §Speculative decoding)
+        self.spec = spec
+        self._provider = None
+        self._accept_hist = None
+        if spec is not None:
+            if (self.pool is None or not _attn_only(cfg)
+                    or not all(cfg.attn_spec(ls).causal
+                               for ls in cfg.layer_pattern)):
+                raise ValueError(
+                    "speculative decoding requires an attention-only "
+                    "causal LM config (the paged verify envelope)")
+            self._provider = Spc.make_provider(spec, cfg, capacity,
+                                               self.max_len)
+            self._accept_hist = np.zeros(spec.k + 1, np.int64)
+            if mesh is not None:
+                from repro.serve import mesh as Mx
+                self._verify = Mx.verify_fn(cfg, mesh, self._cache_ps)
+            else:
+                self._verify = jax.jit(
+                    lambda p, c, tok, pos, nv, pt: Dec.verify_step(
+                        p, cfg, c, tok, pos, nv, pt),
+                    donate_argnums=(1,))
         self._queue: collections.deque = collections.deque()
         self._slot_meta: dict = {}     # slot -> (request, base key, submit step)
         self._next_id = 0
@@ -128,19 +163,13 @@ class Engine:
         assert 1 <= n <= self.max_len, (n, self.max_len)
         if self._exact_prefill:
             return n                   # recurrent state: no right-padding
-        b = 16
-        while b < n:
-            b *= 2
-        return min(b, self.max_len)
+        return pow2_bucket(n, self.max_len)
 
     def bucket_new(self, n: int) -> int:
         """Compiled decode-loop bucket for max_new: power of two, with the
         true limit passed as a traced operand (tail steps are skipped by
         the loop condition, not by a separate executable)."""
-        b = 16
-        while b < n:
-            b *= 2
-        return b
+        return pow2_bucket(n, 1 << 62)
 
     def _page_bucket(self, n: int) -> int:
         """Prompt bucket rounded up to a whole number of pages — the
@@ -304,7 +333,7 @@ class Engine:
         if request.request_id is None:
             request.request_id = self._next_id
             self._next_id += 1
-        self._queue.append((request, self._step_count))
+        self._queue.append((request, self._step_count, time.perf_counter()))
         return request.request_id
 
     def _sample_first(self, logits, sampling: SamplingSpec) -> int:
@@ -313,7 +342,8 @@ class Engine:
             logits, Smp.fold_step_keys(samp1["keys"], 0),
             samp1["temperature"], samp1["top_k"], samp1["top_p"])[0])
 
-    def _admit_one(self, slot: int, request: Request, submit_step: int):
+    def _admit_one(self, slot: int, request: Request, submit_step: int,
+                   submit_time: float):
         prompt = request.prompt
         L = int(prompt.size)
         base_key = jax.random.PRNGKey(request.sampling.seed)
@@ -322,10 +352,13 @@ class Engine:
             request_id=request.request_id, pos=L, generated=0,
             max_new=request.max_new_tokens, stop_token=request.stop_token,
             tokens=[], prompt_len=L, admit_step=self._step_count,
-            phase="prefill" if self._chunked else "decode")
+            phase="prefill" if self._chunked else "decode",
+            submit_time=submit_time)
         self.pool.allocate(slot, prompt, request.max_new_tokens,
                            graph_key=graph_key, state=state)
         self._slot_meta[slot] = (request, base_key, submit_step)
+        if self._provider is not None:
+            self._provider.admit(slot, prompt)
         if self._chunked:
             # prefix-shared pages cover whole chunks -> skip their compute;
             # the final chunk (holding position L-1) always runs
@@ -340,6 +373,9 @@ class Engine:
             self.pool.write_prefill(slot, cache1)
             tok0 = self._sample_first(logits, request.sampling)
             state.tokens, state.generated = [tok0], 1
+            state.ttft_time = time.perf_counter()
+            if self._provider is not None:
+                self._provider.observe(slot, [tok0])
 
     def _run_prefill_chunk(self, slot: int):
         """One chunk of one prefilling slot: forward [start, start+C) into
@@ -389,17 +425,30 @@ class Engine:
             s.tokens, s.generated = [tok0], 1
             s.phase = "decode"
             s.admit_step = self._step_count    # the TTFT event
+            s.ttft_time = time.perf_counter()
+            if self._provider is not None:
+                self._provider.observe(slot, [tok0])
 
     def _finish(self, slot: int, reason: str) -> Result:
         state = self.pool.slots[slot]
         _, _, submit_step = self._slot_meta.pop(slot)
         pages_used = len(state.pages)
         shared = state.shared_pages
+        now = time.perf_counter()
+        n_out = len(state.tokens)
         self.pool.evict(slot)
+        if self._provider is not None:
+            self._provider.evict(slot)
         return Result(request_id=state.request_id, tokens=state.tokens,
                       prompt_len=state.prompt_len, finish_reason=reason,
                       ttft_steps=state.admit_step - submit_step + 1,
-                      pages_used=pages_used, shared_prefix_pages=shared)
+                      pages_used=pages_used, shared_prefix_pages=shared,
+                      ttft_s=state.ttft_time - state.submit_time,
+                      tpot_s=((now - state.ttft_time) / (n_out - 1)
+                              if n_out > 1 else 0.0),
+                      draft_proposed=state.draft_proposed,
+                      draft_accepted=state.draft_accepted,
+                      verify_steps=state.verify_steps)
 
     def _slot_done(self, state: SlotState) -> Optional[str]:
         if state.stop_token is not None and \
@@ -425,6 +474,7 @@ class Engine:
             kv_bytes_per_page=p.kv_bytes_per_page(),
             data_shards=p.data_shards,
             pages_per_shard=p.pages_per_shard - 1,
+            pages_reserved=p.pages_reserved,
             pages_in_use_per_shard=[p.pages_in_use_shard(d)
                                     for d in range(p.data_shards)],
             peak_pages_per_shard=list(p.peak_pages_per_shard),
@@ -442,7 +492,7 @@ class Engine:
 
         free = self.pool.free_slots()
         while free and self._queue:
-            request, _ = self._queue[0]
+            request, _, _ = self._queue[0]
             graph_key = (self._graph_key(int(request.prompt.size))
                          if self._chunked else None)
             # FIFO head-of-line per pool, but any data shard with a free
@@ -463,8 +513,8 @@ class Engine:
             if slot is None:
                 break                  # head-of-line: wait for pages
             free.remove(slot)
-            request, submit_step = self._queue.popleft()
-            self._admit_one(slot, request, submit_step)
+            request, submit_step, submit_time = self._queue.popleft()
+            self._admit_one(slot, request, submit_step, submit_time)
             s = self.pool.slots[slot]
             if s.phase == "decode":
                 reason = self._slot_done(s)
@@ -480,7 +530,9 @@ class Engine:
                     finished.append(self._finish(slot, reason))
 
         active = self.pool.decode_slots()
-        if active:
+        if active and self.spec is not None:
+            finished.extend(self._spec_decode(active))
+        elif active:
             B = self.capacity
             tok = np.zeros((B, 1), np.int32)
             counts = np.zeros((B,), np.int32)
@@ -488,6 +540,7 @@ class Engine:
             keys = [jax.random.PRNGKey(0)] * B
             for i in active:
                 s = self.pool.slots[i]
+                self.pool.ensure_capacity(i, s.pos // self.pool.page_size)
                 self.pool.ensure_writable(i, s.pos // self.pool.page_size)
                 tok[i, 0] = s.tokens[-1]
                 counts[i] = s.generated
@@ -512,6 +565,109 @@ class Engine:
 
         self._step_count += 1
         return finished
+
+    # ------------------------------------------------------------------
+    # speculative decoding: draft -> verify -> accept -> rollback
+    # ------------------------------------------------------------------
+
+    def _spec_decode(self, active: List[int]) -> List[Result]:
+        """One draft/verify round over every decoding slot (replaces the
+        single-token batched step when `spec=` is set).  Emits between 1
+        and k+1 tokens per slot; the output stream is exactly the vanilla
+        stream (greedy: token-identical; sampling: same distribution via
+        residual rejection — serve/spec.py)."""
+        k = self.spec.k
+        B, psz = self.capacity, self.pool.page_size
+        pos = self.pool.position_vector()
+        last = np.zeros((B,), np.int32)
+        budgets = np.zeros((B,), np.int32)
+        for i in active:
+            s = self.pool.slots[i]
+            last[i] = s.tokens[-1]
+            # the window must stay inside the decode budget (the token
+            # after the last accepted one is sampled, never written) and
+            # inside the logical cache
+            budgets[i] = max(0, min(k, s.max_new - s.generated - 1,
+                                    self.max_len - 1 - s.pos))
+        drafts, lens = self._provider.propose(active, last, budgets)
+        tok = np.zeros((B, k + 1), np.int32)
+        nval = np.zeros((B,), np.int32)
+        for i in active:
+            s = self.pool.slots[i]
+            n = int(min(lens[i], budgets[i]))
+            tok[i, 0] = last[i]
+            tok[i, 1:1 + n] = drafts[i, :n]
+            nval[i] = n
+            # map + privatize every page the window [pos, pos+n] writes
+            for blk in range(s.pos // psz, (s.pos + n) // psz + 1):
+                self.pool.ensure_capacity(i, blk)
+                self.pool.ensure_writable(i, blk)
+        logits_dev, self.pool.cache = self._verify(
+            self.params, self.pool.cache, jnp.asarray(tok),
+            jnp.asarray(pos), jnp.asarray(nval),
+            jnp.asarray(self.pool.table_matrix()))
+        # all-greedy batches need only per-position argmaxes — (B, k+1)
+        # int32 to host instead of the (B, k+1, V) f32 logits tensor
+        all_greedy = all(
+            self._slot_meta[i][0].sampling.temperature <= 0.0
+            for i in active)
+        if all_greedy:
+            argmaxes = np.asarray(jnp.argmax(logits_dev, axis=-1))
+            logits = None
+        else:
+            logits = np.asarray(logits_dev)            # (B, k+1, V) f32
+
+        finished: List[Result] = []
+        for i in active:
+            s = self.pool.slots[i]
+            n = int(nval[i])
+            sampling = self._slot_meta[i][0].sampling
+            if logits is None:
+                emitted, m = Spc.accept_greedy(argmaxes[i, :n + 1],
+                                               tok[i, 1:1 + n])
+            else:
+                rng = (Spc.accept_rng(sampling, s.generated)
+                       if sampling.temperature > 0.0 else None)
+                emitted, m = Spc.accept(logits[i, :n + 1], tok[i, 1:1 + n],
+                                        sampling, rng)
+            if s.stop_token is not None and s.stop_token in emitted:
+                emitted = emitted[:emitted.index(s.stop_token) + 1]
+            m = min(m, len(emitted))   # stop truncation caps what counts
+            s.tokens.extend(emitted)
+            s.generated += len(emitted)
+            s.pos += len(emitted)
+            s.draft_proposed += n
+            s.draft_accepted += m
+            s.verify_steps += 1
+            self._accept_hist[m] += 1
+            # paged rollback: unmap pages holding only rejected candidates
+            self.pool.rollback(i, (s.pos - 1) // psz + 1)
+            self._provider.observe(i, emitted)
+            reason = self._slot_done(s)
+            if reason:
+                finished.append(self._finish(i, reason))
+        return finished
+
+    def spec_stats(self, reset: bool = False) -> Optional[dict]:
+        """Aggregate speculative-decoding counters: the accepted-length
+        histogram (index m = verify rounds that accepted m draft tokens)
+        and the overall acceptance rate.  None when spec is off."""
+        if self.spec is None:
+            return None
+        hist = self._accept_hist.copy()
+        rounds = int(hist.sum())
+        accepted = sum(m * int(c) for m, c in enumerate(hist))
+        out = {
+            "k": self.spec.k,
+            "provider": self.spec.provider,
+            "verify_rounds": rounds,
+            "accept_len_hist": [int(c) for c in hist],
+            "accepted_total": accepted,
+            "mean_accepted_len": accepted / rounds if rounds else 0.0,
+        }
+        if reset:
+            self._accept_hist[:] = 0
+        return out
 
     def drain(self) -> List[Result]:
         """Run step() until the queue and every slot are empty."""

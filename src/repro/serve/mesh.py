@@ -114,6 +114,37 @@ def slot_step_fn(cfg, mesh, cache_ps):
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def verify_fn(cfg, mesh, cache_ps):
+    """The sharded speculative-verify step: (params, cache, tok (B, T),
+    pos, n_valid, tables) -> (logits (B, T, V), cache).  Slots split over
+    `data` exactly like the decode step; inside the per-shard body the
+    paged K/V leaves carry the model shard's local kv heads, so the
+    verify window runs tensor-parallel with the same head-slice +
+    all-gather contract — bit-identical to the replicated verify, which
+    is itself bit-identical to sequential decode."""
+
+    def body(params, cache, tok, pos, nv, pt):
+        return Dec.verify_step(
+            params, cfg, cache, tok, pos, nv, pt, model_axis=MODEL_AXIS
+        )
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),
+            cache_ps,
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+            P(DATA_AXIS),
+            P(DATA_AXIS, None),
+        ),
+        out_specs=(P(DATA_AXIS, None, None), cache_ps),
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 def chunk_fn(cfg, mesh, cache_ps, start: int, bucket_len: int):
     """One sharded prefill chunk: (params, cache, toks, tables,
     write_tables, last_index) -> (logits (D, V), cache).  Row d of every

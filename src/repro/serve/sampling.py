@@ -18,6 +18,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 F32 = jnp.float32
 
@@ -82,6 +83,41 @@ def sample_tokens(logits, keys, temperature, top_k, top_p):
     masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
     sampled = jnp.argmax(masked + _gumbel_rows(keys, V), axis=-1)
     return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+def truncated_probs(logits: np.ndarray, spec: SamplingSpec) -> np.ndarray:
+    """The exact distribution `sample_tokens` draws from, as a host array.
+
+    Mirrors the device kernel's truncation semantics — rank-based top-k,
+    preceding-cumulative-mass top-p (the top-1 token always survives),
+    temperature scaling in f32 — then renormalizes over the keep set.
+    The speculative-decoding acceptance rule (serve/spec.py) is defined
+    against THIS distribution, which is what makes residual rejection
+    sampling lossless w.r.t. the vanilla sampler.  The nucleus boundary
+    is accumulated in f32 to track the device arithmetic; a backend that
+    lowers softmax/cumsum as a differently-associated reduction could in
+    principle flip a token sitting exactly on the top-p boundary by one
+    ulp — a measure-zero disagreement the statistical losslessness tests
+    bound, not a structural one."""
+    assert spec.temperature > 0.0, "truncated_probs is for sampling policies"
+    v = logits.shape[-1]
+    scaled = np.asarray(logits, np.float32) / np.float32(
+        max(spec.temperature, 1e-6))
+    order = np.argsort(-scaled, kind="stable")
+    ranks = np.argsort(order, kind="stable")
+    k = v if spec.top_k <= 0 else spec.top_k
+    keep = ranks < k
+    # the keep SET must match the device bit-for-bit, so the nucleus
+    # boundary is computed in float32 exactly as sample_tokens does
+    # (softmax + cumsum in f32); only the final renormalization over the
+    # agreed keep set is done in f64 for sampling stability
+    sorted_scaled = scaled[order]
+    ex = np.exp(sorted_scaled - sorted_scaled[0], dtype=np.float32)
+    sorted_probs = (ex / ex.sum(dtype=np.float32)).astype(np.float32)
+    cum = np.cumsum(sorted_probs, dtype=np.float32)
+    keep &= ((cum - sorted_probs) < np.float32(spec.top_p))[ranks]
+    p = np.where(keep, np.exp((scaled - scaled.max()).astype(np.float64)), 0.0)
+    return p / p.sum()
 
 
 def fold_step_keys(keys, step):

@@ -1,0 +1,309 @@
+"""Speculative decoding: draft/verify serving with lossless acceptance.
+
+Per decode round, a cheap DRAFT proposes up to k candidate tokens per
+slot; the target model scores all of them (plus the slot's pending last
+token) in ONE paged forward (`models/decode.verify_step`) — amortizing k
+tokens' worth of KV-cache traffic into a single read of the pool — and an
+ACCEPTANCE rule turns the target's k+1 logit rows into between 1 and k+1
+emitted tokens:
+
+* greedy (temperature 0) — accept a candidate iff it equals the target's
+  argmax at its position; on the first mismatch emit the argmax instead.
+  Every emitted token is the argmax the sequential loop would have
+  produced, so greedy speculative decode is TOKEN-IDENTICAL to vanilla
+  greedy decode (tests/test_spec.py).
+* sampled — both providers draft greedily, i.e. the draft distribution is
+  a point mass q = delta(d), so the standard rejection rule reduces to:
+  accept d with probability p(d) under the TRUNCATED target distribution
+  (`sampling.truncated_probs` — the exact distribution the vanilla
+  sampler draws from); on rejection sample from the residual
+  norm(max(p - q, 0)) = p with d's mass removed.  By the residual-
+  sampling identity P(emit = x) = p(x)·[x = d] + (1 - p(d))·res(x) =
+  p(x): every emitted token is distributed exactly as the vanilla
+  sampler's — speculation changes latency, never the distribution.
+
+Providers implement the `DraftProvider` protocol:
+
+* `NGramDraft` — prompt-lookup drafting: match the longest recent n-gram
+  of the slot's history (prompt + emitted tokens) against an earlier
+  occurrence and propose its continuation.  Model-free, zero FLOPs,
+  works untrained; pays off on self-repetitive outputs (summaries
+  quoting the document, code, greedy cycles).
+* `ModelDraft` — a small BigBird draft model (e.g.
+  configs/bigbird_draft.py) with its own slot-contiguous KV cache,
+  drafting k greedy tokens in a batched loop.  Draft-side rollback is
+  free: rejected positions are simply re-written on the next propose
+  (contiguous cache reads mask strictly by position).
+
+Target-side rollback lives in `serve/batching.PagePool.rollback`:
+verify's window writes may lazily map reserved pages past the accepted
+region; pages left holding only rejected candidates are unmapped and
+returned to the free list, re-crediting the reservation — shared
+copy-on-write prefix pages sit strictly below the prompt end and are
+never touched (DESIGN.md §Speculative decoding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode as Dec
+from repro.serve import sampling as Smp
+from repro.serve.batching import pow2_bucket
+from repro.serve.sampling import SamplingSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative-decoding policy.
+
+    `k` draft tokens are proposed and verified per round; `provider`
+    selects the draft source ("ngram" needs nothing, "model" needs a
+    draft ModelConfig + params with the target's vocab)."""
+    k: int = 4
+    provider: str = "ngram"            # "ngram" | "model"
+    ngram_max: int = 3                 # longest suffix n-gram to match
+    ngram_min: int = 1
+    draft_cfg: object = None           # ModelConfig (provider="model")
+    draft_params: object = None
+
+    def __post_init__(self):
+        assert self.k >= 1
+        assert self.provider in ("ngram", "model"), self.provider
+        assert 1 <= self.ngram_min <= self.ngram_max
+
+
+class DraftProvider(Protocol):
+    """Per-slot draft lifecycle the Engine drives.
+
+    The contract that keeps serving bit-identical under batching: a
+    slot's proposals may depend only on that slot's own history (prompt
+    + emitted tokens), never on co-residents or slot index."""
+
+    def admit(self, slot: int, prompt: np.ndarray) -> None: ...
+
+    def observe(self, slot: int, tokens: list) -> None:
+        """Tokens the target emitted (accepted drafts + the corrected /
+        bonus token) — the slot's history advances by exactly these."""
+        ...
+
+    def propose(self, active: list, last: np.ndarray,
+                budgets: np.ndarray) -> tuple:
+        """Draft for every active slot.  `last` (capacity,) int32 — each
+        slot's pending last token; `budgets` (capacity,) int32 — max
+        usable draft length this round.  Returns (drafts (capacity, k)
+        int32, lens (capacity,) int32) with lens[i] <= budgets[i]."""
+        ...
+
+    def evict(self, slot: int) -> None: ...
+
+
+class NGramDraft:
+    """Prompt-lookup drafting (model-free).
+
+    Propose the continuation of the most recent earlier occurrence of
+    the history's longest suffix n-gram, longest n first."""
+
+    def __init__(self, k: int, max_n: int = 3, min_n: int = 1):
+        self.k, self.max_n, self.min_n = k, max_n, min_n
+        self._hist: dict = {}          # slot -> list of ints
+
+    def admit(self, slot: int, prompt: np.ndarray) -> None:
+        self._hist[slot] = [int(t) for t in prompt]
+
+    def observe(self, slot: int, tokens: list) -> None:
+        self._hist[slot].extend(int(t) for t in tokens)
+
+    def evict(self, slot: int) -> None:
+        self._hist.pop(slot, None)
+
+    def _lookup(self, hist: list, budget: int) -> list:
+        h = np.asarray(hist, np.int64)
+        L = h.size
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            suffix = h[L - n:]
+            # candidate starts of an earlier occurrence (suffix excluded)
+            windows = np.lib.stride_tricks.sliding_window_view(
+                h[:L - 1], n) if L - 1 >= n else np.empty((0, n), np.int64)
+            hits = np.nonzero((windows == suffix).all(axis=1))[0]
+            if hits.size:
+                start = int(hits[-1]) + n        # most recent occurrence
+                cont = h[start:start + budget]
+                if cont.size:
+                    return [int(t) for t in cont]
+        return []
+
+    def propose(self, active, last, budgets):
+        cap = last.shape[0]
+        drafts = np.zeros((cap, self.k), np.int32)
+        lens = np.zeros((cap,), np.int32)
+        for i in active:
+            if budgets[i] <= 0:
+                continue
+            # the history already ends with the pending last token (the
+            # engine observes every emitted batch before the next round)
+            cont = self._lookup(self._hist[i], int(budgets[i]))
+            drafts[i, :len(cont)] = cont
+            lens[i] = len(cont)
+        return drafts, lens
+
+
+class ModelDraft:
+    """Draft with a small BigBird model over its own slot-contiguous cache.
+
+    The draft follows each slot's accepted stream: `admit` prefills the
+    prompt into the slot's cache row, `propose` runs k greedy decode
+    steps batched over all slots (idle rows write their pinned garbage
+    position, exactly like the main engine's batched step), and
+    `observe` advances the write position by the emitted count — the
+    contiguous layout makes rollback implicit, since positions past the
+    write cursor are never read (strict <= pos masks) and are simply
+    re-written next round."""
+
+    def __init__(self, cfg, params, capacity: int, max_len: int,
+                 vocab_size: int, k: int):
+        assert cfg.kind == "lm" and all(
+            ls.kind == "attn" for ls in cfg.layer_pattern), \
+            "draft model must be an attention-only LM"
+        assert all(cfg.attn_spec(ls).causal for ls in cfg.layer_pattern), \
+            "draft model must be causal"
+        assert cfg.vocab_size == vocab_size, \
+            f"draft vocab {cfg.vocab_size} != target vocab {vocab_size}"
+        assert not (cfg.scan_layers and cfg.repeats > 1), \
+            "scanned draft stacks are not supported"
+        self.cfg, self.params, self.k = cfg, params, k
+        self.capacity, self.max_len = capacity, max_len
+        self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False)
+        self.pos = np.full((capacity,), max_len - 1, np.int64)
+        self._prefill = jax.jit(
+            lambda p, t, li: Dec.prefill(p, cfg, {"tokens": t}, max_len,
+                                         last_index=li))
+        self._scatter = jax.jit(
+            lambda c, one, slot: jax.tree.map(
+                lambda cl, ol: cl.at[slot].set(ol[0].astype(cl.dtype)),
+                c, one),
+            donate_argnums=(0,))
+        self._propose = jax.jit(self._propose_impl, donate_argnums=(1,))
+
+    def _propose_impl(self, params, cache, tok, pos):
+        # k+1 steps for k proposals: the final step ingests d_k's K/V
+        # (emitting nothing), so a fully-accepted round leaves no hole in
+        # the draft cache — without it the draft diverges right after its
+        # best rounds.  Rejected positions are simply re-written later.
+        outs = []
+        for t in range(self.k + 1):
+            logits, cache = Dec.decode_step(params, self.cfg, cache,
+                                            tok, pos + t)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            if t < self.k:
+                outs.append(tok)
+        return jnp.concatenate(outs, axis=1), cache
+
+    def admit(self, slot: int, prompt: np.ndarray) -> None:
+        L = int(prompt.size)
+        b = pow2_bucket(L, self.max_len)   # the Engine's prompt bucketing
+        toks = np.zeros((1, b), np.int32)
+        toks[0, :L] = prompt
+        _, one = self._prefill(self.params, jnp.asarray(toks),
+                               jnp.asarray([L - 1], jnp.int32))
+        self.cache = self._scatter(self.cache, one,
+                                   jnp.asarray(slot, jnp.int32))
+        # observe() advances by every emitted batch including the very
+        # first (prefill-sampled) token, which the draft has NOT ingested
+        # — start one short so the first propose writes it at position L
+        self.pos[slot] = L - 1
+
+    def observe(self, slot: int, tokens: list) -> None:
+        self.pos[slot] += len(tokens)
+
+    def evict(self, slot: int) -> None:
+        self.pos[slot] = self.max_len - 1
+
+    def propose(self, active, last, budgets):
+        pos = np.full((self.capacity,), self.max_len - 1, np.int64)
+        for i in active:
+            pos[i] = self.pos[i]
+        drafts, self.cache = self._propose(
+            self.params, self.cache, jnp.asarray(last, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        lens = np.zeros((self.capacity,), np.int32)
+        for i in active:
+            lens[i] = min(self.k, int(budgets[i]))
+        return np.asarray(drafts), lens
+
+
+def make_provider(spec: SpecConfig, cfg, capacity: int,
+                  max_len: int) -> DraftProvider:
+    if spec.provider == "ngram":
+        return NGramDraft(spec.k, spec.ngram_max, spec.ngram_min)
+    assert spec.draft_cfg is not None and spec.draft_params is not None, \
+        "provider='model' needs SpecConfig.draft_cfg + draft_params"
+    return ModelDraft(spec.draft_cfg, spec.draft_params, capacity,
+                      max_len, cfg.vocab_size, spec.k)
+
+
+def accept_greedy(argmax_row: np.ndarray, draft: np.ndarray) -> tuple:
+    """Greedy acceptance needs only the target's per-position argmaxes
+    (argmax_row (n+1,) int) — the Engine exploits this to keep the full
+    (B, T, V) logits on device for all-greedy batches.  Accept d_t while
+    it equals the argmax after position t; on the first mismatch emit the
+    argmax instead; after n accepts emit the bonus argmax."""
+    n = len(draft)
+    out = []
+    for t in range(n):
+        g = int(argmax_row[t])
+        out.append(g)
+        if g != int(draft[t]):
+            return out, t
+    out.append(int(argmax_row[n]))
+    return out, n
+
+
+def accept(logits: np.ndarray, draft: np.ndarray,
+           sampling: SamplingSpec,
+           rng: Optional[np.random.Generator]) -> tuple:
+    """Turn a verify window's target logits into emitted tokens.
+
+    logits (n+1, V) f32 — row t is the target's next-token distribution
+    after the candidate at window offset t; draft (n,) int32.  Returns
+    (emitted tokens list — between 1 and n+1 long, accepted draft count).
+
+    Greedy is exact-match; sampling uses residual rejection against the
+    truncated target distribution (module docstring has the identity)."""
+    n = len(draft)
+    out = []
+    if sampling.temperature <= 0.0:
+        return accept_greedy(np.argmax(logits, axis=-1), draft)
+    for t in range(n):
+        p = Smp.truncated_probs(logits[t], sampling)
+        d = int(draft[t])
+        if rng.random() <= p[d]:
+            out.append(d)
+            continue
+        res = p.copy()
+        res[d] = 0.0
+        tot = res.sum()
+        if tot <= 0.0:                 # p was a point mass on d: accept
+            out.append(d)
+            continue
+        out.append(int(rng.choice(p.size, p=res / tot)))
+        return out, t
+    p = Smp.truncated_probs(logits[n], sampling)
+    out.append(int(rng.choice(p.size, p=p)))
+    return out, n
+
+
+def accept_rng(sampling: SamplingSpec, generated: int) -> np.random.Generator:
+    """The acceptance RNG for one verify round: a function of the
+    request's seed and its own emitted-token count only, so a request's
+    sampled stream is independent of co-residents and slot index (the
+    same isolation contract as the device sampler's key folding).  The
+    64-bit mask only makes the seed non-negative for SeedSequence —
+    distinct request seeds keep distinct acceptance streams."""
+    return np.random.default_rng([0x5BEC,
+                                  sampling.seed & 0xFFFFFFFFFFFFFFFF,
+                                  generated])

@@ -107,6 +107,56 @@ def test_top_p_keeps_at_least_top1_and_respects_nucleus():
         assert 0 <= out[1] < 4
 
 
+def test_top_k_one_equals_greedy():
+    """top_k=1 at any temperature leaves only the argmax in the keep set
+    — bit-identical to greedy (the degenerate edge rejection sampling
+    leans on: a point-mass truncated distribution)."""
+    logits = _rand_logits(B=8, seed=11)
+    s = _samp(8, temperature=1.3, top_k=1)
+    for trial in range(5):
+        keys = Smp.fold_step_keys(s["keys"], trial)
+        out = Smp.sample_tokens(logits, keys, s["temperature"], s["top_k"],
+                                s["top_p"])
+        np.testing.assert_array_equal(out, jnp.argmax(logits, -1))
+
+
+def test_deterministic_tie_breaking_under_fixed_keys():
+    """Exactly tied logits: greedy must take the lowest index (argmax
+    tie rule), and sampling with a fixed key must repeat the same pick
+    call after call — no hidden nondeterminism for rejection sampling to
+    diverge on."""
+    logits = jnp.zeros((4, 16), jnp.float32).at[:, 3].set(1.0).at[:, 9].set(1.0)
+    g = _samp(4, temperature=0.0)
+    out = Smp.sample_tokens(logits, g["keys"], g["temperature"], g["top_k"],
+                            g["top_p"])
+    np.testing.assert_array_equal(out, np.full(4, 3))    # first max wins
+    s = _samp(4, temperature=1.0, top_k=2)
+    draws = [np.asarray(Smp.sample_tokens(
+        logits, Smp.fold_step_keys(s["keys"], 7), s["temperature"],
+        s["top_k"], s["top_p"])) for _ in range(5)]
+    for d in draws[1:]:
+        np.testing.assert_array_equal(d, draws[0])
+    assert set(np.concatenate(draws).tolist()) <= {3, 9}
+
+
+def test_truncated_probs_supports_device_sampler():
+    """The host mirror of the truncation rule (what speculative
+    acceptance integrates against) must carry exactly the device
+    sampler's support: every sampled token has positive mirrored
+    probability, zero-probability tokens are never drawn."""
+    logits = _rand_logits(B=1, V=64, seed=13)
+    spec = SamplingSpec(temperature=0.7, top_k=9, top_p=0.8, seed=5)
+    p = Smp.truncated_probs(np.asarray(logits[0]), spec)
+    assert abs(p.sum() - 1.0) < 1e-9 and (p >= 0).all()
+    assert int((p > 0).sum()) <= 9
+    s = Smp.spec_arrays([spec])
+    for trial in range(25):
+        keys = Smp.fold_step_keys(s["keys"], trial)
+        tok = int(Smp.sample_tokens(logits, keys, s["temperature"],
+                                    s["top_k"], s["top_p"])[0])
+        assert p[tok] > 0.0, tok
+
+
 def test_per_row_seeds_differ():
     """Per-request seeds: identical rows sample different streams."""
     logits = jnp.tile(_rand_logits(B=1, V=64, seed=5), (8, 1))

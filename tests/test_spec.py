@@ -1,0 +1,386 @@
+"""Speculative decoding: lossless acceptance over the paged KV pool.
+
+The load-bearing claims (DESIGN.md §Speculative decoding):
+  * greedy spec decode is TOKEN-IDENTICAL to vanilla greedy decode for
+    every (k, provider), including staggered continuous batching and
+    after paged rollback;
+  * sampled spec decode draws every emitted token from exactly the
+    vanilla sampler's truncated distribution (residual rejection
+    sampling — checked both at the unit level against the exact target
+    distribution and at the engine level);
+  * rollback releases only private speculative pages: refcounts, the
+    reservation ledger, and shared prefix pages all survive.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec
+from repro.models import model as M
+from repro.serve import Engine, Request, SamplingSpec, SpecConfig
+from repro.serve import sampling as Smp
+from repro.serve import spec as Spc
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(vocab=128, max_seq=256, kv_heads=4):
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    return M.ModelConfig(name="spec-test", d_model=32, num_layers=2,
+                         num_heads=4, num_kv_heads=kv_heads, d_ff=64,
+                         vocab_size=vocab, attn=bb, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=max_seq)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = _cfg()
+    return cfg, M.init(cfg, KEY)
+
+
+@pytest.fixture(scope="module")
+def vanilla_ref(built):
+    """Vanilla greedy streams for the standard prompt set (computed once
+    — every greedy-identity test diffs against these)."""
+    cfg, params = built
+    toks, _ = _drain(cfg, params, _reqs(_prompts()))
+    return toks
+
+
+def _prompts(seed=3, lens=(19, 33, 11)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, 128, size=l).astype(np.int32) for l in lens]
+
+
+def _reqs(prompts, max_new=10, **samp):
+    return [Request(prompt=p, max_new_tokens=max_new,
+                    sampling=SamplingSpec(seed=i, **samp))
+            for i, p in enumerate(prompts)]
+
+
+def _drain(cfg, params, reqs, **engine_kw):
+    eng = Engine(cfg, params, max_len=64, capacity=3, **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    return [r.tokens for r in eng.drain()], eng
+
+
+def _pool_ok(pool):
+    """Reservation-ledger + refcount invariants after drain."""
+    assert pool.pages_in_use == 0
+    assert pool.pages_reserved == 0
+    assert sum(len(f) for f in pool._free) == \
+        pool.num_pages - pool.data_shards
+    assert not pool._prefix and not pool._page_key
+
+
+# --------------------------------------------------------------------------
+# greedy: token-identity with vanilla decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 3, 4])
+def test_greedy_ngram_spec_identical_to_vanilla(built, vanilla_ref, k):
+    cfg, params = built
+    ref = vanilla_ref
+    got, eng = _drain(cfg, params, _reqs(_prompts()),
+                      spec=SpecConfig(k=k, provider="ngram"))
+    assert got == ref
+    _pool_ok(eng.pool)
+
+
+def test_greedy_model_draft_same_config_accepts_everything(built, vanilla_ref):
+    """Draft == target: every budgeted draft token must be accepted (the
+    verify logits are bit-identical to the draft's own decode — this is
+    the strongest verify==decode parity check), and the stream still
+    equals vanilla."""
+    cfg, params = built
+    ref = vanilla_ref
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=3, provider="model",
+                                 draft_cfg=cfg, draft_params=params))
+    for r in _reqs(_prompts()):
+        eng.submit(r)
+    results = eng.drain()
+    assert [r.tokens for r in results] == ref
+    assert all(r.draft_accepted == r.draft_proposed > 0 for r in results)
+    assert eng.spec_stats()["accepted_total"] > 0
+    _pool_ok(eng.pool)
+
+
+def test_greedy_model_draft_random_rejections_still_identical(built, vanilla_ref):
+    """A random unrelated draft is wrong essentially always — every round
+    exercises rejection + paged rollback — and the output must STILL be
+    exactly the vanilla stream (losslessness under total draft failure)."""
+    cfg, params = built
+    dcfg = M.ModelConfig(name="draft", d_model=16, num_layers=1,
+                         num_heads=2, num_kv_heads=2, d_ff=32,
+                         vocab_size=128, attn=cfg.attn, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=256)
+    dparams = M.init(dcfg, jax.random.PRNGKey(7))
+    ref = vanilla_ref
+    got, eng = _drain(cfg, params, _reqs(_prompts()),
+                      spec=SpecConfig(k=3, provider="model",
+                                      draft_cfg=dcfg, draft_params=dparams))
+    assert got == ref
+    _pool_ok(eng.pool)
+
+
+def test_spec_staggered_admission_matches_vanilla_solo(built):
+    """Requests joining a speculating batch mid-flight must produce
+    exactly their vanilla solo streams (per-slot draft state, acceptance
+    RNG, and rollback are all co-resident-independent)."""
+    cfg, params = built
+    prompts = _prompts(seed=5)
+    solo = []
+    for r in _reqs(prompts):
+        eng = Engine(cfg, params, max_len=64, capacity=3)
+        eng.submit(r)
+        solo.append(eng.drain()[0].tokens)
+
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=3))
+    rs = _reqs(prompts)
+    eng.submit(rs[0])
+    eng.step(); eng.step()
+    eng.submit(rs[1])
+    eng.step()
+    eng.submit(rs[2])
+    results = eng.drain()
+    assert [r.request_id for r in results] == [0, 1, 2]
+    for r, expect in zip(results, solo):
+        assert r.tokens == expect, r.request_id
+    _pool_ok(eng.pool)
+
+
+def test_spec_stop_token_inside_accepted_window(built):
+    """A stop token accepted mid-window must truncate the emission at it
+    (tokens after the stop are discarded) and finish with reason 'stop'."""
+    cfg, params = built
+    prompt = _prompts(seed=9, lens=(16,))[0]
+    free, _ = _drain(cfg, params,
+                     [Request(prompt=prompt, max_new_tokens=8,
+                              sampling=SamplingSpec(seed=0))])
+    stop = free[0][3]                  # 4th greedy token as "EOS"
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=4, provider="model",
+                                 draft_cfg=cfg, draft_params=params))
+    eng.submit(Request(prompt=prompt, max_new_tokens=8, stop_token=stop,
+                       sampling=SamplingSpec(seed=0)))
+    res = eng.drain()[0]
+    assert res.finish_reason == "stop"
+    assert res.tokens == free[0][:4]
+    _pool_ok(eng.pool)
+
+
+# --------------------------------------------------------------------------
+# paged rollback: refcounts, reservations, shared prefix pages
+# --------------------------------------------------------------------------
+
+def _step_invariants(pool):
+    """Mid-flight ledger invariants: mapped pages are refcounted and
+    disjoint from the free list; reservations match the per-slot sums."""
+    free = [pg for f in pool._free for pg in f]
+    assert len(set(free)) == len(free)
+    for d in range(pool.data_shards):
+        assert pool._reserved[d] == sum(
+            s.reserved for i, s in enumerate(pool.slots)
+            if s is not None and pool.slot_shard(i) == d)
+        assert len(pool._free[d]) >= pool._reserved[d]
+    for s in (s for s in pool.slots if s is not None):
+        for pg in s.pages:
+            assert pool.refcount[pg] >= 1
+            assert pg not in free
+
+
+def test_spec_rollback_ledger_invariants_every_step(built):
+    cfg, params = built
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=4))
+    for r in _reqs(_prompts(), max_new=12):
+        eng.submit(r)
+    while eng._queue or eng.pool.active_slots():
+        eng.step()
+        _step_invariants(eng.pool)
+    _pool_ok(eng.pool)
+
+
+def test_spec_shared_prefix_pages_survive_rollback(built):
+    """Speculation must never release a shared prefix page: co-residents
+    with a common one-page prefix keep sharing it through draft/verify
+    rounds, streams equal vanilla, refcount lifecycle intact."""
+    cfg, params = built
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(4, 128, size=8).astype(np.int32)   # one page
+    prompts = [np.concatenate([prefix,
+                               rng.integers(4, 128, size=n).astype(np.int32)])
+               for n in (20, 24)]
+    reqs = lambda: [Request(prompt=p, max_new_tokens=10,
+                            sampling=SamplingSpec(seed=i))
+                    for i, p in enumerate(prompts)]
+    ref, _ = _drain(cfg, params, reqs())
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=3))
+    r0, r1 = reqs()
+    eng.submit(r0)
+    eng.step(); eng.step()             # req0 resident, prefix indexed
+    eng.submit(r1)
+    saw_share = False
+    results = {}
+    while eng._queue or eng.pool.active_slots():
+        for r in eng.step():
+            results[r.request_id] = r
+        _step_invariants(eng.pool)
+        s1 = eng.pool.slots[1]
+        if s1 is not None and s1.shared_pages \
+                and eng.pool.slots[0] is not None:
+            saw_share = True           # both sharers resident
+            assert eng.pool.refcount[s1.pages[0]] == 2
+    assert saw_share and eng.pool.prefix_hits == 1
+    assert [results[i].tokens for i in range(2)] == ref
+    _pool_ok(eng.pool)
+
+
+def test_pool_rollback_unmaps_only_past_keep(built):
+    """Direct pool-level check: rollback returns exactly the pages past
+    keep_blocks to the free list and re-credits the reservation."""
+    cfg, params = built
+    eng = Engine(cfg, params, max_len=64, capacity=3)
+    prompt = _prompts(seed=11, lens=(12,))[0]
+    eng.submit(Request(prompt=prompt, max_new_tokens=16,
+                       sampling=SamplingSpec(seed=0)))
+    eng.step()
+    pool, s = eng.pool, eng.pool.slots[0]
+    need = pool.pages_needed(12, 16)
+    mapped0, reserved0 = len(s.pages), s.reserved
+    assert mapped0 + reserved0 == need
+    pool.ensure_capacity(0, need - 1)        # map everything
+    assert len(s.pages) == need and s.reserved == 0
+    pool.rollback(0, mapped0)                # back to the prompt mapping
+    assert len(s.pages) == mapped0 and s.reserved == reserved0
+    assert pool._reserved[0] == reserved0
+    assert all(int(p) == pool.dump_page(0)
+               for p in pool.page_tables[0, mapped0:])
+
+
+# --------------------------------------------------------------------------
+# sampled: residual rejection is lossless
+# --------------------------------------------------------------------------
+
+def test_accept_emits_exactly_the_truncated_target_distribution():
+    """Monte-carlo the acceptance rule on fixed logits: whatever the
+    draft proposes, the first emitted token's distribution must equal the
+    truncated target distribution (the residual-sampling identity)."""
+    rng_l = np.random.default_rng(0)
+    logits = rng_l.standard_normal((2, 50)).astype(np.float32) * 2.0
+    samp = SamplingSpec(temperature=0.8, top_k=10, top_p=0.9, seed=0)
+    p = Smp.truncated_probs(logits[0], samp)
+    N = 40000
+    for d in (int(np.argmax(p)), int(np.argsort(-p)[3]), 0):
+        rng = np.random.default_rng(1234 + d)
+        counts = np.zeros(50)
+        for _ in range(N):
+            emitted, _ = Spc.accept(logits, np.asarray([d]), samp, rng)
+            counts[emitted[0]] += 1
+        tv = 0.5 * np.abs(counts / N - p).sum()
+        assert tv < 0.02, (d, tv)
+
+
+def test_sampled_spec_engine_marginals_match_vanilla():
+    """Engine-level seeded statistical check: per-position marginal token
+    distributions of the spec engine equal the vanilla engine's.  A
+    vocab-12 model keeps the support small enough for N=200 seeds to be
+    conclusive (the tight per-token check is the unit-level MC above)."""
+    cfg = _cfg(vocab=12)
+    params = M.init(cfg, KEY)
+    prompt = np.random.default_rng(21).integers(
+        4, 12, size=24).astype(np.int32)
+    N, T = 200, 3
+
+    def streams(spec):
+        out = []
+        eng = Engine(cfg, params, max_len=64, capacity=1, spec=spec)
+        for s in range(N):
+            eng.submit(Request(
+                prompt=prompt, max_new_tokens=T,
+                sampling=SamplingSpec(temperature=1.0, seed=s)))
+            out.append(eng.drain()[0].tokens)
+        return np.asarray(out)
+
+    a, b = streams(None), streams(SpecConfig(k=2))
+    # same seeds, token 0 comes from the same prefill sampler: identical
+    np.testing.assert_array_equal(a[:, 0], b[:, 0])
+    for t in range(1, T):
+        ca = np.bincount(a[:, t], minlength=cfg.vocab_size) / N
+        cb = np.bincount(b[:, t], minlength=cfg.vocab_size) / N
+        assert 0.5 * np.abs(ca - cb).sum() < 0.2, t
+
+
+# --------------------------------------------------------------------------
+# providers
+# --------------------------------------------------------------------------
+
+def test_ngram_draft_proposes_continuation_of_repeated_ngram():
+    d = Spc.NGramDraft(k=4, max_n=3, min_n=1)
+    d.admit(0, np.asarray([5, 6, 7, 9, 9, 5, 6, 7, 3, 1], np.int32))
+    d.observe(0, [5, 6, 7])            # history now ends with 5 6 7
+    drafts, lens = d.propose([0], np.asarray([7] * 1, np.int32),
+                             np.asarray([4], np.int32))
+    # longest suffix match is [5,6,7] at position 5 -> continue 3, 1, ...
+    assert lens[0] >= 2
+    assert drafts[0, :2].tolist() == [3, 1]
+
+
+def test_ngram_draft_no_match_proposes_nothing():
+    d = Spc.NGramDraft(k=4)
+    d.admit(0, np.arange(4, 24, dtype=np.int32))   # all tokens distinct
+    drafts, lens = d.propose([0], np.asarray([99], np.int32),
+                             np.asarray([4], np.int32))
+    assert lens[0] == 0
+
+
+def test_spec_requires_attention_only_causal_lm(built):
+    cfg, params = built
+    import dataclasses
+    bad = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, causal=False))
+    with pytest.raises(ValueError, match="causal"):
+        Engine(bad, M.init(bad, KEY), max_len=64, capacity=2,
+               prefill_chunk=None, spec=SpecConfig(k=2))
+
+
+# --------------------------------------------------------------------------
+# mesh composition
+# --------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_spec_on_mesh_bit_identical_to_vanilla(built):
+    """Replicated verification over the data axis: the spec engine on a
+    (2, 2) mesh emits exactly the vanilla (unsharded, unspeculated)
+    streams."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices; run with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.serve import mesh as Mx
+    cfg = _cfg(kv_heads=2)
+    params = M.init(cfg, KEY)
+    prompts = _prompts(seed=3, lens=(19, 33, 11, 26))
+    reqs = lambda: [Request(prompt=p, max_new_tokens=8,
+                            sampling=SamplingSpec(seed=i))
+                    for i, p in enumerate(prompts)]
+    ref = []
+    eng = Engine(cfg, params, max_len=64, capacity=4)
+    for r in reqs():
+        eng.submit(r)
+    ref = [r.tokens for r in eng.drain()]
+    eng = Engine(cfg, params, max_len=64, capacity=4,
+                 mesh=Mx.make_mesh(2, 2), spec=SpecConfig(k=3))
+    for r in reqs():
+        eng.submit(r)
+    got = [r.tokens for r in eng.drain()]
+    assert got == ref
+    _pool_ok(eng.pool)
