@@ -15,6 +15,18 @@ Two classes of metric, gated differently:
   because shared CI runners are noisy; the bands catch order-of-magnitude
   regressions (a de-jitted hot loop, an accidental recompile per token)
   without flaking on scheduler jitter.
+* SCHEDULING latency (mean_ttft_s over the continuous workload, ttft_p95_s
+  over the Poisson workload) gates at HALF the timing band: these average
+  over the whole workload, so they are far less jittery than single-shot
+  timings, and they are exactly the numbers the ragged-prefill + async
+  front-end work exists to hold down — losing the ~2x TTFT win must not
+  hide inside the wide band.
+
+Bit-identity gates (active once the baseline carries the fields): the
+async streaming front-end (`stream_outputs_match`) and the open-loop
+Poisson schedule (`poisson_outputs_match`) must reproduce the synchronous
+drain's token streams exactly — false means scheduling changed model
+outputs, a correctness bug no timing band excuses.
 
 Speculative-decoding metrics (benchmarks/serving.py --spec) gate on both
 sides: `spec_outputs_match` must stay true (greedy speculation is
@@ -84,6 +96,25 @@ def check(fresh: dict, base: dict, timing_band: float) -> list:
             bad.append(
                 f"{key} {fresh[key]} vs baseline {base[key]} "
                 f"(band {timing_band}x)"
+            )
+
+    # scheduling latency: workload aggregates, tighter half-band
+    tail_band = max(1.0, timing_band / 2.0)
+    for key in ("mean_ttft_s", "ttft_p95_s"):
+        if key in base and fresh.get(key, 0.0) > base[key] * tail_band:
+            bad.append(
+                f"{key} {fresh.get(key)} vs baseline {base[key]} "
+                f"(band {tail_band}x: ragged prefill / front-end "
+                f"scheduling regression)"
+            )
+
+    # scheduling must never change model outputs
+    for key in ("stream_outputs_match", "poisson_outputs_match"):
+        if key in base and fresh.get(key) is not True:
+            bad.append(
+                f"{key} is not true: scheduled token streams diverged "
+                "from the synchronous drain (bit-identity correctness "
+                "bug, not a perf regression)"
             )
 
     # speculative-decoding gates, active once the baseline carries them
@@ -156,7 +187,9 @@ def main(argv=None) -> int:
     print(
         f"perf-gate: OK (kv {fresh['kv_bytes_per_request_paged']}B/req, "
         f"ttft {fresh['ttft_s']}s, decode {fresh['decode_tok_s']} tok/s, "
-        f"continuous {fresh['continuous_tok_s']} tok/s)"
+        f"continuous {fresh['continuous_tok_s']} tok/s, "
+        f"mean_ttft {fresh.get('mean_ttft_s')}s, "
+        f"p95_ttft {fresh.get('ttft_p95_s')}s)"
     )
     return 0
 

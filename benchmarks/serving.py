@@ -4,8 +4,18 @@ Measurements over a small BigBird LM (bounded decode, paged KV pool):
   serving_ttft          — warm prefill + first sampled token (generate(1));
   serving_decode        — steady-state jitted-loop decode tok/s;
   serving_continuous    — page-pool throughput with staggered admits,
-                          chunked prefill, heterogeneous prompt lengths and
-                          a shared prompt prefix (prefix-page hits);
+                          ragged multi-prompt chunked prefill, heterogeneous
+                          prompt lengths and a shared prompt prefix
+                          (prefix-page hits);
+  serving_poisson       — the same requests re-served under seeded OPEN-LOOP
+                          Poisson arrivals (the clock, not the engine, owns
+                          admission): TTFT/TPOT p50/p95 tail latency.  Token
+                          streams are schedule-independent, so the digest
+                          must equal the continuous section's;
+  serving_stream        — the workload through the AsyncEngine front-end
+                          (per-request asyncio token streams, dispatch_depth
+                          2): streamed tokens must be digest-identical to
+                          the synchronous drain (`stream_outputs_match`);
   serving_spec          — (--spec) the same continuous workload through the
                           speculative draft/verify path (n-gram provider):
                           spec-vs-vanilla tok/s, acceptance rate, and the
@@ -35,6 +45,7 @@ Prints the standard `name,us_per_call,derived` CSV rows plus one JSON line
 from __future__ import annotations
 
 import argparse
+import asyncio
 import hashlib
 import json
 import time
@@ -46,9 +57,10 @@ import numpy as np
 from benchmarks.common import row
 from repro.core.attention import AttentionSpec
 from repro.models import model as M
-from repro.serve import Engine, Request, SamplingSpec, SpecConfig
+from repro.serve import AsyncEngine, Engine, Request, SamplingSpec, SpecConfig
 
 B, PROMPT, GEN, MAXLEN = 4, 256, 24, 512
+POISSON_GAP_S = 0.08               # mean interarrival (seeded open loop)
 
 
 def _build():
@@ -64,8 +76,12 @@ def _build():
 
 
 def _digest(results) -> str:
-    """Schedule-independent hash of every request's token stream."""
-    payload = json.dumps(sorted((r.request_id, r.tokens) for r in results))
+    """Schedule-independent hash of every request's token stream.  Ids are
+    normalized to submission order so runs of the same workload through
+    different front-ends (drain / Poisson / async streaming) compare."""
+    base = min(r.request_id for r in results)
+    payload = json.dumps(sorted((r.request_id - base, r.tokens)
+                                for r in results))
     return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
 
@@ -148,6 +164,65 @@ def main(argv=None):
     mean_tpot = float(np.mean([r.tpot_s for r in results]))
     mean_ttft = float(np.mean([r.ttft_s for r in results]))
 
+    # ---- open-loop Poisson arrivals: tail latency under load -------------
+    # Seeded interarrival gaps make the arrival SCHEDULE deterministic; the
+    # wall clock (not engine progress) owns admission, so queueing shows up
+    # in the TTFT tail.  Token streams are schedule-independent (per-slot
+    # PRNG keys), so the digest must equal the continuous section's.
+    gaps = np.random.default_rng(7).exponential(scale=POISSON_GAP_S,
+                                                size=len(wl_prompts))
+    arrivals = np.cumsum(gaps)
+    pois_reqs = make_reqs(0)           # same tokens/seeds as every section
+    pois_results = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(pois_reqs) or engine._queue or engine.pool.active_slots():
+        now = time.perf_counter() - t0
+        while i < len(pois_reqs) and arrivals[i] <= now:
+            engine.submit(pois_reqs[i], submit_time=t0 + arrivals[i])
+            i += 1
+        if not (engine._queue or engine.pool.active_slots()):
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+            continue
+        pois_results.extend(engine.step())
+    t_pois = time.perf_counter() - t0
+    ttfts = [r.ttft_s for r in pois_results]
+    tpots = [r.tpot_s for r in pois_results if len(r.tokens) > 1]
+    ttft_p50, ttft_p95 = (float(x) for x in np.percentile(ttfts, [50, 95]))
+    tpot_p50, tpot_p95 = (float(x) for x in np.percentile(tpots, [50, 95]))
+    pois_match = _digest(pois_results) == _digest(results)
+    row("serving_poisson", t_pois / max(len(pois_results), 1) * 1e6,
+        f"p95ttft={ttft_p95:.3f}s;gap={POISSON_GAP_S}s;match={pois_match}")
+
+    # ---- async streaming front-end: AsyncEngine over the same engine -----
+    # dispatch_depth 2 keeps a decode step in flight (host sync off the
+    # critical path); streamed tokens must stay digest-identical to the
+    # synchronous drain above — the bit-identity acceptance gate.
+    engine.dispatch_depth = 2
+
+    async def _stream_wave():
+        front = AsyncEngine(engine)
+        sessions = []
+        for i, r in enumerate(make_reqs(0)):
+            sessions.append(await front.submit(
+                r.prompt, r.max_new_tokens, sampling=r.sampling))
+            if i == B - 1:
+                await asyncio.sleep(0.01)    # stagger the second wave
+        out = [await s.result() for s in sessions]
+        await front.close()
+        return out
+
+    t0 = time.perf_counter()
+    stream_results = asyncio.run(_stream_wave())
+    t_st = time.perf_counter() - t0
+    engine.dispatch_depth = 1
+    st_toks = sum(len(r.tokens) for r in stream_results)
+    st_tps = st_toks / max(t_st, 1e-9)
+    stream_match = _digest(stream_results) == _digest(results)
+    stream_mean_ttft = float(np.mean([r.ttft_s for r in stream_results]))
+    row("serving_stream", t_st / max(st_toks, 1) * 1e6,
+        f"{st_tps:.1f}tok/s;depth=2;match={stream_match}")
+
     # ---- speculative decoding: same workload, draft/verify path ----------
     spec_json = {}
     if args.spec:
@@ -228,6 +303,17 @@ def main(argv=None):
         "continuous_requests": len(results),
         "mean_ttft_s": round(mean_ttft, 6),
         "mean_tpot_s": round(mean_tpot, 6),
+        "ragged_prefill": engine._ragged,
+        "poisson_gap_s": POISSON_GAP_S,
+        "poisson_requests": len(pois_results),
+        "ttft_p50_s": round(ttft_p50, 6),
+        "ttft_p95_s": round(ttft_p95, 6),
+        "tpot_p50_s": round(tpot_p50, 6),
+        "tpot_p95_s": round(tpot_p95, 6),
+        "poisson_outputs_match": pois_match,
+        "stream_tok_s": round(st_tps, 1),
+        "stream_mean_ttft_s": round(stream_mean_ttft, 6),
+        "stream_outputs_match": stream_match,
         "outputs_digest": _digest(results),
         **spec_json,
         "page_size": st.page_size,

@@ -20,10 +20,10 @@ import numpy as np
 
 from repro.core import patterns
 from repro.core.ref_attention import masked_softmax_attention
-from repro.kernels import bigbird_attn, wkv6
+from repro.kernels import bigbird_attn, ragged_prefill, wkv6
 
 __all__ = ["bigbird_attention_fused", "bigbird_paged_decode_attn",
-           "wkv6_scan", "mamba_scan"]
+           "bigbird_ragged_prefill_attn", "wkv6_scan", "mamba_scan"]
 
 
 def _auto_interpret(interpret):
@@ -194,6 +194,33 @@ def bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
         jnp.asarray(pos, jnp.int32), idx, msk,
         block_size=b, grp=grp, interpret=interpret)
     return out[:, :, None].astype(q.dtype)
+
+
+def bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
+                                cfg: patterns.BigBirdConfig, layer: int = 0,
+                                interpret=None):
+    """Ragged multi-prompt prefill-chunk read via the Pallas kernel.
+
+    q (B, Hq, C, dh) — one chunk of queries per row, row i at positions
+    [starts[i], starts[i]+C); kc/vc (P, Hkv, b, dh) — flat physical page
+    stores with the chunk's K/V already written; page_tables (B, max_pages)
+    int32; starts (B,) int32, page-aligned and >= g*b (global query rows
+    need the dense path — the Engine never routes them here).  Forward-only.
+    The XLA gather in models/decode._ragged_attn_layer is the parity
+    baseline (tests/test_kernels.py)."""
+    interpret = _auto_interpret(interpret)
+    B, Hq, C, dh = q.shape
+    Hkv = kc.shape[1]
+    grp = Hq // Hkv
+    b = cfg.block_size
+    S = page_tables.shape[1] * b
+    pat = patterns.build_pattern(cfg, S, layer=layer)
+    idx = jnp.asarray(pat.key_blocks, jnp.int32)
+    msk = jnp.asarray(pat.key_mask.astype(np.int32))
+    return ragged_prefill.bigbird_ragged_prefill(
+        q, kc, vc, jnp.asarray(page_tables, jnp.int32),
+        jnp.asarray(starts, jnp.int32), idx, msk,
+        block_size=b, grp=grp, interpret=interpret).astype(q.dtype)
 
 
 def wkv6_scan(r, k, v, w, u, *, chunk: int = 64, interpret=None):

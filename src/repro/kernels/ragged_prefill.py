@@ -1,0 +1,169 @@
+"""Ragged multi-prompt prefill attention — Pallas TPU kernel (forward-only).
+
+The serving Engine batches prefill chunks from several co-admitted prompts
+into ONE forward (serve/engine.py §ragged prefill): every batch row carries
+its own chunk offset `starts[i]`, so rows sit at *different* logical blocks
+of their own paged caches.  This kernel is the sparse-attention read for
+that batched chunk: grid cell (i, n, t) resolves pattern slot t of row i's
+n-th query block through two scalar-prefetched levels — logical key block
+`idx[starts[i]//b + n, t]`, then physical page `pt[i, ...]` — and streams
+the page through a flash-style online softmax, exactly the paged-decode
+kernel's addressing scheme lifted from one query token to a block of `b`
+queries per cell.
+
+Rows are independent: a padding/idle row (dump-page table) computes finite
+garbage that the caller discards.  Global *query* rows (blocks < g) need
+dense attention over the whole prefix and are NOT handled here — the
+Engine only routes chunks with `start >= g*b` to the ragged path, so every
+query this kernel sees reads pattern slots only.
+
+The XLA two-level gather in models/decode._ragged_attn_layer is the parity
+baseline (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ragged_prefill_kernel(
+    pt_ref,
+    starts_ref,
+    idx_ref,
+    msk_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    scale: float,
+    block_size: int,
+    grp: int,
+    num_slots: int,
+):
+    i = pl.program_id(0)  # batch row
+    n = pl.program_id(1)  # chunk query block
+    t = pl.program_id(2)  # pattern slot
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b = block_size
+    nbp = idx_ref.shape[0]  # logical blocks
+    jq = jnp.minimum(starts_ref[i] // b + n, nbp - 1)  # row's query block
+    blk = idx_ref[jq, t]  # logical key block
+    live = msk_ref[jq, t] > 0
+    # causal masking at token granularity: key position <= query position
+    qpos = starts_ref[i] + n * b + jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    kpos = blk * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    valid = live & (kpos <= qpos)  # (b, b)
+
+    q = q_ref[0].astype(jnp.float32)  # (Hq, b, d)
+    k = k_ref[0].astype(jnp.float32)  # (Hkv, b, d)
+    v = v_ref[0].astype(jnp.float32)
+    hq, bq, d = q.shape
+    hkv = k.shape[0]
+    qg = q.reshape(hkv, grp * bq, d)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    s = s.reshape(hq, bq, b) * scale
+    s = jnp.where(valid[None], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=2, keepdims=True)  # (Hq, b, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None], p, 0.0)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
+    m_ref[...] = m_new
+    pg = p.reshape(hkv, grp * bq, b)
+    pv = jax.lax.dot_general(
+        pg, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv.reshape(hq, bq, d)
+
+    @pl.when(t == num_slots - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "grp", "interpret"))
+def bigbird_ragged_prefill(
+    q,
+    kc,
+    vc,
+    page_tables,
+    starts,
+    idx,
+    msk,
+    *,
+    block_size: int,
+    grp: int,
+    interpret: bool = False,
+):
+    """Ragged paged prefill-chunk attention (forward-only, serving path).
+
+    q (B, Hq, C, d) — one chunk of C = nc*b queries per row, row i covering
+    positions [starts[i], starts[i]+C); kc/vc (P, Hkv, b, d) — the flat
+    physical page stores (the chunk's K/V already written through the page
+    tables by the caller); page_tables (B, max_pages) int32; starts (B,)
+    int32, page-aligned; idx/msk (nb, L) int32 — the pattern slot maps at
+    the LOGICAL cache length nb = max_pages.
+
+    Grid (B, nc, L): cell (i, n, t) is query block `starts[i]//b + n` of
+    row i attending its t-th pattern slot.  `grp` = Hq // Hkv (GQA)."""
+    B, Hq, C, d = q.shape
+    b = block_size
+    nc = C // b
+    L = idx.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    Hkv = kc.shape[1]
+    nbp = idx.shape[0]
+
+    def _chunk(i, n, t, pt, st, idx, msk):
+        return (i, 0, n, 0)
+
+    def _page(i, n, t, pt, st, idx, msk):
+        jq = jnp.minimum(st[i] // b + n, nbp - 1)
+        return (pt[i, idx[jq, t]], 0, 0, 0)
+
+    kernel = functools.partial(
+        _ragged_prefill_kernel, scale=scale, block_size=b, grp=grp, num_slots=L
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(B, nc, L),
+            in_specs=[
+                pl.BlockSpec((1, Hq, b, d), _chunk),
+                pl.BlockSpec((1, Hkv, b, d), _page),
+                pl.BlockSpec((1, Hkv, b, d), _page),
+            ],
+            out_specs=pl.BlockSpec((1, Hq, b, d), _chunk),
+            scratch_shapes=[
+                pltpu.VMEM((Hq, b, 1), jnp.float32),
+                pltpu.VMEM((Hq, b, 1), jnp.float32),
+                pltpu.VMEM((Hq, b, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, C, d), q.dtype),
+        interpret=interpret,
+    )(page_tables, starts, idx, msk, q, kc, vc)

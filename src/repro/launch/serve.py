@@ -19,10 +19,17 @@ path: a draft provider (`--spec-provider ngram|draft`, the latter a small
 bigbird-draft model) proposes up to K tokens per slot per step and one
 verify forward scores them all — losslessly, so the streams match the
 vanilla engine's exactly (DESIGN.md §Speculative decoding).
+
+`--stream` serves through the asyncio front-end (AsyncEngine): requests
+are submitted with staggered arrivals and every token is printed the
+moment it crosses the device boundary, interleaved across requests.  The
+streams are bit-identical to what the synchronous drain would produce
+(DESIGN.md §Async front-end); `--stagger` controls the arrival gap.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -32,7 +39,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import model as M
-from repro.serve import Engine, Request, SamplingSpec, SpecConfig
+from repro.serve import AsyncEngine, Engine, Request, SamplingSpec, SpecConfig
 
 
 def main(argv=None):
@@ -54,9 +61,14 @@ def main(argv=None):
                     choices=("ngram", "draft"),
                     help="draft source: prompt-lookup n-grams or a small "
                          "bigbird-draft model")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the async front-end and print "
+                         "tokens as they arrive")
+    ap.add_argument("--stagger", type=float, default=0.05, metavar="S",
+                    help="arrival gap between streamed requests (seconds)")
     args = ap.parse_args(argv)
-    assert not (args.mesh and args.spec), \
-        "--mesh and --spec are separate demo paths; pick one"
+    assert sum(map(bool, (args.mesh, args.spec, args.stream))) <= 1, \
+        "--mesh, --spec and --stream are separate demo paths; pick one"
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -82,8 +94,8 @@ def main(argv=None):
     sampling = SamplingSpec(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed)
 
-    if args.mesh or args.spec:
-        # both demo paths serve through paged continuous batching
+    if args.mesh or args.spec or args.stream:
+        # these demo paths serve through paged continuous batching
         # (submit/step/drain), which requires a causal attention-only LM;
         # encoder-style (MLM) bigbird configs are served with their
         # pattern flipped causal, the standard decoder-only arrangement.
@@ -95,6 +107,46 @@ def main(argv=None):
             cfg = dataclasses.replace(
                 cfg, attn=dataclasses.replace(cfg.attn, causal=True))
             print(f"[serve] continuous serving: flipped {args.arch} causal")
+
+    if args.stream:
+        # interactive async streaming: tokens print as they arrive, with a
+        # 2-deep dispatch pipeline keeping the device busy between polls
+        engine = Engine(cfg, params, max_len=max_len, capacity=B,
+                        dispatch_depth=2)
+        t0 = time.time()
+
+        async def consume(i, sess):
+            first = None
+            async for tok in sess:
+                now = time.time() - t0
+                first = first if first is not None else now
+                print(f"[stream] t={now:6.2f}s req{i} -> {tok}", flush=True)
+            r = await sess.result()
+            print(f"[stream] t={time.time()-t0:6.2f}s req{i} done "
+                  f"({r.finish_reason}, {len(r.tokens)} tokens, "
+                  f"ttft {first:.2f}s)", flush=True)
+            return r
+
+        async def run():
+            front = AsyncEngine(engine)
+            tasks = []
+            for i in range(B):
+                sess = await front.submit(
+                    np.asarray(prompt[i]), gen,
+                    sampling=dataclasses.replace(sampling, seed=i))
+                tasks.append(asyncio.ensure_future(consume(i, sess)))
+                await asyncio.sleep(args.stagger)
+            results = await asyncio.gather(*tasks)
+            await front.close()
+            return results
+
+        results = asyncio.run(run())
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in results)
+        print(f"[serve] arch={cfg.name} streamed {toks} tokens from {B} "
+              f"requests in {dt:.2f}s ({toks/dt:.1f} tok/s), mean TTFT "
+              f"{np.mean([r.ttft_s for r in results]):.2f}s")
+        return jnp.asarray([r.tokens for r in results])
 
     if args.spec:
         # speculative decoding: draft/verify with lossless acceptance

@@ -639,6 +639,177 @@ def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
 
 
 # --------------------------------------------------------------------------
+# ragged multi-prompt prefill: one batched forward over chunks of several
+# co-admitted prompts, each row at its own (traced) chunk offset
+# --------------------------------------------------------------------------
+
+def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
+                       layer, page_tables, starts, bucket_len: int,
+                       write_tables=None):
+    """One attention layer of a RAGGED prefill chunk: every batch row
+    covers positions [starts[i], starts[i]+C) of its OWN prompt, written
+    and read through its own page-table row.
+
+    This is `_chunk_attn_layer` with the chunk offset lifted from a static
+    compile-time constant to a traced per-row vector (the addressing
+    discipline of `_verify_attn_layer`): the chunk's KV blocks scatter
+    through `take_along_axis(wt, starts//b + arange(nc))`, and the pattern
+    rows/causal masks are gathered at traced block indices instead of
+    sliced host-side.  Per row the gathered operands, einsum contractions
+    and mask values are exactly the static chunk's — rows are independent,
+    so the ragged batch is bit-identical to running each row's chunk alone
+    (the chunked == one-shot contract extends to the ragged path).
+
+    Two caller guarantees keep this exact:
+      * the pattern fits the bucket for EVERY layer (no full-attention
+        fallback — its dense read length would depend on the row's start);
+      * every row's start is >= g*b (global *query* rows attend densely
+        over a start-dependent prefix; the Engine routes chunks touching
+        them to the static-offset path instead)."""
+    assert spec.causal, "ragged prefill is causal-only (decoder LM serving)"
+    B, C, _ = x.shape
+    pm = p["mix"]
+    h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    positions = starts[:, None] + jnp.arange(C)           # (B, C)
+    q = (h @ pm["wq"]).reshape(B, C, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ pm["wk"]).reshape(B, C, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ pm["wv"]).reshape(B, C, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    b = c["k"].shape[-2]                       # physical page size
+    assert C % b == 0, (C, b)
+    nc = C // b
+    max_pages = page_tables.shape[1]
+    assert nc <= max_pages, "chunk longer than the logical cache"
+    grp = hq // hkv
+    # scatter this chunk's KV blocks through each row's (write) table; the
+    # row's blocks are starts[i]//b + [0, nc) — in-bounds by the caller's
+    # start + C <= S_log guarantee (idle rows ride at starts = 0)
+    wt = page_tables if write_tables is None else write_tables
+    qb = starts[:, None] // b + jnp.arange(nc)            # (B, nc)
+    phys_w = jnp.take_along_axis(wt, qb, axis=1)          # (B, nc)
+    as_blocks = lambda t: t.reshape(B, hkv, nc, b, dh).transpose(0, 2, 1, 3, 4)
+    kc = c["k"].at[phys_w].set(as_blocks(k).astype(c["k"].dtype))
+    vc = c["v"].at[phys_w].set(as_blocks(v).astype(c["v"].dtype))
+
+    # the static chunk's fallback rule must resolve to the pattern path:
+    # a full-attention layer reads a start-dependent dense prefix, which
+    # cannot batch across rows at different offsets
+    bb = spec.bigbird_config(bucket_len)
+    nbk = bucket_len // b if bucket_len % b == 0 else -1
+    assert nbk >= 0 and (bb.num_global_blocks + bb.num_window_blocks
+                         + bb.num_random_blocks) <= nbk, \
+        "ragged prefill requires the pattern to fit the prompt bucket"
+
+    if spec.impl == "pallas":
+        from repro.kernels import ops                      # lazy import
+        o = ops.bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
+                                            bb, layer=layer)
+    else:
+        S_log = max_pages * b
+        pat = patterns.build_pattern(bb, S_log, layer=layer)
+        idx = jnp.asarray(pat.key_blocks)                 # (nb, Ls)
+        msk = jnp.asarray(pat.key_mask)
+        rows = idx[qb]                                    # (B, nc, Ls)
+        rmsk = msk[qb]
+        Ls = rows.shape[-1]
+        kg = _paged_gather(kc, page_tables, rows.reshape(B, nc * Ls)) \
+            .reshape(B, hkv, nc, Ls * b, dh)
+        vg = _paged_gather(vc, page_tables, rows.reshape(B, nc * Ls)) \
+            .reshape(B, hkv, nc, Ls * b, dh)
+        flat = (rows[..., None] * b + jnp.arange(b)).reshape(B, nc, Ls * b)
+        qpos = positions.reshape(B, nc, b)
+        valid = (jnp.repeat(rmsk, b, axis=-1)[:, :, None, :]
+                 & (flat[:, :, None, :] <= qpos[..., None]))  # (B,nc,b,Ls*b)
+        qf = q.reshape(B, hkv, grp, nc, b, dh)
+        s = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qf, kg,
+                       preferred_element_type=F32) / np.sqrt(dh)
+        s = jnp.where(valid[:, None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+        o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", pr, vg,
+                       preferred_element_type=F32)
+        o = o.reshape(B, hq, C, dh).astype(q.dtype)
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, C, hq * dh)
+    x = x + o @ pm["wo"]
+    if "ffn" in p:
+        if cfg.layer_pattern[layer % cfg.period].moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, {"k": kc, "v": vc}
+
+
+def prefill_ragged(params, cfg: M.ModelConfig, cache, tokens, page_tables,
+                   *, starts, last_index, bucket_len: int,
+                   write_tables=None):
+    """Prefill one chunk of SEVERAL prompts in one batched paged forward.
+
+    tokens (B, C) int32 — row i holds its prompt's token window covering
+    positions [starts[i], starts[i]+C); starts (B,) int32 TRACED per-row
+    chunk offsets (page-aligned; one executable serves every offset mix);
+    page_tables / write_tables as in `prefill_chunk`; last_index (B,) int32
+    — global index of each row's last real prompt token (logits gathered at
+    `clip(last_index - starts, 0, C-1)`, meaningful only for rows whose
+    chunk contains it); `bucket_len` static — a REPRESENTATIVE one-shot
+    bucket: rows of different buckets may share one ragged batch whenever
+    their per-layer graph decisions agree (the Engine groups by graph key,
+    which the bucket only enters through).
+
+    Caller contract (serve/engine.py enforces it):
+      * the BigBird pattern fits `bucket_len` for every layer, and
+      * every live row's start is >= num_global_blocks * b, and
+      * starts[i] + C <= max_pages * page_size for every row
+    — the three conditions under which a chunk's attention is a pure
+    pattern read, independent of the row's offset, making the ragged batch
+    bit-identical per row to the static `prefill_chunk` path (and hence to
+    one-shot prefill).  Idle/padding rows ride at starts = 0 with dump-page
+    tables; their math is discarded.
+
+    Returns (logits (B, V) f32, cache)."""
+    assert all(ls.kind == "attn" for ls in cfg.layer_pattern), \
+        "ragged prefill supports attention-only configs"
+    assert cfg.kind != "encdec", "ragged prefill is decoder-only"
+    starts = jnp.asarray(starts, jnp.int32)
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    stack = params["layers"]
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, xs):
+            pslice, cslice = xs
+            new_c = {}
+            for i, ls in enumerate(pattern):
+                x, nc = _ragged_attn_layer(
+                    pslice[f"p{i}"], cslice[f"p{i}"], x, cfg,
+                    cfg.attn_spec(ls), i, page_tables, starts, bucket_len,
+                    write_tables)
+                new_c[f"p{i}"] = nc
+            return x, new_c
+        x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    else:
+        new_cache = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            x, nc = _ragged_attn_layer(
+                stack[f"layer{i}"], cache[f"layer{i}"], x, cfg,
+                cfg.attn_spec(ls), i, page_tables, starts, bucket_len,
+                write_tables)
+            new_cache[f"layer{i}"] = nc
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    C = x.shape[1]
+    li = jnp.clip(jnp.asarray(last_index, jnp.int32) - starts, 0, C - 1)
+    h_last = jnp.take_along_axis(x, li[:, None, None], axis=1)[:, 0]
+    logits = (h_last @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
 # speculative verify: score k+1 candidate tokens in one paged forward
 # --------------------------------------------------------------------------
 

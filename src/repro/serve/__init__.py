@@ -9,12 +9,18 @@
     eng.submit(Request(prompt, max_new_tokens=32))   # continuous batching
     results = eng.drain()
 
-See DESIGN.md §Serving Engine for the full contract.
+    front = AsyncEngine(eng)                         # async token streams
+    session = await front.submit(prompt, max_new_tokens=32)
+    async for tok in session: ...
+
+See DESIGN.md §Serving Engine and §Async front-end for the full contract.
 """
 from repro.serve.api import GenerateOutput, PoolStats, Request, Result
 from repro.serve.engine import Engine
+from repro.serve.frontend import AsyncEngine, StreamSession
 from repro.serve.sampling import SamplingSpec
 from repro.serve.spec import ModelDraft, NGramDraft, SpecConfig
 
-__all__ = ["Engine", "Request", "Result", "GenerateOutput", "PoolStats",
-           "SamplingSpec", "SpecConfig", "NGramDraft", "ModelDraft"]
+__all__ = ["Engine", "AsyncEngine", "StreamSession", "Request", "Result",
+           "GenerateOutput", "PoolStats", "SamplingSpec", "SpecConfig",
+           "NGramDraft", "ModelDraft"]

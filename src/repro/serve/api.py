@@ -36,7 +36,8 @@ class Result:
     request_id: int
     tokens: List[int]                      # generated tokens (incl. stop)
     prompt_len: int
-    finish_reason: str                     # "stop" | "length"
+    finish_reason: str                     # "stop" | "length" | "aborted"
+                                           # | "deadline_exceeded" | "shed"
     ttft_steps: int = 0                    # engine steps from submit to 1st tok
     pages_used: int = 0                    # KV pages this request mapped
     shared_prefix_pages: int = 0           # of which reused from a co-resident

@@ -72,7 +72,9 @@ class Engine:
     def __init__(self, cfg: M.ModelConfig, params, *, max_len: int = 0,
                  capacity: int = 4, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = 4, mesh=None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 ragged_prefill: Optional[bool] = None,
+                 dispatch_depth: int = 1):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
@@ -109,6 +111,24 @@ class Engine:
         self._slot_step = jax.jit(self._slot_step_impl, donate_argnums=(1,))
         self._generate = {}            # bucketed max_new -> jitted loop
         self._chunk_fns = {}           # (start, bucket_len) -> jitted chunk
+        self._ragged_fns = {}          # graph_key -> jitted ragged chunk
+        self._gk_bucket = {}           # graph_key -> canonical bucket_len
+
+        # ragged multi-prompt prefill: chunks of several co-admitted
+        # prompts batch into one forward (default on for unsharded chunked
+        # engines; the mesh path keeps per-slot static chunks — both are
+        # bit-identical to one-shot prefill, so mixing them is safe)
+        self._ragged = (self._chunked and mesh is None
+                        if ragged_prefill is None
+                        else ragged_prefill and self._chunked
+                        and mesh is None)
+
+        # decode dispatch pipelining: keep up to `dispatch_depth` decode
+        # steps in flight before materializing results on the host (the
+        # async front-end's latency hiding; 1 = fully synchronous)
+        self._depth = max(1, int(dispatch_depth))
+        self._inflight: collections.deque = collections.deque()
+        self._pending_finished: List[Result] = []
 
         # continuous-batching state (decoder-only LMs; encdec/patch archs
         # serve through generate() and never touch the pool)
@@ -153,6 +173,20 @@ class Engine:
         self._slot_meta: dict = {}     # slot -> (request, base key, submit step)
         self._next_id = 0
         self._step_count = 0
+
+    @property
+    def dispatch_depth(self) -> int:
+        """Decode steps kept in flight before host materialization (1 =
+        fully synchronous).  Host-side scheduling only — executables and
+        token streams are identical at every depth — so it may be changed
+        between steps (the bench flips it without rebuilding the engine)."""
+        return self._depth
+
+    @dispatch_depth.setter
+    def dispatch_depth(self, depth: int):
+        assert not self._inflight, \
+            "change dispatch_depth between steps (pipeline is in flight)"
+        self._depth = max(1, int(depth))
 
     # ------------------------------------------------------------------
     # shape bucketing
@@ -317,8 +351,26 @@ class Engine:
                     donate_argnums=(1,))
         return self._chunk_fns[key]
 
-    def submit(self, request: Request) -> int:
-        """Queue a request; it is admitted at the next step() boundary."""
+    def _ragged_fn(self, gk):
+        """One jitted ragged-chunk executable per attention graph key: the
+        chunk offsets are traced per-row operands, so every offset mix of
+        every prompt bucket sharing the graph runs the same executable."""
+        if gk not in self._ragged_fns:
+            cfg = self.cfg
+            bucket = self._gk_bucket[gk]
+            self._ragged_fns[gk] = jax.jit(
+                lambda p, cache, toks, pt, wt, li, st: Dec.prefill_ragged(
+                    p, cfg, cache, toks, pt, starts=st, last_index=li,
+                    bucket_len=bucket, write_tables=wt),
+                donate_argnums=(1,))
+        return self._ragged_fns[gk]
+
+    def submit(self, request: Request,
+               submit_time: Optional[float] = None) -> int:
+        """Queue a request; it is admitted at the next step() boundary.
+        `submit_time` (perf_counter seconds) backdates the latency clock —
+        the async front-end passes its own arrival timestamp so queueing
+        time it controls still counts into `Result.ttft_s`."""
         assert self.cfg.kind == "lm", \
             "slot batching serves decoder-only LMs; use generate() for encdec"
         assert self.cfg.frontend != "patch", \
@@ -333,7 +385,9 @@ class Engine:
         if request.request_id is None:
             request.request_id = self._next_id
             self._next_id += 1
-        self._queue.append((request, self._step_count, time.perf_counter()))
+        self._queue.append((request, self._step_count,
+                            time.perf_counter() if submit_time is None
+                            else submit_time))
         return request.request_id
 
     def _sample_first(self, logits, sampling: SamplingSpec) -> int:
@@ -429,6 +483,94 @@ class Engine:
             if self._provider is not None:
                 self._provider.observe(slot, [tok0])
 
+    def _prefill_groups(self, slots):
+        """Partition prefilling slots into batched forwards.  Slots whose
+        next chunk shares (graph key, offset) run one STATIC chunk
+        executable at B = capacity; slots past the global query rows with a
+        full-size in-bounds chunk join a RAGGED group per graph key — one
+        executable serves every offset mix (models/decode.prefill_ragged).
+        Chunks touching global query rows, full-attention-fallback graphs,
+        or the clamped cache-end chunk stay static: their dense reduction
+        shapes depend on the offset and cannot batch across rows."""
+        psz = self.pool.page_size
+        S_log = self.pool.max_pages * psz
+        groups: dict = {}
+        for slot in slots:
+            s = self.pool.slots[slot]
+            gk = self._graph_key(s.prompt_len)
+            self._gk_bucket.setdefault(gk, self._page_bucket(s.prompt_len))
+            start = s.prefill_pos
+            ragged = False
+            if self._ragged and all(not isinstance(e, str) for e in gk):
+                gmax = max(e.num_global_blocks for e in gk)
+                ragged = (start >= gmax * psz
+                          and start + self._chunk_tokens <= S_log)
+            key = ("ragged", gk) if ragged else ("static", gk, start)
+            groups.setdefault(key, []).append(slot)
+        return list(groups.items())
+
+    def _run_prefill_group(self, key, slots) -> List[Result]:
+        """One batched prefill forward over a group of co-prefilling slots.
+        Rows without a member slot ride along idle: dump-page tables make
+        their compute finite garbage that is never read back.  Per-row math
+        is row-independent, so each member's chunk is bit-identical to
+        running it alone (the chunked == one-shot contract holds)."""
+        kind, gk = key[0], key[1]
+        B, psz = self.capacity, self.pool.page_size
+        if kind == "ragged":
+            C = self._chunk_tokens
+        else:
+            start0 = key[2]
+            S_log = self.pool.max_pages * psz
+            C = min(self._chunk_tokens, S_log - start0)
+        toks = np.zeros((B, C), np.int32)
+        pt = np.zeros((B, self.pool.max_pages), np.int32)
+        wt = np.zeros((B, self.pool.max_pages), np.int32)
+        li = np.zeros((B,), np.int32)
+        starts = np.zeros((B,), np.int32)
+        for slot in slots:
+            s = self.pool.slots[slot]
+            request, _, _ = self._slot_meta[slot]
+            st = s.prefill_pos
+            real = request.prompt[st:st + C]
+            toks[slot, :real.size] = real
+            row = self.pool.table_row(slot)[0]
+            pt[slot] = row
+            wt[slot] = row
+            wt[slot, :s.shared_pages] = 0  # never write prefix-shared pages
+            li[slot] = s.prompt_len - 1
+            starts[slot] = st
+        if kind == "ragged":
+            logits, self.pool.cache = self._ragged_fn(gk)(
+                self.params, self.pool.cache, jnp.asarray(toks),
+                jnp.asarray(pt), jnp.asarray(wt), jnp.asarray(li),
+                jnp.asarray(starts))
+        else:
+            logits, self.pool.cache = self._chunk_fn(
+                start0, self._gk_bucket[gk])(
+                self.params, self.pool.cache, jnp.asarray(toks),
+                jnp.asarray(pt), jnp.asarray(wt), jnp.asarray(li))
+        finished: List[Result] = []
+        for slot in slots:
+            s = self.pool.slots[slot]
+            request, _, _ = self._slot_meta[slot]
+            s.prefill_pos += C
+            self.pool.register_prefix(slot, min(s.prefill_pos, s.prompt_len),
+                                      request.prompt, gk)
+            if s.prefill_pos >= s.prompt_len:  # prompt done -> first token
+                tok0 = self._sample_first(logits[slot:slot + 1],
+                                          request.sampling)
+                s.tokens, s.generated = [tok0], 1
+                s.phase = "decode"
+                s.admit_step = self._step_count    # the TTFT event
+                s.ttft_time = time.perf_counter()
+                if self._provider is not None:
+                    self._provider.observe(slot, [tok0])
+                reason = self._slot_done(s)
+                if reason:
+                    finished.append(self._finish(slot, reason))
+        return finished
+
     def _finish(self, slot: int, reason: str) -> Result:
         state = self.pool.slots[slot]
         _, _, submit_step = self._slot_meta.pop(slot)
@@ -443,7 +585,8 @@ class Engine:
                       prompt_len=state.prompt_len, finish_reason=reason,
                       ttft_steps=state.admit_step - submit_step + 1,
                       pages_used=pages_used, shared_prefix_pages=shared,
-                      ttft_s=state.ttft_time - state.submit_time,
+                      ttft_s=(state.ttft_time - state.submit_time
+                              if state.ttft_time else 0.0),
                       tpot_s=((now - state.ttft_time) / (n_out - 1)
                               if n_out > 1 else 0.0),
                       draft_proposed=state.draft_proposed,
@@ -485,10 +628,17 @@ class Engine:
         prefill chunk per admitted-but-unfinished prompt, then one batched
         decode step over every decoding slot.  Returns newly finished
         requests."""
-        finished: List[Result] = []
+        finished: List[Result] = self._pending_finished
+        self._pending_finished = []
         if self.pool is None:          # no slot path (encdec/patch archs)
             self._step_count += 1
             return finished
+
+        # pipelined decode steps must drain before the decode membership
+        # can change: admissions and prefill completions create new decode
+        # slots whose first input token only exists on the host
+        if self._inflight and (self._queue or self.pool.prefill_slots()):
+            self._drain_inflight(finished)
 
         free = self.pool.free_slots()
         while free and self._queue:
@@ -521,50 +671,146 @@ class Engine:
                 if reason:             # stop/length hit on the prefill token
                     finished.append(self._finish(slot, reason))
 
-        for slot in self.pool.prefill_slots():
-            self._run_prefill_chunk(slot)
-            s = self.pool.slots[slot]
-            if s.phase == "decode":
-                reason = self._slot_done(s)
-                if reason:
-                    finished.append(self._finish(slot, reason))
+        prefilling = self.pool.prefill_slots()
+        if prefilling and self.mesh is not None:
+            # the mesh path keeps per-slot static chunks (SPMD row layout)
+            for slot in prefilling:
+                self._run_prefill_chunk(slot)
+                s = self.pool.slots[slot]
+                if s.phase == "decode":
+                    reason = self._slot_done(s)
+                    if reason:
+                        finished.append(self._finish(slot, reason))
+        elif prefilling:
+            for key, group in self._prefill_groups(prefilling):
+                finished.extend(self._run_prefill_group(key, group))
 
         active = self.pool.decode_slots()
         if active and self.spec is not None:
             finished.extend(self._spec_decode(active))
         elif active:
-            B = self.capacity
-            tok = np.zeros((B, 1), np.int32)
-            counts = np.zeros((B,), np.int32)
-            specs = [SamplingSpec()] * B
-            keys = [jax.random.PRNGKey(0)] * B
-            for i in active:
-                s = self.pool.slots[i]
-                self.pool.ensure_capacity(i, s.pos // self.pool.page_size)
-                self.pool.ensure_writable(i, s.pos // self.pool.page_size)
-                tok[i, 0] = s.tokens[-1]
-                counts[i] = s.generated
-                specs[i] = self._slot_meta[i][0].sampling
-                keys[i] = self._slot_meta[i][1]
-            samp = Smp.spec_arrays(specs)
-            step_keys = jax.vmap(jax.random.fold_in)(
-                jnp.stack(keys), jnp.asarray(counts))
-            nxt, self.pool.cache = self._slot_step(
-                self.params, self.pool.cache, jnp.asarray(tok),
-                jnp.asarray(self.pool.position_vector()),
-                jnp.asarray(self.pool.table_matrix()), samp, step_keys)
-            nxt = np.asarray(nxt)
-            for i in active:
-                s = self.pool.slots[i]
-                s.tokens.append(int(nxt[i]))
-                s.generated += 1
-                s.pos += 1
-                reason = self._slot_done(s)
-                if reason:
-                    finished.append(self._finish(i, reason))
+            if len(self._inflight) >= self._depth:
+                self._collect_one(finished)
+                active = self.pool.decode_slots()
+            if active:
+                ahead = len(self._inflight)
+                # running ahead must not cross any slot's max_new budget:
+                # the step after a length-finish would decode a dead slot
+                run_ahead = ahead == 0 or all(
+                    self.pool.slots[i].generated + ahead
+                    < self.pool.slots[i].max_new for i in active)
+                if not run_ahead:
+                    self._drain_inflight(finished)
+                    active = self.pool.decode_slots()
+                if active:
+                    self._dispatch_decode(active)
+                    if self._depth <= 1:
+                        self._collect_one(finished)
+        elif self._inflight:
+            self._drain_inflight(finished)
 
         self._step_count += 1
         return finished
+
+    # ------------------------------------------------------------------
+    # pipelined decode dispatch (dispatch_depth > 1 keeps steps in flight)
+    # ------------------------------------------------------------------
+
+    def _dispatch_decode(self, active: List[int]):
+        """Dispatch ONE batched decode step without materializing results.
+        With `ahead` steps already in flight, slot positions/sample counts
+        advance host-side by `ahead` and the input token is the previous
+        step's device output — every device operand is identical to what a
+        fully synchronous loop would feed, so pipelining is bit-identical
+        (per-slot PRNG keys make sampled streams co-resident-independent)."""
+        B, psz = self.capacity, self.pool.page_size
+        ahead = len(self._inflight)
+        tok_host = np.zeros((B, 1), np.int32)
+        counts = np.zeros((B,), np.int32)
+        pos = np.asarray(self.pool.position_vector())
+        specs = [SamplingSpec()] * B
+        keys = [jax.random.PRNGKey(0)] * B
+        for i in active:
+            s = self.pool.slots[i]
+            self.pool.ensure_capacity(i, (s.pos + ahead) // psz)
+            self.pool.ensure_writable(i, (s.pos + ahead) // psz)
+            tok_host[i, 0] = s.tokens[-1]
+            counts[i] = s.generated + ahead
+            pos[i] = s.pos + ahead
+            specs[i] = self._slot_meta[i][0].sampling
+            keys[i] = self._slot_meta[i][1]
+        samp = Smp.spec_arrays(specs)
+        step_keys = jax.vmap(jax.random.fold_in)(
+            jnp.stack(keys), jnp.asarray(counts))
+        tok = (jnp.asarray(tok_host) if ahead == 0
+               else self._inflight[-1]["nxt"][:, None])
+        nxt, self.pool.cache = self._slot_step(
+            self.params, self.pool.cache, tok, jnp.asarray(pos),
+            jnp.asarray(self.pool.table_matrix()), samp, step_keys)
+        self._inflight.append(
+            {"nxt": nxt,
+             "members": [(i, self.pool.slots[i].request_id)
+                         for i in active]})
+
+    def _collect_one(self, finished: List[Result]):
+        """Materialize the OLDEST in-flight decode step on the host and
+        apply its token to every member slot still holding that request.
+        A finish changes the decode membership, so the rest of the pipeline
+        drains too (later steps' tokens stay valid for survivors; the dead
+        slot's rows are skipped by the request-id guard)."""
+        entry = self._inflight.popleft()
+        nxt = np.asarray(entry["nxt"])
+        any_done = False
+        for slot, rid in entry["members"]:
+            s = self.pool.slots[slot]
+            if s is None or s.request_id != rid:
+                continue               # aborted while in flight
+            s.tokens.append(int(nxt[slot]))
+            s.generated += 1
+            s.pos += 1
+            reason = self._slot_done(s)
+            if reason:
+                finished.append(self._finish(slot, reason))
+                any_done = True
+        if any_done:
+            self._drain_inflight(finished)
+
+    def _drain_inflight(self, finished: List[Result]):
+        while self._inflight:
+            self._collect_one(finished)
+
+    # ------------------------------------------------------------------
+    # cancellation
+    # ------------------------------------------------------------------
+
+    def abort(self, request_id: int) -> Optional[Result]:
+        """Cancel a request wherever it is: still queued, mid-prefill, or
+        mid-decode.  Frees the slot, unmaps/decrefs its pages (prefix pages
+        shared CoW survive for their other sharers), and re-credits its
+        page reservation; returns a Result with finish_reason="aborted"
+        (tokens = whatever streamed so far), or None when the id is unknown
+        (never submitted, or already finished)."""
+        for idx, (request, _, _) in enumerate(self._queue):
+            if request.request_id == request_id:
+                del self._queue[idx]
+                return Result(request_id=request_id, tokens=[],
+                              prompt_len=int(request.prompt.size),
+                              finish_reason="aborted")
+        for slot, meta in list(self._slot_meta.items()):
+            if meta[0].request_id != request_id:
+                continue
+            # in-flight decode steps reference the slot: drain them first
+            # (co-residents' tokens surface at the next step(); the abortee
+            # may legitimately finish while draining)
+            self._drain_inflight(self._pending_finished)
+            cur = self._slot_meta.get(slot)
+            if cur is not None and cur[0].request_id == request_id:
+                return self._finish(slot, "aborted")
+            for i, r in enumerate(self._pending_finished):
+                if r.request_id == request_id:
+                    return self._pending_finished.pop(i)
+            return None
+        return None
 
     # ------------------------------------------------------------------
     # speculative decoding: draft -> verify -> accept -> rollback
@@ -672,7 +918,7 @@ class Engine:
     def drain(self) -> List[Result]:
         """Run step() until the queue and every slot are empty."""
         results: List[Result] = []
-        while self._queue or (self.pool is not None
-                              and self.pool.active_slots()):
+        while self._queue or self._inflight or self._pending_finished or (
+                self.pool is not None and self.pool.active_slots()):
             results.extend(self.step())
         return sorted(results, key=lambda r: r.request_id)

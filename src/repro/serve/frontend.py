@@ -1,0 +1,343 @@
+"""Async streaming front-end over the synchronous serving Engine.
+
+`AsyncEngine` turns the Engine's submit/step/drain batch interface into
+per-request asyncio token streams:
+
+    front = AsyncEngine(Engine(cfg, params, ...))
+    session = await front.submit(prompt, max_new_tokens=64)
+    async for tok in session:          # tokens as the engine emits them
+        ...
+    result = await session.result()    # the same typed Result drain() returns
+
+One background task owns the engine: it admits queued requests, runs
+`engine.step()` on an executor thread (the event loop stays responsive
+while the device works), and routes each step's new tokens to their
+sessions.  Nothing else ever touches the engine — `submit()` and
+`cancel()` only record intents that the loop applies between steps, so
+the engine sees strictly serialized calls.
+
+Scheduling semantics (DESIGN.md §Async front-end):
+
+  * admission — a priority queue in front of the engine's FIFO: higher
+    `priority` admits first; ties admit in arrival order.  The frontend
+    feeds the engine's queue only up to the free-slot budget, so priority
+    order is decided here, not by engine head-of-line.
+  * deadlines — `deadline_s` bounds time-to-first-token.  A request that
+    expires while queued (or resident but before its first streamed
+    token) finishes with `finish_reason="deadline_exceeded"`; its pages
+    and reservations are released through `Engine.abort`.  Once a token
+    has streamed the deadline no longer applies.
+  * load shedding — the admission queue holds at most `max_queue`
+    requests.  A submit against a full queue sheds the lowest-priority
+    queued request if the newcomer outranks it, else the newcomer —
+    either way the victim finishes immediately with
+    `finish_reason="shed"`.  `wait=True` opts into backpressure instead:
+    the submit coroutine suspends until space frees.
+  * bit-identity — streams carry exactly the tokens the synchronous
+    `Engine.drain` path produces (per-slot PRNG keys make every stream
+    independent of co-residents and of dispatch depth), so greedy
+    streamed output is token-identical to the batch path.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import heapq
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.api import Request, Result
+from repro.serve.engine import Engine
+from repro.serve.sampling import SamplingSpec
+
+_END = object()  # stream terminator sentinel
+
+
+def _empty_result(sess: "StreamSession", reason: str) -> Result:
+    """A terminal Result for a request that never produced tokens."""
+    return Result(
+        request_id=sess.request_id,
+        tokens=[],
+        prompt_len=int(sess.request.prompt.size),
+        finish_reason=reason,
+    )
+
+
+class StreamSession:
+    """One submitted request: an async token iterator plus its Result.
+
+    `async for tok in session` yields generated token ids in order; the
+    loop ends when the request finishes (stop/length/abort/deadline/shed).
+    `await session.result()` returns the typed Result.  `cancel()`
+    requests cooperative cancellation."""
+
+    def __init__(
+        self,
+        frontend: "AsyncEngine",
+        request: Request,
+        priority: int,
+        deadline_s: Optional[float],
+        seq: int,
+    ):
+        self._frontend = frontend
+        self.request = request
+        self.request_id = request.request_id
+        self.priority = priority
+        self.seq = seq
+        self.submit_time = time.perf_counter()
+        self.deadline = (
+            self.submit_time + deadline_s if deadline_s is not None else None
+        )
+        self._tokens: asyncio.Queue = asyncio.Queue()
+        self._result: asyncio.Future = asyncio.get_running_loop().create_future()
+        self._emitted = 0
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self):
+        tok = await self._tokens.get()
+        if tok is _END:
+            raise StopAsyncIteration
+        return tok
+
+    async def result(self) -> Result:
+        return await self._result
+
+    @property
+    def done(self) -> bool:
+        return self._result.done()
+
+    def cancel(self):
+        """Cancel the request: the stream ends after already-computed
+        tokens and result() resolves with finish_reason="aborted"; pages,
+        CoW refcounts and reservations release at the next step boundary."""
+        self._frontend._cancel(self)
+
+    # -- frontend internals (event-loop thread only) -----------------------
+
+    def _emit(self, toks):
+        for t in toks:
+            self._tokens.put_nowait(int(t))
+        self._emitted += len(toks)
+
+    def _finish(self, result: Result):
+        if self._result.done():
+            return
+        n = self._emitted
+        self._emit(result.tokens[n:])
+        self._result.set_result(result)
+        self._tokens.put_nowait(_END)
+
+
+class AsyncEngine:
+    """Asyncio front-end: priority/deadline admission + token streaming
+    over one `Engine` (see the module docstring for the semantics)."""
+
+    def __init__(self, engine: Engine, *, max_queue: int = 64):
+        assert engine.pool is not None, (
+            "AsyncEngine streams through the continuous-batching path; "
+            "encdec/patch configs serve through Engine.generate()"
+        )
+        self._engine = engine
+        self._max_queue = max_queue
+        self._heap: list = []  # (-priority, seq, session)
+        self._seq = 0
+        self._queued: dict = {}  # request_id -> session, pre-admission
+        self._live: dict = {}  # request_id -> session, in the engine
+        self._aborts: List[int] = []  # cancel intents, applied between steps
+        self._wake = asyncio.Event()
+        self._space = asyncio.Event()
+        self._space.set()
+        self._closed = False
+        self._task: Optional[asyncio.Task] = None
+
+    # -- public API --------------------------------------------------------
+
+    async def submit(
+        self,
+        prompt,
+        max_new_tokens: int,
+        *,
+        sampling: SamplingSpec = SamplingSpec(),
+        stop_token: Optional[int] = None,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
+        wait: bool = False,
+    ) -> StreamSession:
+        """Submit a prompt for streamed generation.
+
+        priority — higher admits first (ties: arrival order);
+        deadline_s — TTFT budget in seconds (see module docstring);
+        wait — backpressure instead of shedding when the queue is full."""
+        if self._closed:
+            raise RuntimeError("AsyncEngine is closed")
+        if self._task is None or self._task.done():
+            self._task = asyncio.ensure_future(self._run())
+        if wait:
+            while len(self._queued) >= self._max_queue:
+                self._space.clear()
+                await self._space.wait()
+                if self._closed:
+                    raise RuntimeError("AsyncEngine is closed")
+        rid = self._engine._next_id
+        self._engine._next_id += 1
+        request = Request(
+            prompt=np.asarray(prompt, np.int32).reshape(-1),
+            max_new_tokens=max_new_tokens,
+            sampling=sampling,
+            stop_token=stop_token,
+            request_id=rid,
+        )
+        session = StreamSession(self, request, priority, deadline_s, self._seq)
+        self._seq += 1
+        if len(self._queued) >= self._max_queue:
+            # shed the lowest-priority queued request if the newcomer
+            # outranks it (ties favor the incumbent), else the newcomer
+            worst = min(self._queued.values(), key=lambda s: (s.priority, -s.seq))
+            victim = worst if worst.priority < priority else session
+            if victim is not session:
+                del self._queued[victim.request_id]
+            victim._finish(_empty_result(victim, "shed"))
+            if victim is session:
+                return session
+        self._queued[rid] = session
+        heapq.heappush(self._heap, (-priority, session.seq, session))
+        self._update_space()
+        self._wake.set()
+        return session
+
+    async def close(self, drain: bool = True):
+        """Stop accepting submissions.  drain=True (default) waits for
+        every queued and resident request to finish; drain=False aborts
+        them all first."""
+        self._closed = True
+        if not drain:
+            for rid, sess in list(self._queued.items()):
+                del self._queued[rid]
+                sess._finish(_empty_result(sess, "aborted"))
+            self._aborts.extend(list(self._live))
+        self._wake.set()
+        self._space.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    # -- run loop (the only engine caller) ---------------------------------
+
+    async def _run(self):
+        loop = asyncio.get_running_loop()
+        eng = self._engine
+        while True:
+            self._apply_aborts()
+            self._expire(time.perf_counter())
+            self._admit()
+            busy = bool(
+                eng._queue
+                or eng._inflight
+                or eng._pending_finished
+                or eng.pool.active_slots()
+            )
+            if not busy:
+                if self._closed and not self._queued:
+                    return
+                self._wake.clear()
+                # sleep until new work — or the next queued TTFT deadline,
+                # which must fire even while the engine idles
+                deadlines = [
+                    s.deadline for s in self._queued.values() if s.deadline is not None
+                ]
+                timeout = None
+                if deadlines:
+                    timeout = max(0.0, min(deadlines) - time.perf_counter())
+                try:
+                    await asyncio.wait_for(self._wake.wait(), timeout)
+                except asyncio.TimeoutError:
+                    pass
+                continue
+            results = await loop.run_in_executor(None, eng.step)
+            self._route(results)
+
+    def _apply_aborts(self):
+        while self._aborts:
+            rid = self._aborts.pop()
+            sess = self._live.pop(rid, None)
+            if sess is None:
+                continue  # finished before the intent applied
+            result = self._engine.abort(rid)
+            if result is None:
+                result = _empty_result(sess, "aborted")
+            sess._finish(result)
+
+    def _expire(self, now: float):
+        for rid, sess in list(self._queued.items()):
+            if sess.deadline is not None and now >= sess.deadline:
+                del self._queued[rid]
+                sess._finish(_empty_result(sess, "deadline_exceeded"))
+        self._update_space()
+        for rid, sess in list(self._live.items()):
+            if (
+                sess.deadline is not None
+                and sess._emitted == 0
+                and now >= sess.deadline
+            ):
+                del self._live[rid]
+                result = self._engine.abort(rid)
+                if result is not None:
+                    result = dataclasses.replace(
+                        result, finish_reason="deadline_exceeded"
+                    )
+                else:
+                    result = _empty_result(sess, "deadline_exceeded")
+                sess._finish(result)
+
+    def _admit(self):
+        """Feed the engine's FIFO best-priority-first, up to the free-slot
+        budget (at least one, so head-of-line page pressure is the
+        engine's to resolve — admission ORDER stays the frontend's)."""
+        eng = self._engine
+        budget = max(1, len(eng.pool.free_slots())) - len(eng._queue)
+        while self._heap and budget > 0:
+            _, _, sess = heapq.heappop(self._heap)
+            if sess.request_id not in self._queued:
+                continue  # shed or cancelled while queued
+            del self._queued[sess.request_id]
+            eng.submit(sess.request, submit_time=sess.submit_time)
+            self._live[sess.request_id] = sess
+            budget -= 1
+        self._update_space()
+
+    def _route(self, results: List[Result]):
+        eng = self._engine
+        for r in results:
+            sess = self._live.pop(r.request_id, None)
+            if sess is not None:
+                sess._finish(r)
+        # stream the step's new tokens from still-resident slots
+        for slot, meta in list(eng._slot_meta.items()):
+            sess = self._live.get(meta[0].request_id)
+            if sess is None:
+                continue
+            s = eng.pool.slots[slot]
+            n = sess._emitted
+            if s is not None and len(s.tokens) > n:
+                sess._emit(s.tokens[n:])
+
+    def _cancel(self, sess: StreamSession):
+        rid = sess.request_id
+        if sess.done:
+            return
+        if rid in self._queued:
+            del self._queued[rid]
+            sess._finish(_empty_result(sess, "aborted"))
+            self._update_space()
+            return
+        self._aborts.append(rid)
+        self._wake.set()
+
+    def _update_space(self):
+        if len(self._queued) < self._max_queue:
+            self._space.set()

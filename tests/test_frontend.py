@@ -1,0 +1,239 @@
+"""Async streaming front-end: stream == drain bit-identity, deadline and
+shedding semantics, and cancellation propagating into the page pool.
+
+Tests drive the event loop through `asyncio.run` directly so they run
+with or without pytest-asyncio installed.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec
+from repro.models import model as M
+from repro.serve import AsyncEngine, Engine, Request, SamplingSpec
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small_cfg(vocab=128, max_seq=256):
+    bb = AttentionSpec(
+        kind="bigbird",
+        causal=True,
+        block_size=8,
+        num_window_blocks=3,
+        num_global_blocks=1,
+        num_random_blocks=1,
+    )
+    return M.ModelConfig(
+        name="frontend-test",
+        d_model=32,
+        num_layers=2,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=64,
+        vocab_size=vocab,
+        attn=bb,
+        dtype=jnp.float32,
+        scan_layers=False,
+        remat="none",
+        loss_chunk=32,
+        max_seq=max_seq,
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (19, 40, 33, 11)
+    ]
+    return cfg, params, prompts
+
+
+def _drain_reference(cfg, params, prompts, max_new=8):
+    eng = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2)
+    for i, p in enumerate(prompts):
+        eng.submit(
+            Request(prompt=p, max_new_tokens=max_new, sampling=SamplingSpec(seed=i))
+        )
+    return {r.request_id: tuple(r.tokens) for r in eng.drain()}
+
+
+def _pool_empty(pool):
+    return (
+        pool.pages_in_use == 0
+        and pool.pages_reserved == 0
+        and sum(len(f) for f in pool._free) == pool.num_pages - 1
+    )
+
+
+def test_streamed_greedy_bit_identical_to_drain(setup):
+    """`async for tok in session` must yield exactly the tokens the
+    synchronous Engine.drain path produces — solo ordering and staggered
+    submission, with dispatch pipelining on."""
+    cfg, params, prompts = setup
+    ref = _drain_reference(cfg, params, prompts)
+
+    async def run(stagger):
+        eng = Engine(
+            cfg, params, max_len=64, capacity=4, prefill_chunk=2, dispatch_depth=2
+        )
+        front = AsyncEngine(eng)
+        sessions = []
+        for i, p in enumerate(prompts):
+            sessions.append(await front.submit(p, 8, sampling=SamplingSpec(seed=i)))
+            if stagger:
+                await asyncio.sleep(0.02)
+        streams = []
+        for s in sessions:
+            toks = [t async for t in s]
+            r = await s.result()
+            assert r.finish_reason == "length"
+            assert tuple(r.tokens) == tuple(toks)  # stream == Result
+            streams.append(tuple(toks))
+        await front.close()
+        assert _pool_empty(eng.pool)
+        return streams
+
+    assert asyncio.run(run(False)) == [ref[i] for i in range(4)]
+    assert asyncio.run(run(True)) == [ref[i] for i in range(4)]
+
+
+def test_deadline_expiry_typed_result_without_leaking_pages(setup):
+    """A request whose TTFT deadline lapses while queued (or resident but
+    pre-first-token) finishes with finish_reason="deadline_exceeded"; its
+    pages and reservation are fully released."""
+    cfg, params, prompts = setup
+
+    async def run():
+        eng = Engine(cfg, params, max_len=64, capacity=1, prefill_chunk=2)
+        front = AsyncEngine(eng)
+        keep = await front.submit(prompts[0], 8, sampling=SamplingSpec(seed=0))
+        # capacity 1: this one queues behind `keep` and must expire there
+        doomed = await front.submit(prompts[1], 8, deadline_s=0.0)
+        r = await doomed.result()
+        assert r.finish_reason == "deadline_exceeded" and r.tokens == []
+        # resident expiry: admitted (slot held) but deadline fires before
+        # its first streamed token
+        doomed2 = await front.submit(prompts[2], 8, deadline_s=1e-6)
+        r2 = await doomed2.result()
+        assert r2.finish_reason == "deadline_exceeded"
+        rk = await keep.result()
+        assert rk.finish_reason == "length" and len(rk.tokens) == 8
+        await front.close()
+        assert _pool_empty(eng.pool)
+
+    asyncio.run(run())
+
+
+def test_queue_full_shedding_respects_priority(setup):
+    """At max_queue, a high-priority submit sheds the lowest-priority
+    queued request; a low-priority submit sheds itself — both get a typed
+    "shed" Result immediately and never touch the engine."""
+    cfg, params, prompts = setup
+
+    async def run():
+        eng = Engine(cfg, params, max_len=64, capacity=1, prefill_chunk=2)
+        front = AsyncEngine(eng, max_queue=2)
+        busy = await front.submit(prompts[0], 8)  # occupies the slot
+        await asyncio.sleep(0.05)
+        low = await front.submit(prompts[1], 4, priority=1)
+        high = await front.submit(prompts[2], 4, priority=5)
+        mid = await front.submit(prompts[3], 4, priority=3)  # sheds `low`
+        r_low = await low.result()
+        assert r_low.finish_reason == "shed" and r_low.tokens == []
+        worse = await front.submit(prompts[0], 4, priority=0)  # sheds itself
+        r_worse = await worse.result()
+        assert r_worse.finish_reason == "shed"
+        done = [await s.result() for s in (busy, high, mid)]
+        assert all(r.finish_reason == "length" for r in done)
+        await front.close()
+        assert _pool_empty(eng.pool)
+
+    asyncio.run(run())
+
+
+def test_priority_orders_admission(setup):
+    """Queued requests admit best-priority-first regardless of arrival."""
+    cfg, params, prompts = setup
+
+    async def run():
+        eng = Engine(cfg, params, max_len=64, capacity=1, prefill_chunk=2)
+        front = AsyncEngine(eng)
+        busy = await front.submit(prompts[0], 6)
+        await asyncio.sleep(0.05)
+        lo = await front.submit(prompts[1], 4, priority=0)
+        hi = await front.submit(prompts[2], 4, priority=9)
+        r_lo, r_hi = await lo.result(), await hi.result()
+        assert r_hi.ttft_steps > 0 and r_lo.ttft_steps > 0
+        # the high-priority request reached a slot first
+        assert eng._slot_meta == {} and _pool_empty(eng.pool)
+        assert r_hi.ttft_s <= r_lo.ttft_s
+        await front.close()
+        await busy.result()
+
+    asyncio.run(run())
+
+
+def test_cancel_mid_stream_releases_pages(setup):
+    """session.cancel() mid-stream aborts through Engine.abort: the stream
+    ends, the Result carries the streamed prefix, co-residents keep their
+    exact streams, and the pool drains empty."""
+    cfg, params, prompts = setup
+    ref = _drain_reference(cfg, params, prompts)
+
+    async def run():
+        eng = Engine(
+            cfg, params, max_len=64, capacity=4, prefill_chunk=2, dispatch_depth=2
+        )
+        front = AsyncEngine(eng)
+        sessions = [
+            await front.submit(p, 8, sampling=SamplingSpec(seed=i))
+            for i, p in enumerate(prompts)
+        ]
+        got = []
+        async for t in sessions[1]:
+            got.append(t)
+            if len(got) == 3:
+                sessions[1].cancel()
+        r = await sessions[1].result()
+        assert r.finish_reason == "aborted"
+        assert tuple(r.tokens) == tuple(got)
+        k = len(got)
+        assert tuple(got) == ref[1][:k]  # prefix of the solo stream
+        for i in (0, 2, 3):
+            ri = await sessions[i].result()
+            assert tuple(ri.tokens) == ref[i]
+        await front.close()
+        assert _pool_empty(eng.pool)
+
+    asyncio.run(run())
+
+
+def test_backpressure_wait_suspends_submit(setup):
+    """submit(wait=True) against a full queue suspends instead of
+    shedding, resuming when admission frees space."""
+    cfg, params, prompts = setup
+
+    async def run():
+        eng = Engine(cfg, params, max_len=64, capacity=1, prefill_chunk=2)
+        front = AsyncEngine(eng, max_queue=1)
+        first = await front.submit(prompts[0], 4)
+        await asyncio.sleep(0.05)
+        second = await front.submit(prompts[1], 4)  # fills the queue
+        t0 = asyncio.get_running_loop().time()
+        third = await front.submit(prompts[2], 4, wait=True)
+        assert asyncio.get_running_loop().time() >= t0  # resumed, not shed
+        done = [await s.result() for s in (first, second, third)]
+        assert all(r.finish_reason == "length" for r in done)
+        await front.close()
+        assert _pool_empty(eng.pool)
+
+    asyncio.run(run())

@@ -188,3 +188,77 @@ def test_paged_decode_kernel_masks_unwritten_tail():
     out2 = ops.bigbird_paged_decode_attn(q, kc2, vc2, jnp.asarray(pt), pos,
                                          cfg)
     np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+# --------------------------------------------------------------------------
+# ragged prefill kernel (serving path, forward-only)
+# --------------------------------------------------------------------------
+
+def _ragged_gather_oracle(q, kc, vc, pt, starts, cfg):
+    """Pure-jnp mirror of models/decode._ragged_attn_layer's XLA read."""
+    import jax
+    from repro.models.decode import _paged_gather
+    B, Hq, C, dh = q.shape
+    Hkv, b = kc.shape[1], cfg.block_size
+    nc, grp = C // b, Hq // kc.shape[1]
+    pat = patterns.build_pattern(cfg, pt.shape[1] * b, layer=0)
+    idx, msk = jnp.asarray(pat.key_blocks), jnp.asarray(pat.key_mask)
+    qb = jnp.asarray(starts)[:, None] // b + jnp.arange(nc)
+    rows, rmsk = idx[qb], msk[qb]
+    Ls = rows.shape[-1]
+    kg = _paged_gather(kc, jnp.asarray(pt), rows.reshape(B, nc * Ls)) \
+        .reshape(B, Hkv, nc, Ls * b, dh)
+    vg = _paged_gather(vc, jnp.asarray(pt), rows.reshape(B, nc * Ls)) \
+        .reshape(B, Hkv, nc, Ls * b, dh)
+    flat = (rows[..., None] * b + jnp.arange(b)).reshape(B, nc, Ls * b)
+    qpos = (jnp.asarray(starts)[:, None] + jnp.arange(C)).reshape(B, nc, b)
+    valid = (jnp.repeat(rmsk, b, axis=-1)[:, :, None, :]
+             & (flat[:, :, None, :] <= qpos[..., None]))
+    qf = q.reshape(B, Hkv, grp, nc, b, dh)
+    s = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qf, kg) / np.sqrt(dh)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", pr, vg)
+    return o.reshape(B, Hq, C, dh)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 2)])
+def test_ragged_prefill_kernel_matches_gather(Hq, Hkv):
+    """Pallas ragged-prefill kernel vs the XLA two-level-gather baseline
+    (interpret mode on CPU): permuted page tables, per-row chunk offsets,
+    GQA groups — each row at a different logical block of its own cache."""
+    b, max_pages, P, dh, B, C = 8, 8, 70, 16, 3, 16
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=3,
+                                 num_global_blocks=1, num_random_blocks=1,
+                                 causal=True, seed=2)
+    kc = _mk((P, Hkv, b, dh), jnp.float32)
+    vc = _mk((P, Hkv, b, dh), jnp.float32)
+    q = _mk((B, Hq, C, dh), jnp.float32)
+    perm = RNG.permutation(np.arange(1, P))[:B * max_pages]
+    pt = perm.reshape(B, max_pages).astype(np.int32)
+    starts = np.asarray([8, 16, 48], np.int32)   # heterogeneous offsets
+    base = _ragged_gather_oracle(q, kc, vc, pt, starts, cfg)
+    kern = ops.bigbird_ragged_prefill_attn(q, kc, vc, pt, starts, cfg,
+                                           layer=0)
+    np.testing.assert_allclose(kern, base, atol=1e-5, rtol=1e-5)
+
+
+def test_ragged_prefill_kernel_rows_independent():
+    """A ragged batch must equal each row run alone (B=1): this is the
+    property the Engine's bit-identity contract leans on — batching chunks
+    of different prompts cannot perturb any single prompt's prefill."""
+    b, max_pages, P, dh, Hq, Hkv, C = 8, 8, 40, 16, 4, 2, 16
+    cfg = patterns.BigBirdConfig(block_size=b, num_window_blocks=3,
+                                 num_global_blocks=1, num_random_blocks=1,
+                                 causal=True, seed=5)
+    kc = _mk((P, Hkv, b, dh), jnp.float32)
+    vc = _mk((P, Hkv, b, dh), jnp.float32)
+    q = _mk((3, Hq, C, dh), jnp.float32)
+    perm = RNG.permutation(np.arange(1, P))[:3 * max_pages]
+    pt = perm.reshape(3, max_pages).astype(np.int32)
+    starts = np.asarray([8, 32, 16], np.int32)
+    batched = np.asarray(ops.bigbird_ragged_prefill_attn(
+        q, kc, vc, pt, starts, cfg, layer=0))
+    for i in range(3):
+        solo = np.asarray(ops.bigbird_ragged_prefill_attn(
+            q[i:i + 1], kc, vc, pt[i:i + 1], starts[i:i + 1], cfg, layer=0))
+        np.testing.assert_array_equal(batched[i:i + 1], solo)

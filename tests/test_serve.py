@@ -473,3 +473,182 @@ def test_final_chunk_clamped_at_logical_cache_end():
     one.submit(Request(prompt=prompt, max_new_tokens=4,
                        sampling=SamplingSpec(seed=0)))
     assert got == one.drain()[0].tokens
+
+
+# --------------------------------------------------------------------------
+# ragged multi-prompt prefill + pipelined decode dispatch
+# --------------------------------------------------------------------------
+
+def _mixed_requests(cfg, lens=(19, 40, 33, 11), max_new=8):
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(4, cfg.vocab_size, size=l).astype(np.int32)
+               for l in lens]
+    return lambda: [Request(prompt=p, max_new_tokens=max_new,
+                            sampling=SamplingSpec(temperature=0.8, top_k=20,
+                                                  seed=i))
+                    for i, p in enumerate(prompts)]
+
+
+def test_ragged_prefill_engine_matches_one_shot():
+    """Ragged multi-prompt prefill (chunks of several prompts in ONE
+    batched forward) must keep the chunked == one-shot bit-identity
+    contract — and must actually take the ragged path."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    reqs = _mixed_requests(cfg)
+
+    def run(**kw):
+        eng = Engine(cfg, params, max_len=64, capacity=4, **kw)
+        for r in reqs():
+            eng.submit(r)
+        return eng, [tuple(r.tokens) for r in eng.drain()]
+
+    _, one = run(prefill_chunk=None)
+    eng_r, ragged = run(prefill_chunk=2, ragged_prefill=True)
+    _, static = run(prefill_chunk=2, ragged_prefill=False)
+    assert eng_r._ragged and len(eng_r._ragged_fns) >= 1  # path exercised
+    assert ragged == one
+    assert static == one
+
+
+def test_dispatch_depth_pipelining_bit_identical():
+    """dispatch_depth=2 keeps a decode step in flight; token streams must
+    be bit-identical to the synchronous depth-1 engine, including under
+    staggered admission (pipeline drains before membership changes)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    reqs = _mixed_requests(cfg)
+
+    def run(depth, stagger):
+        eng = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2,
+                     dispatch_depth=depth)
+        rs = reqs()
+        if stagger:
+            eng.submit(rs[0]); eng.step(); eng.step()
+            eng.submit(rs[1]); eng.submit(rs[2]); eng.step()
+            eng.submit(rs[3])
+        else:
+            for r in rs:
+                eng.submit(r)
+        out = {r.request_id: tuple(r.tokens) for r in eng.drain()}
+        assert not eng._inflight
+        return [out[i] for i in range(4)]
+
+    base = run(1, stagger=False)
+    assert run(2, stagger=False) == base
+    assert run(2, stagger=True) == base
+
+
+# --------------------------------------------------------------------------
+# Engine.abort: cancellation invariants (pages, CoW, reservations)
+# --------------------------------------------------------------------------
+
+def _pool_empty(pool):
+    return (pool.pages_in_use == 0 and pool.pages_reserved == 0
+            and sum(len(f) for f in pool._free) == pool.num_pages - 1)
+
+
+def test_abort_queued_and_unknown_id():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    eng = Engine(cfg, params, max_len=64, capacity=1, prefill_chunk=2)
+    rng = np.random.default_rng(7)
+    rid = eng.submit(Request(prompt=rng.integers(4, 128, size=12)
+                             .astype(np.int32), max_new_tokens=4))
+    res = eng.abort(rid)
+    assert res.finish_reason == "aborted" and res.tokens == []
+    assert eng.abort(rid) is None          # already gone
+    assert eng.abort(12345) is None        # never submitted
+    assert not eng._queue and eng.drain() == []
+
+
+def test_abort_mid_prefill_and_mid_decode_releases_everything():
+    """Aborting mid-prefill (no token yet) and mid-decode frees pages AND
+    the unspent reservation; survivors' streams stay solo-identical and
+    the drained pool is byte-for-byte empty."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    reqs = _mixed_requests(cfg)
+    solo = {}
+    for i, r in enumerate(reqs()):
+        e = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2)
+        e.submit(r)
+        solo[i] = tuple(e.drain()[0].tokens)
+
+    eng = Engine(cfg, params, max_len=64, capacity=4, prefill_chunk=2,
+                 dispatch_depth=2)
+    rs = reqs()
+    for r in rs:
+        eng.submit(r)
+    eng.step()                              # prompts mid-prefill
+    r1 = eng.abort(rs[1].request_id)        # longest prompt: still prefilling
+    assert r1.finish_reason == "aborted" and r1.ttft_s == 0.0
+    for _ in range(4):
+        eng.step()
+    r2 = eng.abort(rs[2].request_id)        # decoding by now
+    assert r2.finish_reason == "aborted" and len(r2.tokens) >= 1
+    assert tuple(r2.tokens) == solo[2][:len(r2.tokens)]
+    rest = {r.request_id: r for r in eng.drain()}
+    assert set(rest) == {0, 3}
+    for i in rest:
+        assert tuple(rest[i].tokens) == solo[i]
+    assert _pool_empty(eng.pool)
+
+
+def test_abort_cow_prefix_sharer_keeps_page_alive():
+    """Aborting one sharer of a CoW global-prefix page must decref — not
+    free — the page: the surviving sharer keeps reading it and its stream
+    stays solo-identical."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(4, cfg.vocab_size, size=8).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(4, cfg.vocab_size, size=n)
+                               .astype(np.int32)]) for n in (20, 24)]
+    e = Engine(cfg, params, max_len=64, capacity=2, prefill_chunk=2)
+    e.submit(Request(prompt=prompts[1], max_new_tokens=12,
+                     sampling=SamplingSpec(seed=1)))
+    solo1 = tuple(e.drain()[0].tokens)
+
+    eng = Engine(cfg, params, max_len=64, capacity=2, prefill_chunk=2)
+    r0 = Request(prompt=prompts[0], max_new_tokens=12,
+                 sampling=SamplingSpec(seed=0))
+    r1 = Request(prompt=prompts[1], max_new_tokens=12,
+                 sampling=SamplingSpec(seed=1))
+    eng.submit(r0)
+    while not eng.pool.decode_slots():      # prefix fully indexed
+        eng.step()
+    eng.submit(r1)
+    eng.step()
+    s1 = eng.pool.slots[1]
+    assert s1 is not None and s1.shared_pages == 1
+    shared_pg = s1.pages[0]
+    assert eng.pool.refcount[shared_pg] == 2
+    res0 = eng.abort(r0.request_id)         # abort the page's first owner
+    assert res0.finish_reason == "aborted"
+    assert eng.pool.refcount[shared_pg] == 1
+    out = eng.drain()
+    assert len(out) == 1 and tuple(out[0].tokens) == solo1
+    assert _pool_empty(eng.pool)
+
+
+def test_abort_unblocks_page_exhausted_queue():
+    """A queued request waiting on pages must admit as soon as an abort
+    returns them (reservation re-credit, not just mapped-page release)."""
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(6)
+    # each request reserves ceil((24+8-1)/8) = 4 pages; pool holds 5 usable
+    eng = Engine(cfg, params, max_len=64, capacity=3, num_pages=6,
+                 prefill_chunk=2)
+    rids = [eng.submit(Request(
+        prompt=rng.integers(4, cfg.vocab_size, size=24).astype(np.int32),
+        max_new_tokens=8, sampling=SamplingSpec(seed=i))) for i in range(2)]
+    eng.step()
+    assert eng.pool.slots[0] is not None and eng._queue  # req1 starved
+    assert eng.abort(rids[0]).finish_reason == "aborted"
+    eng.step()
+    assert not eng._queue                   # admitted right after the abort
+    out = eng.drain()
+    assert len(out) == 1 and len(out[0].tokens) == 8
+    assert _pool_empty(eng.pool)
