@@ -38,6 +38,27 @@ silently proposing garbage is a real regression even when wall-clock
 stays inside the wide band).  Spec fields
 are gated only when the baseline carries them.
 
+KV-compression metrics (benchmarks/serving.py --kv-dtype int8,
+--host-swap), gated once the baseline carries them:
+
+* `swap_outputs_match` gates HARD: the host-swap tier is exact by
+  construction (pages round-trip bitwise through host memory), so the
+  swapped run's digest must equal the unswapped run's — and
+  `swap_out_total` must stay positive, else the swap path silently went
+  dormant and the equality is vacuous.
+* int8 pages are lossy, so they gate on QUALITY, not bits:
+  `int8_nll_delta` (mean teacher-forced NLL inflation of the f32 streams
+  under the int8 engine) must stay under
+  max(INT8_NLL_ABS_CEIL, 2·|baseline|), and `spec_acceptance_rate_int8`
+  keeps the same acceptance floor as the f32 spec path — quantization
+  that breaks the draft/verify contract is a regression wherever the
+  wall-clock lands.
+* the structural side of compression gates like the other page
+  accounting: `kv_bytes_per_request_int8` may grow <= 1%, and
+  `max_concurrency_int8` is exact AND must stay strictly above
+  `max_concurrency_paged` (a compressed pool that cannot outpack the
+  uncompressed one has lost its reason to exist).
+
 Exit code 0 = within bands, 1 = regression, 2 = usage/parse error.
 
 Re-baselining: land the new numbers in
@@ -60,6 +81,8 @@ KV_GROWTH_TOL = 0.01  # hard gate: paged KV bytes/request may grow <= 1%
 ACCEPT_DROP_TOL = 0.15   # spec acceptance may drop <= 15 points absolute...
 ACCEPT_REL_FLOOR = 0.5   # ...but never below half the baseline rate (the
 #                          absolute band alone is vacuous for small baselines)
+INT8_NLL_ABS_CEIL = 0.1  # int8 NLL inflation ceiling (nats/token), floor of
+#                          the relative band 2x|baseline| for tiny baselines
 
 
 def parse_serving_json(text: str) -> dict:
@@ -146,6 +169,64 @@ def check(fresh: dict, base: dict, timing_band: float) -> list:
                 f"baseline {base['spec_continuous_tok_s']} "
                 f"(band {timing_band}x)"
             )
+
+    # host-swap gates: the swap tier is exact by construction, so digest
+    # equality gates HARD — and the swap path must actually have run
+    if "swap_outputs_match" in base:
+        if fresh.get("swap_outputs_match") is not True:
+            bad.append(
+                "swap_outputs_match is not true: host-swapped token "
+                "streams diverged from the unswapped run (the swap tier "
+                "is bitwise by construction — correctness bug, not perf)"
+            )
+        if not fresh.get("swap_out_total", 0) > 0:
+            bad.append(
+                "swap_out_total is 0: the starved-pool section produced "
+                "no swap traffic, so swap_outputs_match gated nothing"
+            )
+
+    # int8 KV gates: lossy pages gate on quality + structure, not bits
+    if "int8_nll_delta" in base:
+        d_f, d_b = fresh["int8_nll_delta"], base["int8_nll_delta"]
+        ceil = max(INT8_NLL_ABS_CEIL, 2.0 * abs(d_b))
+        if d_f > ceil:
+            bad.append(
+                f"int8_nll_delta rose {d_b} -> {d_f} (ceiling {ceil:.4f}: "
+                f"int8 KV pages degraded model quality)"
+            )
+        kv8_f = fresh["kv_bytes_per_request_int8"]
+        kv8_b = base["kv_bytes_per_request_int8"]
+        if kv8_f > kv8_b * (1.0 + KV_GROWTH_TOL):
+            bad.append(
+                f"kv_bytes_per_request_int8 grew {kv8_b} -> {kv8_f} "
+                f"(hard gate: <= {KV_GROWTH_TOL:.0%})"
+            )
+        if fresh.get("max_concurrency_int8") != base.get(
+                "max_concurrency_int8"):
+            bad.append(
+                f"max_concurrency_int8 changed "
+                f"{base.get('max_concurrency_int8')} -> "
+                f"{fresh.get('max_concurrency_int8')}"
+            )
+        if not fresh.get("max_concurrency_int8", 0) > \
+                fresh.get("max_concurrency_paged", 0):
+            bad.append(
+                f"max_concurrency_int8 "
+                f"({fresh.get('max_concurrency_int8')}) does not exceed "
+                f"max_concurrency_paged "
+                f"({fresh.get('max_concurrency_paged')}): the compressed "
+                f"pool no longer raises the concurrency ceiling"
+            )
+        if "spec_acceptance_rate_int8" in base:
+            a_f = fresh.get("spec_acceptance_rate_int8", 0.0)
+            a_b = base["spec_acceptance_rate_int8"]
+            floor = max(a_b - ACCEPT_DROP_TOL, a_b * ACCEPT_REL_FLOOR)
+            if a_f < floor:
+                bad.append(
+                    f"spec_acceptance_rate_int8 dropped {a_b} -> {a_f} "
+                    f"(floor {floor:.4f}: quantized verify path rejects "
+                    f"drafts it used to accept)"
+                )
     return bad
 
 

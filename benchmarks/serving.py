@@ -22,7 +22,22 @@ Measurements over a small BigBird LM (bounded decode, paged KV pool):
                           accepted-length histogram.  Greedy speculation is
                           lossless, so `spec_outputs_match` asserts the
                           spec digest equals the vanilla digest — a CI-level
-                          restatement of the token-identity contract.
+                          restatement of the token-identity contract;
+  serving_int8          — (--kv-dtype int8) the workload on quantized KV
+                          pages: bytes/request and same-HBM concurrency
+                          under int8, plus `int8_nll_delta` — the mean
+                          teacher-forced NLL inflation of the f32 engine's
+                          streams when scored through the int8 paged path
+                          (Engine.score; int8 is lossy, so quality, not
+                          digests, is the gated contract) and, with --spec,
+                          `spec_acceptance_rate_int8`;
+  serving_swap          — (--host-swap) the workload on a pool starved to
+                          less than half its peak working set, with the
+                          host-memory swap tier absorbing the pressure:
+                          `swap_outputs_match` asserts the swapped run's
+                          digest equals the unswapped continuous digest
+                          (the swap tier is EXACT by construction), with
+                          swap_in/out traffic and the host-page peak.
 
 Memory rows compare the paged pool against the slot-contiguous layout it
 replaced (capacity x max_len reservation per slot):
@@ -95,7 +110,16 @@ def main(argv=None):
                          "speculative draft/verify path")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per verify round (default 4)")
+    ap.add_argument("--kv-dtype", default=None, choices=(None, "int8"),
+                    help="also run the workload on quantized KV pages and "
+                         "report bytes/concurrency/NLL-delta")
+    ap.add_argument("--host-swap", action="store_true",
+                    help="also run the workload on a starved pool with the "
+                         "host-memory swap tier (digest-gated)")
     args = ap.parse_args(argv)
+    assert not ((args.kv_dtype or args.host_swap)
+                and args.mesh and args.mesh != "1x1"), \
+        "the int8/swap sections run on the unsharded engine"
     mesh = None
     mesh_name = "1x1"
     if args.mesh and args.mesh != "1x1":
@@ -284,6 +308,106 @@ def main(argv=None):
     conc_slot = B                         # one max_len reservation per slot
     conc_paged = int(B * max_pages // max(mean_pages, 1.0))
 
+    # ---- quantized KV pages: same workload, int8 pool ---------------------
+    int8_json = {}
+    if args.kv_dtype == "int8":
+        eng8 = Engine(cfg, params, max_len=MAXLEN, capacity=B,
+                      kv_dtype="int8")
+        for r in make_reqs(100):
+            eng8.submit(r)
+        eng8.drain()
+        eng8.pool.reset_stats()
+        reqs8 = make_reqs(0)
+        for r in reqs8[:B]:
+            eng8.submit(r)
+        eng8.step()
+        t0 = time.perf_counter()
+        for r in reqs8[B:]:
+            eng8.submit(r)
+        results8 = eng8.drain()
+        t_8 = time.perf_counter() - t0
+        tps8 = sum(len(r.tokens) for r in results8) / max(t_8, 1e-9)
+        page_b8 = eng8.stats().kv_bytes_per_page
+        mean_pages8 = float(np.mean([r.pages_used for r in results8]))
+        kv_int8 = mean_pages8 * page_b8
+        # same-HBM concurrency: the f32 slot-contiguous byte budget over
+        # the int8 mean per-request footprint — the ceiling the
+        # compressed pool raises (vs conc_paged on the same budget)
+        conc_int8 = int(B * max_pages * page_b // max(kv_int8, 1.0))
+        # quality: teacher-forced NLL of the f32 streams through the int8
+        # paged path vs the f32 path (positive delta = int8 is worse)
+        nll_f = nll_8 = 0.0
+        base_id = min(r.request_id for r in results)
+        scored = results[:4]
+        for r in scored:
+            prompt = wl_prompts[r.request_id - base_id]
+            nll_f += -float(np.mean(engine.score(prompt, r.tokens)))
+            nll_8 += -float(np.mean(eng8.score(prompt, r.tokens)))
+        nll_delta = (nll_8 - nll_f) / len(scored)
+        int8_json = {
+            "kv_dtype": "int8",
+            "int8_continuous_tok_s": round(tps8, 1),
+            "kv_bytes_per_request_int8": round(kv_int8),
+            "max_concurrency_int8": conc_int8,
+            "int8_nll_delta": round(nll_delta, 5),
+        }
+        if args.spec:
+            spec8 = Engine(cfg, params, max_len=MAXLEN, capacity=B,
+                           kv_dtype="int8",
+                           spec=SpecConfig(k=args.spec_k, provider="ngram"))
+            for r in make_reqs(100):
+                spec8.submit(r)
+            spec8.drain()
+            for r in make_reqs(0):
+                spec8.submit(r)
+            sres8 = spec8.drain()
+            prop8 = sum(r.draft_proposed for r in sres8)
+            acc8 = sum(r.draft_accepted for r in sres8)
+            int8_json["spec_acceptance_rate_int8"] = round(
+                acc8 / max(prop8, 1), 4)
+        row("serving_int8", t_8 / max(sum(len(r.tokens) for r in results8),
+                                      1) * 1e6,
+            f"{tps8:.1f}tok/s;{kv_int8:.0f}B/req;"
+            f"conc={conc_int8};dnll={nll_delta:.4f}")
+
+    # ---- host-memory swap tier: starved pool, digest-gated ----------------
+    swap_json = {}
+    if args.host_swap:
+        # largest request needs ceil((32 + 255 + 47) / 32) = 11 pages;
+        # 16 total (15 usable) is under half the unswapped peak working
+        # set (~33), so the workload only fits through the host tier
+        eng_sw = Engine(cfg, params, max_len=MAXLEN, capacity=B,
+                        host_swap=True, num_pages=16)
+        for r in make_reqs(100):
+            eng_sw.submit(r)
+        eng_sw.drain()
+        eng_sw.pool.reset_stats()
+        reqs_sw = make_reqs(0)
+        for r in reqs_sw[:B]:
+            eng_sw.submit(r)
+        eng_sw.step()
+        t0 = time.perf_counter()
+        for r in reqs_sw[B:]:
+            eng_sw.submit(r)
+        results_sw = eng_sw.drain()
+        t_sw = time.perf_counter() - t0
+        tps_sw = sum(len(r.tokens) for r in results_sw) / max(t_sw, 1e-9)
+        st_sw = eng_sw.stats()
+        swap_json = {
+            "swap_num_pages": eng_sw.pool.num_pages,
+            "swap_tok_s": round(tps_sw, 1),
+            "swap_out_total": st_sw.swap_out,
+            "swap_in_total": st_sw.swap_in,
+            "pages_host_peak": eng_sw.pool.pages_host_peak,
+            # the swap tier is exact: same streams as the ample pool
+            "swap_outputs_match": _digest(results_sw) == _digest(results),
+        }
+        row("serving_swap", t_sw / max(sum(len(r.tokens)
+                                           for r in results_sw), 1) * 1e6,
+            f"{tps_sw:.1f}tok/s;pages={eng_sw.pool.num_pages};"
+            f"out={st_sw.swap_out};in={st_sw.swap_in};"
+            f"match={swap_json['swap_outputs_match']}")
+
     row("serving_ttft", ttft * 1e6, f"B{B}xS{PROMPT}")
     row("serving_decode", (t_gen - ttft) / dec_steps * 1e6,
         f"{dec_tps:.1f}tok/s")
@@ -316,6 +440,8 @@ def main(argv=None):
         "stream_outputs_match": stream_match,
         "outputs_digest": _digest(results),
         **spec_json,
+        **int8_json,
+        **swap_json,
         "page_size": st.page_size,
         "kv_bytes_per_request_paged": round(kv_paged),
         "kv_bytes_per_request_slot": round(kv_slot),

@@ -145,16 +145,19 @@ def validate_serving_mesh(cfg, mesh, capacity: int,
     return data, model
 
 
-def serving_cache_pspecs(cfg, B, max_len, num_pages):
+def serving_cache_pspecs(cfg, B, max_len, num_pages, kv_dtype=None):
     """PartitionSpec tree for the paged serving cache under shard_map.
 
     Unlike `spec_for` (preference order + divisibility fallback), these are
     the EXACT specs the sharded decode/prefill executables require: paged
     K/V leaves split pages over `data` and kv heads over `model`; recurrent
-    per-slot leaves split their slot dim over `data`.  Callers must have
-    passed `validate_serving_mesh` first."""
+    per-slot leaves split their slot dim over `data`.  Quantized pools'
+    scale leaves (`ks`/`vs`, axes (pages, kv_heads)) follow the same rule
+    as the pages they scale.  Callers must have passed
+    `validate_serving_mesh` first."""
     from repro.models import decode as Dec
-    axes_tree = Dec.cache_logical_axes(cfg, B, max_len, num_pages=num_pages)
+    axes_tree = Dec.cache_logical_axes(cfg, B, max_len, num_pages=num_pages,
+                                       kv_dtype=kv_dtype)
     mapping = {"pages": "data", "kv_heads": "model", "batch": "data"}
 
     def to_spec(axes):

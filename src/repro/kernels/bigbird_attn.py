@@ -424,12 +424,11 @@ def bigbird_attn_dkv_global(q, k, v, do, lse, delta, *, block_size: int,
 # paged bounded decode (forward-only, serving path)
 # --------------------------------------------------------------------------
 
-def _paged_decode_kernel(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
-                         v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                         block_size: int, grp: int, num_slots: int):
-    i = pl.program_id(0)                                 # slot (batch row)
-    t = pl.program_id(1)                                 # pattern slot
-
+def _paged_decode_inner(i, t, pos_ref, idx_ref, msk_ref, q_ref, k, v, o_ref,
+                        m_ref, l_ref, acc_ref, *, scale: float,
+                        block_size: int, grp: int, num_slots: int):
+    """Shared flash-softmax body; k/v (Hkv, b, d) arrive already in f32
+    (the int8 wrapper dequantizes them in VMEM before calling in)."""
     @pl.when(t == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
@@ -446,8 +445,6 @@ def _paged_decode_kernel(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
     valid = live & (kpos <= pos)                         # (1, b)
 
     q = q_ref[0].astype(jnp.float32)                     # (Hq, d)
-    k = k_ref[0].astype(jnp.float32)                     # (Hkv, b, d)
-    v = v_ref[0].astype(jnp.float32)
     hq, d = q.shape
     hkv = k.shape[0]
     qg = q.reshape(hkv, grp, d)
@@ -475,9 +472,38 @@ def _paged_decode_kernel(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
+                         v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                         block_size: int, grp: int, num_slots: int):
+    i = pl.program_id(0)                                 # slot (batch row)
+    t = pl.program_id(1)                                 # pattern slot
+    _paged_decode_inner(i, t, pos_ref, idx_ref, msk_ref, q_ref,
+                        k_ref[0].astype(jnp.float32),
+                        v_ref[0].astype(jnp.float32),
+                        o_ref, m_ref, l_ref, acc_ref, scale=scale,
+                        block_size=block_size, grp=grp, num_slots=num_slots)
+
+
+def _paged_decode_kernel_q(pt_ref, pos_ref, idx_ref, msk_ref, q_ref, k_ref,
+                           v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                           acc_ref, *, scale: float, block_size: int,
+                           grp: int, num_slots: int):
+    """int8-page variant: the page and its (1, Hkv) scales arrive through
+    the same scalar-prefetched gather; dequant happens here in VMEM,
+    before the contraction ever sees the rows."""
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None, None]
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None, None]
+    _paged_decode_inner(i, t, pos_ref, idx_ref, msk_ref, q_ref, k, v,
+                        o_ref, m_ref, l_ref, acc_ref, scale=scale,
+                        block_size=block_size, grp=grp, num_slots=num_slots)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "block_size", "grp", "interpret"))
-def bigbird_paged_decode(q, kc, vc, page_tables, pos, idx, msk, *,
+def bigbird_paged_decode(q, kc, vc, page_tables, pos, idx, msk,
+                         k_scale=None, v_scale=None, *,
                          block_size: int, grp: int, interpret: bool = False):
     """Paged bounded-decode attention (forward-only, serving hot path).
 
@@ -492,34 +518,47 @@ def bigbird_paged_decode(q, kc, vc, page_tables, pos, idx, msk, *,
     page through a flash-style softmax.  The packed key tensor never
     exists, and (unlike the slot-contiguous XLA gather) no (B, L*b) HBM
     re-materialization happens either: pages go HBM->VMEM once.
-    `grp` = Hq // Hkv (GQA): query head h reads kv head h // grp."""
+    `grp` = Hq // Hkv (GQA): query head h reads kv head h // grp.
+
+    `k_scale`/`v_scale` (P, Hkv) f32 — per-(page, head) scales of int8
+    stores; each grid cell prefetches its page's scale row alongside the
+    page and dequantizes inline in VMEM."""
     B, Hq, d = q.shape
     b = block_size
     L = idx.shape[1]
     scale = 1.0 / np.sqrt(d)
     Hkv = kc.shape[1]
 
-    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+    def _slot(i, t, pt, pos, idx, msk):
+        return (i, 0, 0)
+
+    def _page(i, t, pt, pos, idx, msk):
+        return (pt[i, idx[pos[i] // b, t]], 0, 0, 0)
+
+    def _pscale(i, t, pt, pos, idx, msk):
+        return (pt[i, idx[pos[i] // b, t]], 0)
+
+    quant = k_scale is not None
+    kern = _paged_decode_kernel_q if quant else _paged_decode_kernel
+    kernel = functools.partial(kern, scale=scale,
                                block_size=b, grp=grp, num_slots=L)
+    in_specs = [
+        pl.BlockSpec((1, Hq, d), _slot),
+        pl.BlockSpec((1, Hkv, b, d), _page),
+        pl.BlockSpec((1, Hkv, b, d), _page),
+    ]
+    operands = (q, kc, vc)
+    if quant:
+        in_specs += [pl.BlockSpec((1, Hkv), _pscale),
+                     pl.BlockSpec((1, Hkv), _pscale)]
+        operands = (q, kc, vc, k_scale, v_scale)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=(B, L),
-            in_specs=[
-                pl.BlockSpec((1, Hq, d),
-                             lambda i, t, pt, pos, idx, msk: (i, 0, 0)),
-                pl.BlockSpec(
-                    (1, Hkv, b, d),
-                    lambda i, t, pt, pos, idx, msk:
-                        (pt[i, idx[pos[i] // b, t]], 0, 0, 0)),
-                pl.BlockSpec(
-                    (1, Hkv, b, d),
-                    lambda i, t, pt, pos, idx, msk:
-                        (pt[i, idx[pos[i] // b, t]], 0, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, Hq, d),
-                                   lambda i, t, pt, pos, idx, msk: (i, 0, 0)),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, Hq, d), _slot),
             scratch_shapes=[
                 pltpu.VMEM((Hq, 1), jnp.float32),
                 pltpu.VMEM((Hq, 1), jnp.float32),
@@ -528,4 +567,4 @@ def bigbird_paged_decode(q, kc, vc, page_tables, pos, idx, msk, *,
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, d), q.dtype),
         interpret=interpret,
-    )(page_tables, pos, idx, msk, q, kc, vc)
+    )(page_tables, pos, idx, msk, *operands)

@@ -172,12 +172,14 @@ def bigbird_attention_fused(q, k, v, cfg: patterns.BigBirdConfig,
 
 def bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
                               cfg: patterns.BigBirdConfig, layer: int = 0,
-                              interpret=None):
+                              interpret=None, k_scale=None, v_scale=None):
     """Paged bounded-decode read via the scalar-prefetched Pallas kernel.
 
     q (B, Hq, 1, dh); kc/vc (P, Hkv, b, dh) — flat physical page stores;
     page_tables (B, max_pages) int32; pos (B,) int32.  Forward-only (the
     serving decode path never differentiates; DESIGN.md §Paged cache).
+    `k_scale`/`v_scale` (P, Hkv) f32 — int8 stores' per-(page, head)
+    scales, dequantized inline in VMEM after the page gather.
     The XLA two-level gather in models/decode._bigbird_decode_attn_paged
     is the parity baseline (tests/test_kernels.py)."""
     interpret = _auto_interpret(interpret)
@@ -191,14 +193,14 @@ def bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
     msk = jnp.asarray(pat.key_mask.astype(np.int32))
     out = bigbird_attn.bigbird_paged_decode(
         q[:, :, 0], kc, vc, jnp.asarray(page_tables, jnp.int32),
-        jnp.asarray(pos, jnp.int32), idx, msk,
+        jnp.asarray(pos, jnp.int32), idx, msk, k_scale, v_scale,
         block_size=b, grp=grp, interpret=interpret)
     return out[:, :, None].astype(q.dtype)
 
 
 def bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
                                 cfg: patterns.BigBirdConfig, layer: int = 0,
-                                interpret=None):
+                                interpret=None, k_scale=None, v_scale=None):
     """Ragged multi-prompt prefill-chunk read via the Pallas kernel.
 
     q (B, Hq, C, dh) — one chunk of queries per row, row i at positions
@@ -206,6 +208,8 @@ def bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
     stores with the chunk's K/V already written; page_tables (B, max_pages)
     int32; starts (B,) int32, page-aligned and >= g*b (global query rows
     need the dense path — the Engine never routes them here).  Forward-only.
+    `k_scale`/`v_scale` (P, Hkv) f32 — int8 stores' per-(page, head)
+    scales, dequantized inline in VMEM after the page gather.
     The XLA gather in models/decode._ragged_attn_layer is the parity
     baseline (tests/test_kernels.py)."""
     interpret = _auto_interpret(interpret)
@@ -219,7 +223,7 @@ def bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
     msk = jnp.asarray(pat.key_mask.astype(np.int32))
     return ragged_prefill.bigbird_ragged_prefill(
         q, kc, vc, jnp.asarray(page_tables, jnp.int32),
-        jnp.asarray(starts, jnp.int32), idx, msk,
+        jnp.asarray(starts, jnp.int32), idx, msk, k_scale, v_scale,
         block_size=b, grp=grp, interpret=interpret).astype(q.dtype)
 
 

@@ -34,28 +34,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _ragged_prefill_kernel(
-    pt_ref,
-    starts_ref,
-    idx_ref,
-    msk_ref,
-    q_ref,
-    k_ref,
-    v_ref,
-    o_ref,
-    m_ref,
-    l_ref,
-    acc_ref,
-    *,
-    scale: float,
-    block_size: int,
-    grp: int,
-    num_slots: int,
+def _ragged_prefill_inner(
+    i, n, t, starts_ref, idx_ref, msk_ref, q_ref, k, v, o_ref, m_ref, l_ref,
+    acc_ref, *, scale: float, block_size: int, grp: int, num_slots: int,
 ):
-    i = pl.program_id(0)  # batch row
-    n = pl.program_id(1)  # chunk query block
-    t = pl.program_id(2)  # pattern slot
-
+    """Shared flash-softmax body; k/v (Hkv, b, d) arrive already in f32
+    (the int8 wrapper dequantizes them in VMEM before calling in)."""
     @pl.when(t == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
@@ -73,8 +57,6 @@ def _ragged_prefill_kernel(
     valid = live & (kpos <= qpos)  # (b, b)
 
     q = q_ref[0].astype(jnp.float32)  # (Hq, b, d)
-    k = k_ref[0].astype(jnp.float32)  # (Hkv, b, d)
-    v = v_ref[0].astype(jnp.float32)
     hq, bq, d = q.shape
     hkv = k.shape[0]
     qg = q.reshape(hkv, grp * bq, d)
@@ -104,6 +86,38 @@ def _ragged_prefill_kernel(
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
+def _ragged_prefill_kernel(
+    pt_ref, starts_ref, idx_ref, msk_ref, q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref, *, scale, block_size, grp, num_slots,
+):
+    i = pl.program_id(0)  # batch row
+    n = pl.program_id(1)  # chunk query block
+    t = pl.program_id(2)  # pattern slot
+    _ragged_prefill_inner(
+        i, n, t, starts_ref, idx_ref, msk_ref, q_ref,
+        k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
+        o_ref, m_ref, l_ref, acc_ref, scale=scale, block_size=block_size,
+        grp=grp, num_slots=num_slots)
+
+
+def _ragged_prefill_kernel_q(
+    pt_ref, starts_ref, idx_ref, msk_ref, q_ref, k_ref, v_ref, ks_ref,
+    vs_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, block_size, grp,
+    num_slots,
+):
+    """int8-page variant: dequantize the gathered page with its prefetched
+    (1, Hkv) scale row in VMEM before the flash-softmax body."""
+    i = pl.program_id(0)
+    n = pl.program_id(1)
+    t = pl.program_id(2)
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None, None]
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None, None]
+    _ragged_prefill_inner(
+        i, n, t, starts_ref, idx_ref, msk_ref, q_ref, k, v,
+        o_ref, m_ref, l_ref, acc_ref, scale=scale, block_size=block_size,
+        grp=grp, num_slots=num_slots)
+
+
 @functools.partial(jax.jit, static_argnames=("block_size", "grp", "interpret"))
 def bigbird_ragged_prefill(
     q,
@@ -113,6 +127,8 @@ def bigbird_ragged_prefill(
     starts,
     idx,
     msk,
+    k_scale=None,
+    v_scale=None,
     *,
     block_size: int,
     grp: int,
@@ -128,7 +144,10 @@ def bigbird_ragged_prefill(
     the LOGICAL cache length nb = max_pages.
 
     Grid (B, nc, L): cell (i, n, t) is query block `starts[i]//b + n` of
-    row i attending its t-th pattern slot.  `grp` = Hq // Hkv (GQA)."""
+    row i attending its t-th pattern slot.  `grp` = Hq // Hkv (GQA).
+
+    `k_scale`/`v_scale` (P, Hkv) f32 — per-(page, head) scales of int8
+    stores, prefetch-gathered with the page and dequantized in VMEM."""
     B, Hq, C, d = q.shape
     b = block_size
     nc = C // b
@@ -144,19 +163,31 @@ def bigbird_ragged_prefill(
         jq = jnp.minimum(st[i] // b + n, nbp - 1)
         return (pt[i, idx[jq, t]], 0, 0, 0)
 
+    def _pscale(i, n, t, pt, st, idx, msk):
+        jq = jnp.minimum(st[i] // b + n, nbp - 1)
+        return (pt[i, idx[jq, t]], 0)
+
+    quant = k_scale is not None
+    kern = _ragged_prefill_kernel_q if quant else _ragged_prefill_kernel
     kernel = functools.partial(
-        _ragged_prefill_kernel, scale=scale, block_size=b, grp=grp, num_slots=L
+        kern, scale=scale, block_size=b, grp=grp, num_slots=L
     )
+    in_specs = [
+        pl.BlockSpec((1, Hq, b, d), _chunk),
+        pl.BlockSpec((1, Hkv, b, d), _page),
+        pl.BlockSpec((1, Hkv, b, d), _page),
+    ]
+    operands = (q, kc, vc)
+    if quant:
+        in_specs += [pl.BlockSpec((1, Hkv), _pscale),
+                     pl.BlockSpec((1, Hkv), _pscale)]
+        operands = (q, kc, vc, k_scale, v_scale)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=4,
             grid=(B, nc, L),
-            in_specs=[
-                pl.BlockSpec((1, Hq, b, d), _chunk),
-                pl.BlockSpec((1, Hkv, b, d), _page),
-                pl.BlockSpec((1, Hkv, b, d), _page),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, Hq, b, d), _chunk),
             scratch_shapes=[
                 pltpu.VMEM((Hq, b, 1), jnp.float32),
@@ -166,4 +197,4 @@ def bigbird_ragged_prefill(
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, C, d), q.dtype),
         interpret=interpret,
-    )(page_tables, starts, idx, msk, q, kc, vc)
+    )(page_tables, starts, idx, msk, *operands)

@@ -25,6 +25,12 @@ are submitted with staggered arrivals and every token is printed the
 moment it crosses the device boundary, interleaved across requests.  The
 streams are bit-identical to what the synchronous drain would produce
 (DESIGN.md §Async front-end); `--stagger` controls the arrival gap.
+
+`--kv-dtype int8` stores KV pages quantized with per-page scales (~4x
+less KV HBM, lossy — DESIGN.md §Paged cache), and `--host-swap` lets the
+engine swap cold residents' pages to host memory instead of queuing on
+page exhaustion (exact; unsharded engines only).  Both compose with the
+other demo paths (`--host-swap` excludes `--mesh`).
 """
 from __future__ import annotations
 
@@ -66,9 +72,23 @@ def main(argv=None):
                          "tokens as they arrive")
     ap.add_argument("--stagger", type=float, default=0.05, metavar="S",
                     help="arrival gap between streamed requests (seconds)")
+    ap.add_argument("--kv-dtype", default=None, choices=(None, "int8"),
+                    help="quantized KV page stores with per-page scales "
+                         "(default: the model dtype, exact)")
+    ap.add_argument("--host-swap", action="store_true",
+                    help="swap cold residents' KV pages to host memory "
+                         "under page pressure instead of queuing "
+                         "(unsharded engines only)")
     args = ap.parse_args(argv)
     assert sum(map(bool, (args.mesh, args.spec, args.stream))) <= 1, \
         "--mesh, --spec and --stream are separate demo paths; pick one"
+    assert not (args.host_swap and args.mesh), \
+        "--host-swap requires an unsharded engine (no --mesh)"
+    eng_kw = {}
+    if args.kv_dtype:
+        eng_kw["kv_dtype"] = args.kv_dtype
+    if args.host_swap:
+        eng_kw["host_swap"] = True
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -112,7 +132,7 @@ def main(argv=None):
         # interactive async streaming: tokens print as they arrive, with a
         # 2-deep dispatch pipeline keeping the device busy between polls
         engine = Engine(cfg, params, max_len=max_len, capacity=B,
-                        dispatch_depth=2)
+                        dispatch_depth=2, **eng_kw)
         t0 = time.time()
 
         async def consume(i, sess):
@@ -158,7 +178,8 @@ def main(argv=None):
             dparams = M.init(dcfg, jax.random.PRNGKey(args.seed + 1))
             spec = SpecConfig(k=args.spec, provider="model",
                               draft_cfg=dcfg, draft_params=dparams)
-        engine = Engine(cfg, params, max_len=max_len, capacity=B, spec=spec)
+        engine = Engine(cfg, params, max_len=max_len, capacity=B, spec=spec,
+                        **eng_kw)
         for i in range(B):
             engine.submit(Request(prompt=np.asarray(prompt[i]),
                                   max_new_tokens=gen, sampling=sampling))
@@ -180,7 +201,8 @@ def main(argv=None):
     if args.mesh:
         from repro.serve import mesh as Mx
         mesh = Mx.parse_mesh(args.mesh)
-        engine = Engine(cfg, params, max_len=max_len, capacity=B, mesh=mesh)
+        engine = Engine(cfg, params, max_len=max_len, capacity=B, mesh=mesh,
+                        **eng_kw)
         st = engine.stats()
         print(f"[serve] mesh {args.mesh}: {st.data_shards} data shard(s) x "
               f"{st.pages_per_shard} pages, "
@@ -197,7 +219,7 @@ def main(argv=None):
         print("[serve] sample:", results[0].tokens[:16])
         return jnp.asarray([r.tokens for r in results])
 
-    engine = Engine(cfg, params, max_len=max_len, capacity=B)
+    engine = Engine(cfg, params, max_len=max_len, capacity=B, **eng_kw)
 
     t0 = time.time()
     out = engine.generate([jnp.asarray(p) for p in prompt], gen,

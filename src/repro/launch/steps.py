@@ -28,7 +28,12 @@ REPL = PartitionSpec()
 # train
 # --------------------------------------------------------------------------
 
-def make_train_step(cfg: M.ModelConfig, opt: Opt.Optimizer, microbatches: int = 1):
+def make_train_step(cfg: M.ModelConfig, opt: Opt.Optimizer, microbatches: int = 1,
+                    grad_sync=None):
+    """`grad_sync(grads, err) -> (synced, new_err)` hooks a cross-pod
+    gradient sync (optim/compression.compressed_grad_sync) between the
+    backward pass and the optimizer; the error-feedback residual rides in
+    `state["grad_err"]` (same tree as params)."""
     def loss_of(params, batch):
         return M.loss_fn(params, cfg, batch)
 
@@ -51,8 +56,13 @@ def make_train_step(cfg: M.ModelConfig, opt: Opt.Optimizer, microbatches: int = 
             loss = loss / microbatches
         else:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        new_err = None
+        if grad_sync is not None:
+            grads, new_err = grad_sync(grads, state["grad_err"])
         new_params, new_opt, metrics = opt.update(grads, opt_state, params, step)
         new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        if new_err is not None:
+            new_state["grad_err"] = new_err
         metrics = dict(metrics, loss=loss)
         return new_state, metrics
 

@@ -45,6 +45,10 @@ def main(argv=None):
                     help="sparse-attention implementation (pallas = fused "
                          "kernels with custom_vjp backward, the default)")
     ap.add_argument("--mlm", action="store_true", default=None)
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 error-feedback gradient sync over a pod "
+                         "axis spanning all local devices "
+                         "(optim/compression.py)")
     ap.add_argument("--fail-at", type=int, default=None,
                     help="simulate a failure at this step (FT test)")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,8 +65,19 @@ def main(argv=None):
                            schedule=configs.schedule_for(args.arch),
                            peak_lr=args.lr, warmup=args.warmup,
                            total=args.steps)
+    grad_sync = None
+    if args.grad_compress:
+        from jax.sharding import Mesh, PartitionSpec
+        from repro.optim import compression as Comp
+        pod_mesh = Mesh(np.array(jax.devices()), ("pod",))
+
+        def grad_sync(grads, err):
+            ps = jax.tree.map(lambda _: PartitionSpec(), grads)
+            return Comp.compressed_grad_sync(grads, err, pod_mesh, ps,
+                                             axis="pod")
     train_step = jax.jit(S.make_train_step(cfg, opt,
-                                           microbatches=args.microbatches),
+                                           microbatches=args.microbatches,
+                                           grad_sync=grad_sync),
                          donate_argnums=(0,))
 
     data = SyntheticLM(DataConfig(
@@ -78,6 +93,9 @@ def main(argv=None):
         params = M.init(cfg, jax.random.PRNGKey(args.seed))
         state = {"params": params, "opt": opt.init(params),
                  "step": jnp.zeros((), jnp.int32)}
+    if args.grad_compress and "grad_err" not in state:
+        from repro.optim import compression as Comp
+        state["grad_err"] = Comp.init_error_state(state["params"])
 
     nparams = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state["params"]))
     print(f"[train] arch={args.arch} params={nparams/1e6:.1f}M "

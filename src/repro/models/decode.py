@@ -20,6 +20,19 @@ bounded-decode gather becomes a two-level lookup: pattern block -> page
 table -> physical page.  `decode_step(..., page_tables=)` and
 `prefill_chunk` are the paged entry points; recurrent-state leaves keep
 their per-slot `(B, ...)` layout (they are O(1) per slot already).
+
+Quantized pages (`kv_dtype=int8`): the K/V stores become int8 with one f32
+scale per (page, kv head) in sibling leaves `ks`/`vs` `(num_pages, Hkv)`.
+Writers quantize whole pages (absmax/127 per page+head, clamped); readers
+dequantize right after the page gather, in f32, before any contraction.
+Single-token decode/verify writes read-modify-requantize the whole page
+with a MONOTONE scale (max of old scale and the new token's), so already
+written rows requantize exactly whenever the scale is unchanged; the first
+row of a page (offset 0) resets the page, making its int8 content a pure
+function of the tokens written since mapping — the property prefix-page
+content-addressing relies on.  Quantization is lossy: chunked == one-shot
+and verify == sequential contracts hold only approximately under int8 (the
+serving bench gates an NLL delta instead of bit equality).
 """
 from __future__ import annotations
 
@@ -33,6 +46,10 @@ from repro.models import layers as L
 from repro.models import model as M
 
 F32 = jnp.float32
+
+# Per-(page, head) quantization scales never go below this: a page of exact
+# zeros must still dequantize to exact zeros with a finite scale.
+INT8_SCALE_EPS = 1e-8
 
 
 # --------------------------------------------------------------------------
@@ -52,14 +69,21 @@ def page_size_for(cfg: M.ModelConfig) -> int:
 
 
 def _layer_cache_shapes(cfg: M.ModelConfig, ls: M.LayerSpec, B, max_len,
-                        enc_len=0, num_pages=None):
+                        enc_len=0, num_pages=None, kv_dtype=None):
     d, dh, hkv = cfg.d_model, cfg.hd, cfg.num_kv_heads
     if ls.kind == "attn":
         if num_pages is not None:
             assert cfg.kind != "encdec", "paged cache is decoder-only"
             b = page_size_for(cfg)
-            return {"k": ((num_pages, hkv, b, dh), cfg.dtype),
-                    "v": ((num_pages, hkv, b, dh), cfg.dtype)}
+            dt = cfg.dtype if kv_dtype is None else jnp.dtype(kv_dtype)
+            c = {"k": ((num_pages, hkv, b, dh), dt),
+                 "v": ((num_pages, hkv, b, dh), dt)}
+            if dt == jnp.int8:
+                # one f32 scale per (page, kv head); sibling leaves so the
+                # pages axis shards identically to the stores they scale
+                c["ks"] = ((num_pages, hkv), F32)
+                c["vs"] = ((num_pages, hkv), F32)
+            return c
         c = {"k": ((B, hkv, max_len, dh), cfg.dtype),
              "v": ((B, hkv, max_len, dh), cfg.dtype)}
         if cfg.kind == "encdec":
@@ -79,13 +103,16 @@ def _layer_cache_shapes(cfg: M.ModelConfig, ls: M.LayerSpec, B, max_len,
 
 
 def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True,
-               num_pages=None):
+               num_pages=None, kv_dtype=None):
     """Cache tree of ShapeDtypeStructs (abstract) or zeros (concrete).
 
     ``num_pages`` switches the attention K/V leaves to the paged layout —
     one flat `(num_pages, Hkv, page_size, dh)` physical store (no batch
     dim: pages are pool-global and mapped per request by a page table).
-    Recurrent-state leaves keep the per-slot `(B, ...)` layout."""
+    Recurrent-state leaves keep the per-slot `(B, ...)` layout.
+
+    ``kv_dtype`` overrides the paged stores' dtype; `int8` additionally
+    adds the per-(page, head) f32 scale leaves `ks`/`vs`."""
     make = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
            (lambda s, dt: jnp.zeros(s, dt))
     pattern, repeats = cfg.layer_pattern, cfg.repeats
@@ -94,20 +121,20 @@ def cache_spec(cfg: M.ModelConfig, B, max_len, enc_len=0, abstract=True,
     if scanned:
         for i, ls in enumerate(pattern):
             shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len,
-                                         num_pages)
+                                         num_pages, kv_dtype)
             out[f"p{i}"] = {k: make((repeats,) + s, dt)
                             for k, (s, dt) in shapes.items()}
     else:
         for i in range(cfg.num_layers):
             ls = pattern[i % len(pattern)]
             shapes = _layer_cache_shapes(cfg, ls, B, max_len, enc_len,
-                                         num_pages)
+                                         num_pages, kv_dtype)
             out[f"layer{i}"] = {k: make(s, dt) for k, (s, dt) in shapes.items()}
     return out
 
 
 def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
-                       num_pages=None):
+                       num_pages=None, kv_dtype=None):
     """Logical-axis tree matching cache_spec (for the sharding engine)."""
     paged_kv = num_pages is not None
 
@@ -119,6 +146,10 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
                   else ("batch", "kv_heads", "seq", None)),
             "v": (("pages", "kv_heads", None, None) if paged_kv
                   else ("batch", "kv_heads", "seq", None)),
+            # int8 page scales follow their stores: pages -> data,
+            # kv heads -> model
+            "ks": ("pages", "kv_heads"),
+            "vs": ("pages", "kv_heads"),
             "ck": ("batch", "kv_heads", "seq", None),
             "cv": ("batch", "kv_heads", "seq", None),
             "h": ("batch", "mlp", None),
@@ -130,7 +161,7 @@ def cache_logical_axes(cfg: M.ModelConfig, B, max_len, enc_len=0,
         return (("layers",) + base) if stacked else base
 
     spec = cache_spec(cfg, B, max_len, enc_len, abstract=True,
-                      num_pages=num_pages)
+                      num_pages=num_pages, kv_dtype=kv_dtype)
     scanned = cfg.scan_layers and cfg.repeats > 1
     return {grp: {k: axes_for(k, v.ndim, scanned) for k, v in leaves.items()}
             for grp, leaves in spec.items()}
@@ -223,17 +254,50 @@ def _bigbird_decode_attn(q, kc, vc, pos, bb: patterns.BigBirdConfig, layer):
     return out.reshape(B, Hq, 1, dh).astype(q.dtype)
 
 
-def _paged_gather(kc, page_tables, blocks):
+def _paged_gather(kc, page_tables, blocks, scale=None):
     """Two-level gather: logical blocks -> physical pages -> key rows.
 
     kc (P, H, b, dh) physical page store; page_tables (B, max_pages) int32;
     blocks (B, n) logical block ids.  Returns (B, H, n*b, dh) laid out in
     the same slot-major order as the contiguous gather, so downstream math
-    is bit-identical to the slot-contiguous path."""
+    is bit-identical to the slot-contiguous path.
+
+    `scale` (P, H) — int8 stores' per-(page, head) scales: gathered through
+    the same table and multiplied in right after the page gather (the f32
+    dequant happens before any contraction touches the rows)."""
     phys = jnp.take_along_axis(page_tables, blocks, axis=1)       # (B, n)
     g = kc[phys]                                         # (B, n, H, b, dh)
+    if scale is not None:
+        g = g.astype(F32) * scale[phys][..., None, None]
     B, n, H, b, dh = g.shape
     return g.transpose(0, 2, 1, 3, 4).reshape(B, H, n * b, dh)
+
+
+def _quantize_pages(x):
+    """Quantize page blocks x (..., b, dh) f32 -> (int8 blocks, f32 scales).
+
+    Scale is absmax over the page's (b, dh) rows / 127 per leading index
+    (page, head), clamped to INT8_SCALE_EPS so all-zero pages stay exact."""
+    x = x.astype(F32)
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=(-2, -1)) / 127.0,
+                    INT8_SCALE_EPS)
+    q = jnp.clip(jnp.round(x / s[..., None, None]), -127, 127) \
+        .astype(jnp.int8)
+    return q, s
+
+
+def _scatter_pages(c, key, phys_w, blocks):
+    """Scatter whole page blocks into the (possibly quantized) store `key`.
+
+    c — layer cache dict; phys_w (B, nc) physical page rows; blocks
+    (B, nc, H, b, dh).  Returns the updated leaves as a dict ({key} or
+    {key, key+"s"} when the store is int8-paged)."""
+    store = c[key]
+    if key + "s" in c:
+        q, s = _quantize_pages(blocks)
+        return {key: store.at[phys_w].set(q.astype(store.dtype)),
+                key + "s": c[key + "s"].at[phys_w].set(s)}
+    return {key: store.at[phys_w].set(blocks.astype(store.dtype))}
 
 
 def _paged_write_token(kc, k_new, page_tables, pos):
@@ -247,27 +311,59 @@ def _paged_write_token(kc, k_new, page_tables, pos):
     return kc.at[pg, :, pos % b].set(k_new.astype(kc.dtype))
 
 
+def _quant_token_write(kc, ks, k_new, pg, off, *, drop=False):
+    """Single-token write into an int8 page: read-modify-requantize.
+
+    kc (P, H, b, dh) int8; ks (P, H) f32; k_new (B, H, dh); pg (B,)
+    physical pages (== P for dropped writes when `drop`); off (B,) row
+    offset inside the page.  The page rescales MONOTONICALLY —
+    `new_scale = max(old_scale, token_absmax/127)` — so previously written
+    rows requantize exactly whenever the scale is unchanged.  `off == 0`
+    resets the page (a page's first write always lands at row 0: decode
+    maps a fresh page exactly when pos crosses a block boundary, and
+    rollback never leaves live rows above the write position), which makes
+    the int8 bytes a pure function of the tokens written since mapping —
+    stale content of a recycled physical page cannot leak into scales."""
+    P, _, b, _ = kc.shape
+    B = pg.shape[0]
+    safe = jnp.clip(pg, 0, P - 1)
+    old_s = jnp.where((off == 0)[:, None], 0.0, ks[safe])        # (B, H)
+    page = kc[safe].astype(F32) * old_s[..., None, None]         # (B,H,b,dh)
+    row = jax.lax.broadcasted_iota(jnp.int32, (1, 1, b, 1), 2) \
+        == off[:, None, None, None]
+    page = jnp.where(row, k_new.astype(F32)[:, :, None, :], page)
+    tok_s = jnp.max(jnp.abs(k_new.astype(F32)), axis=-1) / 127.0  # (B, H)
+    new_s = jnp.maximum(jnp.maximum(old_s, tok_s), INT8_SCALE_EPS)
+    q = jnp.clip(jnp.round(page / new_s[..., None, None]), -127, 127) \
+        .astype(kc.dtype)
+    mode = "drop" if drop else "promise_in_bounds"
+    return kc.at[pg].set(q, mode=mode), ks.at[pg].set(new_s, mode=mode)
+
+
 def _bigbird_decode_attn_paged(q, kc, vc, page_tables, pos,
-                               bb: patterns.BigBirdConfig, layer, impl):
+                               bb: patterns.BigBirdConfig, layer, impl,
+                               k_scale=None, v_scale=None):
     """Bounded decode over the paged cache: pattern blocks -> page table ->
     physical pages.  XLA-gather baseline; `impl="pallas"` dispatches to the
-    scalar-prefetched Pallas paged-decode kernel (forward-only)."""
+    scalar-prefetched Pallas paged-decode kernel (forward-only).
+    `k_scale`/`v_scale` (P, Hkv) dequantize int8 stores after the gather."""
     if impl == "pallas":
         from repro.kernels import ops                      # lazy import
         return ops.bigbird_paged_decode_attn(q, kc, vc, page_tables, pos,
-                                             bb, layer=layer)
+                                             bb, layer=layer,
+                                             k_scale=k_scale, v_scale=v_scale)
     B, Hq, _, dh = q.shape
     b = bb.block_size
     S = page_tables.shape[1] * b
     Hkv = kc.shape[1]
     grp = Hq // Hkv
     pat = patterns.build_pattern(bb, S, layer=layer)
-    idx = jnp.asarray(pat.key_blocks)          # (nb, Ls)
+    idx = jnp.asarray(pat.key_blocks)          # (nb, Lslots)
     msk = jnp.asarray(pat.key_mask)
     jq = pos // b                              # (B,)
     row_idx, row_msk = idx[jq], msk[jq]        # (B, Ls)
-    kg = _paged_gather(kc, page_tables, row_idx)
-    vg = _paged_gather(vc, page_tables, row_idx)
+    kg = _paged_gather(kc, page_tables, row_idx, k_scale)
+    vg = _paged_gather(vc, page_tables, row_idx, v_scale)
     flat = (row_idx[..., None] * b + jnp.arange(b)).reshape(B, -1)   # (B,Ls*b)
     valid = jnp.repeat(row_msk, b, axis=-1) & (flat <= pos[:, None])
     qf = q.reshape(B, Hkv, grp, 1, dh)
@@ -280,15 +376,16 @@ def _bigbird_decode_attn_paged(q, kc, vc, page_tables, pos,
     return out.reshape(B, Hq, 1, dh).astype(q.dtype)
 
 
-def _full_decode_attn_paged(q, kc, vc, page_tables, pos):
+def _full_decode_attn_paged(q, kc, vc, page_tables, pos,
+                            k_scale=None, v_scale=None):
     """Full-fallback read over the paged cache: gather every logical block
     in order, then run the standard masked dense read (bit-identical to the
     slot-contiguous fallback)."""
     B = q.shape[0]
     n = page_tables.shape[1]
     blocks = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (B, n))
-    kg = _paged_gather(kc, page_tables, blocks)
-    vg = _paged_gather(vc, page_tables, blocks)
+    kg = _paged_gather(kc, page_tables, blocks, k_scale)
+    vg = _paged_gather(vc, page_tables, blocks, v_scale)
     return _full_decode_attn(q, kg, vg, pos)
 
 
@@ -316,8 +413,18 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         vc = write(c["v"], v.astype(c["v"].dtype), pos)
         S = kc.shape[2]
     else:
-        kc = _paged_write_token(c["k"], k[:, :, 0], page_tables, pos)
-        vc = _paged_write_token(c["v"], v[:, :, 0], page_tables, pos)
+        if "ks" in c:                          # int8 pages: RMW-requantize
+            b_pg = c["k"].shape[-2]
+            pg = jnp.take_along_axis(page_tables, (pos // b_pg)[:, None],
+                                     axis=1)[:, 0]
+            kc, ks = _quant_token_write(c["k"], c["ks"], k[:, :, 0], pg,
+                                        pos % b_pg)
+            vc, vs = _quant_token_write(c["v"], c["vs"], v[:, :, 0], pg,
+                                        pos % b_pg)
+        else:
+            kc = _paged_write_token(c["k"], k[:, :, 0], page_tables, pos)
+            vc = _paged_write_token(c["v"], v[:, :, 0], page_tables, pos)
+            ks = vs = None
         S = page_tables.shape[1] * kc.shape[2]
     use_bb = spec.kind in ("bigbird", "window")
     if use_bb:
@@ -329,9 +436,9 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if page_tables is not None:
         if use_bb:
             o = _bigbird_decode_attn_paged(q, kc, vc, page_tables, pos, bb,
-                                           layer, spec.impl)
+                                           layer, spec.impl, ks, vs)
         else:
-            o = _full_decode_attn_paged(q, kc, vc, page_tables, pos)
+            o = _full_decode_attn_paged(q, kc, vc, page_tables, pos, ks, vs)
     elif use_bb:
         o = _bigbird_decode_attn(q, kc, vc, pos, bb, layer)
     else:
@@ -342,6 +449,8 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     x = x + o @ pm["wo"]
     new_c = dict(c)
     new_c["k"], new_c["v"] = kc, vc
+    if "ks" in c:
+        new_c["ks"], new_c["vs"] = ks, vs
 
     if cfg.kind == "encdec":                      # cross-attention from cache
         hc = L.rms_norm(p["cross"]["norm"], x, cfg.norm_eps)
@@ -493,8 +602,10 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     wt = page_tables if write_tables is None else write_tables
     phys_w = wt[:, qb0:qb0 + nc]                                 # (B, nc)
     as_blocks = lambda t: t.reshape(B, hkv, nc, b, dh).transpose(0, 2, 1, 3, 4)
-    kc = c["k"].at[phys_w].set(as_blocks(k).astype(c["k"].dtype))
-    vc = c["v"].at[phys_w].set(as_blocks(v).astype(c["v"].dtype))
+    upd = {**_scatter_pages(c, "k", phys_w, as_blocks(k)),
+           **_scatter_pages(c, "v", phys_w, as_blocks(v))}
+    kc, vc = upd["k"], upd["v"]
+    ks, vs = upd.get("ks"), upd.get("vs")
 
     # the same fallback rule core.attention() applies at the one-shot
     # bucket: pattern larger than the (padded) prompt -> exact full attn
@@ -515,10 +626,10 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         Ls = rows.shape[1]
         blocks = jnp.broadcast_to(
             jnp.asarray(rows.reshape(-1), jnp.int32)[None], (B, nc * Ls))
-        kg = _paged_gather(kc, page_tables, blocks).reshape(B, hkv, nc,
-                                                           Ls * b, dh)
-        vg = _paged_gather(vc, page_tables, blocks).reshape(B, hkv, nc,
-                                                           Ls * b, dh)
+        kg = _paged_gather(kc, page_tables, blocks, ks).reshape(B, hkv, nc,
+                                                                Ls * b, dh)
+        vg = _paged_gather(vc, page_tables, blocks, vs).reshape(B, hkv, nc,
+                                                                Ls * b, dh)
         flat = (rows[..., None] * b + np.arange(b)).reshape(nc, Ls * b)
         qpos = (start + np.arange(C)).reshape(nc, b)
         valid = (np.repeat(rmsk, b, axis=1)[:, None, :]
@@ -537,8 +648,8 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
             ngb = min(gb - qb0, nc)
             pre = jnp.broadcast_to(
                 jnp.arange(end // b, dtype=jnp.int32)[None], (B, end // b))
-            ka = _paged_gather(kc, page_tables, pre)             # (B,H,end,dh)
-            va = _paged_gather(vc, page_tables, pre)
+            ka = _paged_gather(kc, page_tables, pre, ks)         # (B,H,end,dh)
+            va = _paged_gather(vc, page_tables, pre, vs)
             qg = q[:, :, :ngb * b].reshape(B, hkv, grp, ngb * b, dh)
             sg = jnp.einsum("bhgqd,bhkd->bhgqk", qg, ka,
                             preferred_element_type=F32) / np.sqrt(dh)
@@ -553,8 +664,8 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         # pattern does not fit the prompt bucket: exact full causal attention
         pre = jnp.broadcast_to(
             jnp.arange(end // b, dtype=jnp.int32)[None], (B, end // b))
-        ka = _paged_gather(kc, page_tables, pre)
-        va = _paged_gather(vc, page_tables, pre)
+        ka = _paged_gather(kc, page_tables, pre, ks)
+        va = _paged_gather(vc, page_tables, pre, vs)
         qf = q.reshape(B, hkv, grp, C, dh)
         s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, ka,
                        preferred_element_type=F32) / np.sqrt(dh)
@@ -574,7 +685,10 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
             x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
         else:
             x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
-    return x, {"k": kc, "v": vc}
+    new_c = {"k": kc, "v": vc}
+    if ks is not None:
+        new_c["ks"], new_c["vs"] = ks, vs
+    return x, new_c
 
 
 def prefill_chunk(params, cfg: M.ModelConfig, cache, tokens, page_tables,
@@ -691,8 +805,10 @@ def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     qb = starts[:, None] // b + jnp.arange(nc)            # (B, nc)
     phys_w = jnp.take_along_axis(wt, qb, axis=1)          # (B, nc)
     as_blocks = lambda t: t.reshape(B, hkv, nc, b, dh).transpose(0, 2, 1, 3, 4)
-    kc = c["k"].at[phys_w].set(as_blocks(k).astype(c["k"].dtype))
-    vc = c["v"].at[phys_w].set(as_blocks(v).astype(c["v"].dtype))
+    upd = {**_scatter_pages(c, "k", phys_w, as_blocks(k)),
+           **_scatter_pages(c, "v", phys_w, as_blocks(v))}
+    kc, vc = upd["k"], upd["v"]
+    ks, vs = upd.get("ks"), upd.get("vs")
 
     # the static chunk's fallback rule must resolve to the pattern path:
     # a full-attention layer reads a start-dependent dense prefix, which
@@ -706,7 +822,8 @@ def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if spec.impl == "pallas":
         from repro.kernels import ops                      # lazy import
         o = ops.bigbird_ragged_prefill_attn(q, kc, vc, page_tables, starts,
-                                            bb, layer=layer)
+                                            bb, layer=layer,
+                                            k_scale=ks, v_scale=vs)
     else:
         S_log = max_pages * b
         pat = patterns.build_pattern(bb, S_log, layer=layer)
@@ -715,9 +832,9 @@ def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         rows = idx[qb]                                    # (B, nc, Ls)
         rmsk = msk[qb]
         Ls = rows.shape[-1]
-        kg = _paged_gather(kc, page_tables, rows.reshape(B, nc * Ls)) \
+        kg = _paged_gather(kc, page_tables, rows.reshape(B, nc * Ls), ks) \
             .reshape(B, hkv, nc, Ls * b, dh)
-        vg = _paged_gather(vc, page_tables, rows.reshape(B, nc * Ls)) \
+        vg = _paged_gather(vc, page_tables, rows.reshape(B, nc * Ls), vs) \
             .reshape(B, hkv, nc, Ls * b, dh)
         flat = (rows[..., None] * b + jnp.arange(b)).reshape(B, nc, Ls * b)
         qpos = positions.reshape(B, nc, b)
@@ -739,7 +856,10 @@ def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
             x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
         else:
             x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
-    return x, {"k": kc, "v": vc}
+    new_c = {"k": kc, "v": vc}
+    if ks is not None:
+        new_c["ks"], new_c["vs"] = ks, vs
+    return x, new_c
 
 
 def prefill_ragged(params, cfg: M.ModelConfig, cache, tokens, page_tables,
@@ -855,10 +975,23 @@ def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     ok = (jnp.arange(T)[None] <= n_valid[:, None]) & (positions < S)
     pg = jnp.where(ok, pg, P)              # out of bounds -> dropped
     off = positions % b
-    kc = c["k"].at[pg, :, off].set(
-        k.transpose(0, 2, 1, 3).astype(c["k"].dtype), mode="drop")
-    vc = c["v"].at[pg, :, off].set(
-        v.transpose(0, 2, 1, 3).astype(c["v"].dtype), mode="drop")
+    if "ks" in c:
+        # int8 pages: candidates land one by one (T is small and static) so
+        # several candidates sharing a page requantize it cumulatively —
+        # the same RMW discipline sequential decode applies
+        kc, ks = c["k"], c["ks"]
+        vc, vs = c["v"], c["vs"]
+        for t in range(T):
+            kc, ks = _quant_token_write(kc, ks, k[:, :, t], pg[:, t],
+                                        off[:, t], drop=True)
+            vc, vs = _quant_token_write(vc, vs, v[:, :, t], pg[:, t],
+                                        off[:, t], drop=True)
+    else:
+        ks = vs = None
+        kc = c["k"].at[pg, :, off].set(
+            k.transpose(0, 2, 1, 3).astype(c["k"].dtype), mode="drop")
+        vc = c["v"].at[pg, :, off].set(
+            v.transpose(0, 2, 1, 3).astype(c["v"].dtype), mode="drop")
 
     # the same bigbird-vs-full decision decode_step makes at the logical
     # cache length (the verify == sequential-decode graph key)
@@ -877,9 +1010,9 @@ def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
         jq = positions // b                            # (B, T), OOB clamps
         row_idx, row_msk = idx[jq], msk[jq]            # (B, T, Ls)
         Ls = row_idx.shape[-1]
-        kg = _paged_gather(kc, page_tables, row_idx.reshape(B, T * Ls)) \
+        kg = _paged_gather(kc, page_tables, row_idx.reshape(B, T * Ls), ks) \
             .reshape(B, hkv, T, Ls * b, dh)
-        vg = _paged_gather(vc, page_tables, row_idx.reshape(B, T * Ls)) \
+        vg = _paged_gather(vc, page_tables, row_idx.reshape(B, T * Ls), vs) \
             .reshape(B, hkv, T, Ls * b, dh)
         flat = (row_idx[..., None] * b
                 + jnp.arange(b)).reshape(B, T, Ls * b)
@@ -895,8 +1028,8 @@ def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     else:
         blocks = jnp.broadcast_to(
             jnp.arange(max_pages, dtype=jnp.int32)[None], (B, max_pages))
-        ka = _paged_gather(kc, page_tables, blocks)    # (B, H, S, dh)
-        va = _paged_gather(vc, page_tables, blocks)
+        ka = _paged_gather(kc, page_tables, blocks, ks)    # (B, H, S, dh)
+        va = _paged_gather(vc, page_tables, blocks, vs)
         qf = q.reshape(B, hkv, grp, T, dh)
         s = jnp.einsum("bhgtd,bhsd->bhgts", qf, ka,
                        preferred_element_type=F32) / np.sqrt(dh)
@@ -912,6 +1045,8 @@ def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     x = x + o @ pm["wo"]
     new_c = dict(c)
     new_c["k"], new_c["v"] = kc, vc
+    if ks is not None:
+        new_c["ks"], new_c["vs"] = ks, vs
     if "ffn" in p:
         if cfg.layer_pattern[layer % cfg.period].moe:
             x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)

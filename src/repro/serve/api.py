@@ -77,6 +77,9 @@ class PoolStats:
     pages_in_use_per_shard: List[int] = dataclasses.field(default_factory=list)
     peak_pages_per_shard: List[int] = dataclasses.field(default_factory=list)
     kv_bytes_per_shard: int = 0            # physical KV bytes one shard holds
+    pages_host: int = 0                    # pages parked in the host swap tier
+    swap_in: int = 0                       # cumulative swap-in events
+    swap_out: int = 0                      # cumulative swap-out events
 
 
 @dataclasses.dataclass

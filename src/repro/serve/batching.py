@@ -37,6 +37,27 @@ Recurrent-state leaves (mamba `h/conv`, rwkv `tm/s/cm`) are O(1) per
 request and keep the per-slot `(capacity, ...)` layout inside the same
 tree.  Cache layout note: scanned configs (`cfg.scan_layers`, repeats >
 1) prepend a repeats dim to every leaf; writers handle both.
+
+Quantized pages (`kv_dtype=int8`): the stores carry int8 pages plus f32
+scale leaves `ks`/`vs` (models/decode.cache_spec) — the pool's writers
+quantize whole pages on the prefill scatter and copy/swap the scale rows
+together with their pages.  Every page's int8 bytes are a pure function
+of the graph and the tokens written since mapping, so content-addressed
+prefix sharing is exactly as sound as in the f32 layout.
+
+Host-memory swap tier (`host_swap=True`): `swap_out(slot)` copies ALL of
+a resident slot's mapped pages (k/v and scale rows) to a host buffer,
+releases the device pages like `evict` (shared prefix pages merely
+decref — they leave the device only when every sharer is gone), and
+parks the slot in phase "swapped" — it keeps its slot index but drops
+out of the decode batch (dump-page table row, pinned position).
+`swap_in` reattaches still-resident shared prefix pages by
+content-address (bitwise identical by construction), scatters the host
+copies back into freshly allocated pages for the rest, and restores the
+reservation — a device->host->device roundtrip of exact bytes, so a
+swapped-and-resumed request's stream is bitwise identical to a
+never-swapped one.  Scheduling (who swaps, who resumes, when) lives in
+the Engine; the pool only provides the mechanism + counters.
 """
 from __future__ import annotations
 
@@ -75,7 +96,7 @@ class SlotState:
     tokens: list               # emitted tokens (host ints)
     prompt_len: int
     admit_step: int            # engine step counter at admission
-    phase: str = "decode"      # "prefill" (chunks pending) | "decode"
+    phase: str = "decode"      # "prefill" | "decode" | "swapped" (host tier)
     prefill_pos: int = 0       # next prompt position to prefill
     pages: list = dataclasses.field(default_factory=list)
     shared_pages: int = 0      # leading pages reused from the prefix index
@@ -85,6 +106,7 @@ class SlotState:
     draft_proposed: int = 0    # speculative draft tokens offered to verify
     draft_accepted: int = 0    # of which the target model accepted
     verify_steps: int = 0      # draft/verify rounds this request ran
+    resume_gen: int = 0        # `generated` at last swap-in (progress gate)
 
 
 class PagePool:
@@ -101,8 +123,10 @@ class PagePool:
     (DESIGN.md §Mesh-parallel serving).  D = 1 is exactly the old pool."""
 
     def __init__(self, cfg, capacity: int, max_len: int,
-                 num_pages: Optional[int] = None, data_shards: int = 1):
+                 num_pages: Optional[int] = None, data_shards: int = 1,
+                 kv_dtype=None):
         self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
+        self.kv_dtype = None if kv_dtype is None else jnp.dtype(kv_dtype)
         self.page_size = Dec.page_size_for(cfg)
         self.max_pages = -(-max_len // self.page_size)
         self._paged = any(ls.kind == "attn" for ls in cfg.layer_pattern)
@@ -122,7 +146,8 @@ class PagePool:
         assert self.pages_per_shard >= 2, \
             "each shard needs its dump page + 1 real page"
         self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False,
-                                    num_pages=self.num_pages)
+                                    num_pages=self.num_pages,
+                                    kv_dtype=self.kv_dtype)
         self._scanned = cfg.scan_layers and cfg.repeats > 1
         self.page_tables = np.zeros((capacity, self.max_pages), np.int32)
         for slot in range(capacity):
@@ -153,6 +178,13 @@ class PagePool:
              if ls.kind == "attn"
              and cfg.attn_spec(ls).kind in ("bigbird", "window")),
             default=0)
+        # host-memory swap tier: slot -> {"blob": host page copies (logical
+        # page order), "n": page count, "reserved": stashed reservation}.
+        # Dict insertion order is the swap-out order (FIFO resume policy).
+        self._host: dict = {}
+        self.swap_out_count = 0
+        self.swap_in_count = 0
+        self.pages_host_peak = 0
         # stats
         self.peak_pages_in_use = 0
         self.peak_pages_per_shard = [0] * data_shards
@@ -161,6 +193,9 @@ class PagePool:
         self.requests_admitted = 0
         self._writer = jax.jit(self._write_impl, donate_argnums=(0,))
         self._copier = jax.jit(self._copy_impl, donate_argnums=(0,))
+        self._page_reader = jax.jit(self._gather_pages_impl)
+        self._page_scatter = jax.jit(self._scatter_pages_impl,
+                                     donate_argnums=(0,))
 
     # -- shard geometry ----------------------------------------------------
 
@@ -199,6 +234,12 @@ class PagePool:
         return [i for i, s in enumerate(self.slots)
                 if s is not None and s.phase == "prefill"]
 
+    def swapped_slots(self):
+        """Swapped-out resident slots, in swap-out (FIFO resume) order."""
+        return [slot for slot in self._host
+                if self.slots[slot] is not None
+                and self.slots[slot].phase == "swapped"]
+
     @property
     def pages_in_use(self) -> int:
         free = sum(len(f) for f in self._free)
@@ -216,6 +257,11 @@ class PagePool:
     def pages_reserved(self) -> int:
         """Pages promised to admitted requests but not yet mapped."""
         return sum(self._reserved)
+
+    @property
+    def pages_host(self) -> int:
+        """Pages currently parked in the host-memory swap tier."""
+        return sum(rec["n"] for rec in self._host.values())
 
     def pages_needed(self, prompt_len: int, max_new: int) -> int:
         """Logical pages a request occupies: prompt + decode writes (the
@@ -357,29 +403,116 @@ class PagePool:
             self._reserved[shard] += 1
             self.page_tables[slot, len(s.pages)] = self.dump_page(slot)
 
+    def _release_page(self, pg: int):
+        """Decref one mapped page; at refcount 0 it leaves the prefix index
+        and returns to its shard's free list."""
+        self.refcount[pg] -= 1
+        assert self.refcount[pg] >= 0
+        if self.refcount[pg] == 0:
+            key = self._page_key.pop(pg, None)
+            if key is not None:
+                copies = self._prefix.get(key)
+                if copies is not None:
+                    copies.discard(pg)
+                    if not copies:
+                        del self._prefix[key]
+            self._free[self.page_shard(pg)].append(pg)
+
     def evict(self, slot: int):
         """Release the slot: decref its mapped pages and forfeit its
         remaining reservation; pages at refcount 0 return to the free list
         (and leave the prefix index — sharing is between co-resident
-        requests only)."""
+        requests only).  A swapped slot's host copies are dropped too."""
         s = self.slots[slot]
         if s is not None:
             self._reserved[self.slot_shard(slot)] -= s.reserved
             s.reserved = 0
             for pg in s.pages:
-                self.refcount[pg] -= 1
-                assert self.refcount[pg] >= 0
-                if self.refcount[pg] == 0:
-                    key = self._page_key.pop(pg, None)
-                    if key is not None:
-                        copies = self._prefix.get(key)
-                        if copies is not None:
-                            copies.discard(pg)
-                            if not copies:
-                                del self._prefix[key]
-                    self._free[self.page_shard(pg)].append(pg)
+                self._release_page(pg)
+        self._host.pop(slot, None)
         self.page_tables[slot, :] = self.dump_page(slot)
         self.slots[slot] = None
+
+    # -- host-memory swap tier ---------------------------------------------
+
+    def swap_out(self, slot: int):
+        """Move ALL of a decoding slot's mapped pages to host memory.
+
+        The device pages are released exactly like `evict` — shared prefix
+        pages only decref, so a co-resident sharer keeps them on device —
+        and the slot's reservation is returned to the pool (stashed in the
+        host record; `swap_in` takes it back).  The slot keeps its index in
+        phase "swapped": excluded from the decode batch but still owned, so
+        its request id, sampled tokens, and position survive untouched."""
+        s = self.slots[slot]
+        assert s is not None and s.phase == "decode", (slot, s and s.phase)
+        assert slot not in self._host and s.pages, (slot, s and s.pages)
+        shard = self.slot_shard(slot)
+        blob = jax.device_get(self._page_reader(
+            self.cache, jnp.asarray(s.pages, jnp.int32)))
+        self._host[slot] = {"blob": blob, "n": len(s.pages),
+                            "reserved": s.reserved}
+        self._reserved[shard] -= s.reserved
+        s.reserved = 0
+        for pg in s.pages:
+            self._release_page(pg)
+        s.pages = []
+        s.shared_pages = 0
+        s.phase = "swapped"
+        self.page_tables[slot, :] = self.dump_page(slot)
+        self.swap_out_count += 1
+        self.pages_host_peak = max(self.pages_host_peak, self.pages_host)
+
+    def can_resume(self, slot: int, prompt: np.ndarray,
+                   graph_key=None) -> bool:
+        """Whether `swap_in(slot)` would succeed right now: enough free
+        un-reserved pages for the non-shared host pages PLUS the stashed
+        reservation (re-admission must not over-promise the pool)."""
+        rec = self._host[slot]
+        shard = self.slot_shard(slot)
+        shared = min(len(self.lookup_prefix(prompt, graph_key, shard)),
+                     rec["n"])
+        return (self.pages_available(shard)
+                >= rec["n"] - shared + rec["reserved"])
+
+    def swap_in(self, slot: int, prompt: np.ndarray, graph_key=None):
+        """Bring a swapped slot's pages back on device and rejoin decode.
+
+        Leading prefix pages still resident (content-addressed under
+        `prompt` + `graph_key`) are reattached by refcount — bitwise
+        identical to the host copies by construction — and only the rest
+        is scattered back from the host blob, into freshly allocated
+        pages.  The stashed reservation is restored, so the resumed slot
+        is indistinguishable from one that never left."""
+        s = self.slots[slot]
+        assert s is not None and s.phase == "swapped", (slot, s and s.phase)
+        assert self.can_resume(slot, prompt, graph_key), \
+            f"swap_in({slot}) without capacity"
+        rec = self._host.pop(slot)
+        shard = self.slot_shard(slot)
+        shared = self.lookup_prefix(prompt, graph_key, shard)[:rec["n"]]
+        fresh = [self._free[shard].pop()
+                 for _ in range(rec["n"] - len(shared))]
+        pages = shared + fresh
+        for pg in pages:
+            self.refcount[pg] += 1
+        if fresh:
+            sl = (slice(None), slice(len(shared), None)) if self._scanned \
+                else slice(len(shared), None)
+            blob = {g: {k: jnp.asarray(a[sl]) for k, a in lv.items()}
+                    for g, lv in rec["blob"].items()}
+            self.cache = self._page_scatter(
+                self.cache, blob, jnp.asarray(fresh, jnp.int32))
+        s.pages = pages
+        s.shared_pages = len(shared)
+        s.reserved = rec["reserved"]
+        self._reserved[shard] += s.reserved
+        self.page_tables[slot, :] = self.dump_page(slot)
+        self.page_tables[slot, :len(pages)] = pages
+        s.phase = "decode"
+        self.swap_in_count += 1
+        self.register_prefix(slot, s.prompt_len, prompt, graph_key)
+        self._bump_peaks()
 
     # -- copy-on-write guard ----------------------------------------------
 
@@ -412,18 +545,45 @@ class PagePool:
 
     # -- device writers ----------------------------------------------------
 
+    PAGE_LEAVES = ("k", "v", "ks", "vs")   # page-dim-leading store keys
+
     def _copy_impl(self, cache, dst, src):
         out = {}
         for gname, leaves in cache.items():
             ng = {}
             for key, c in leaves.items():
-                if key in ("k", "v") and self._paged:
+                if key in self.PAGE_LEAVES and self._paged:
                     if self._scanned:
                         ng[key] = c.at[:, dst].set(c[:, src])
                     else:
                         ng[key] = c.at[dst].set(c[src])
                 else:
                     ng[key] = c
+            out[gname] = ng
+        return out
+
+    def _gather_pages_impl(self, cache, pages):
+        """Read the page-store rows `pages` of every attn leaf (swap-out)."""
+        out = {}
+        for gname, leaves in cache.items():
+            og = {}
+            for key, c in leaves.items():
+                if key in self.PAGE_LEAVES and self._paged:
+                    og[key] = c[:, pages] if self._scanned else c[pages]
+            out[gname] = og
+        return out
+
+    def _scatter_pages_impl(self, cache, blob, pages):
+        """Write host page copies back into the rows `pages` (swap-in)."""
+        out = {}
+        for gname, leaves in cache.items():
+            ng = dict(leaves)
+            for key, a in blob[gname].items():
+                c = leaves[key]
+                if self._scanned:
+                    ng[key] = c.at[:, pages].set(a.astype(c.dtype))
+                else:
+                    ng[key] = c.at[pages].set(a.astype(c.dtype))
             out[gname] = ng
         return out
 
@@ -434,26 +594,43 @@ class PagePool:
         one: attn K/V (1, Hkv, Sp, dh) with Sp a page multiple; `pages`
         and `blocks` are aligned (m,) int32 vectors — physical page id and
         source block index (prefix-shared pages are excluded by the
-        caller, so shared content is never rewritten)."""
+        caller, so shared content is never rewritten).  Quantized pools
+        (int8 stores) quantize the selected blocks here, with the same
+        absmax/127 per-(page, head) rule as the paged prefill writers, and
+        scatter the scale rows alongside."""
         b = self.page_size
         out = {}
         for gname, leaves in cache.items():
             og, ng = one[gname], {}
             for key, c in leaves.items():
+                if key in ("ks", "vs"):
+                    continue          # written with their int8 pages below
                 o = og[key]
                 if key in ("k", "v"):
                     if self._scanned:      # c (R,P,H,b,d); o (R,1,H,Sp,d)
                         R, _, H, _, d = c.shape
                         blk = o[:, 0].reshape(R, H, -1, b, d) \
                                .transpose(0, 2, 1, 3, 4)       # (R,nb,H,b,d)
-                        ng[key] = c.at[:, pages].set(
-                            blk[:, blocks].astype(c.dtype))
+                        src = blk[:, blocks]
+                        if key + "s" in leaves:
+                            q, sc = Dec._quantize_pages(src)
+                            ng[key] = c.at[:, pages].set(q.astype(c.dtype))
+                            ng[key + "s"] = leaves[key + "s"] \
+                                .at[:, pages].set(sc)
+                        else:
+                            ng[key] = c.at[:, pages].set(src.astype(c.dtype))
                     else:                  # c (P,H,b,d); o (1,H,Sp,d)
                         H, d = c.shape[1], c.shape[3]
                         blk = o[0].reshape(H, -1, b, d) \
                                .transpose(1, 0, 2, 3)          # (nb,H,b,d)
-                        ng[key] = c.at[pages].set(
-                            blk[blocks].astype(c.dtype))
+                        src = blk[blocks]
+                        if key + "s" in leaves:
+                            q, sc = Dec._quantize_pages(src)
+                            ng[key] = c.at[pages].set(q.astype(c.dtype))
+                            ng[key + "s"] = leaves[key + "s"] \
+                                .at[pages].set(sc)
+                        else:
+                            ng[key] = c.at[pages].set(src.astype(c.dtype))
                 else:
                     if self._scanned:      # c (R,cap,...); o (R,1,...)
                         ng[key] = c.at[:, slot].set(o[:, 0].astype(c.dtype))
@@ -525,11 +702,14 @@ class PagePool:
         self.prefix_hits = 0
         self.prefix_pages_shared = 0
         self.requests_admitted = 0
+        self.swap_out_count = 0
+        self.swap_in_count = 0
+        self.pages_host_peak = self.pages_host
 
     def kv_bytes_per_page(self) -> int:
         n = 0
         for leaves in jax.tree.leaves(
-                {g: {k: v for k, v in lv.items() if k in ("k", "v")}
+                {g: {k: v for k, v in lv.items() if k in self.PAGE_LEAVES}
                  for g, lv in self.cache.items()}):
             n += leaves.size * leaves.dtype.itemsize // self.num_pages
         return n

@@ -74,7 +74,8 @@ class Engine:
                  prefill_chunk: Optional[int] = 4, mesh=None,
                  spec: Optional[SpecConfig] = None,
                  ragged_prefill: Optional[bool] = None,
-                 dispatch_depth: int = 1):
+                 dispatch_depth: int = 1, kv_dtype=None,
+                 host_swap: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len or (cfg.dec_len if cfg.kind == "encdec"
@@ -130,15 +131,32 @@ class Engine:
         self._inflight: collections.deque = collections.deque()
         self._pending_finished: List[Result] = []
 
+        # quantized KV pages (kv_dtype=int8: ~4x smaller pages, lossy —
+        # NLL-delta-gated) + host-memory swap tier (exact: swapped streams
+        # are digest-identical).  Default (None/False) is the parity path.
+        self.kv_dtype = None if kv_dtype is None else jnp.dtype(kv_dtype)
+        self._host_swap = bool(host_swap)
+        if self._host_swap and mesh is not None:
+            raise ValueError("host_swap requires an unsharded engine "
+                             "(mesh=None): the swap tier moves whole pages "
+                             "through the host, not shard-local slices")
+        if self._host_swap and cfg.kind != "lm":
+            raise ValueError("host_swap requires the paged slot path "
+                             "(decoder-only LM configs)")
+
         # continuous-batching state (decoder-only LMs; encdec/patch archs
         # serve through generate() and never touch the pool)
         self.pool = (PagePool(cfg, capacity, self.max_len, num_pages,
-                              data_shards=data_shards)
+                              data_shards=data_shards,
+                              kv_dtype=self.kv_dtype)
                      if cfg.kind == "lm" else None)
+        self._score_pool = None        # lazy B=1 pool for Engine.score
+        self._score_fn = None
         if mesh is not None:
             from repro.serve import mesh as Mx
             self._cache_ps = Mx.cache_pspecs(cfg, capacity, self.max_len,
-                                             self.pool.num_pages)
+                                             self.pool.num_pages,
+                                             kv_dtype=self.kv_dtype)
             self.pool.cache = Mx.place_cache(self.pool.cache, mesh,
                                              self._cache_ps)
             self.params = Mx.replicate(params, mesh)
@@ -621,7 +639,9 @@ class Engine:
             pages_in_use_per_shard=[p.pages_in_use_shard(d)
                                     for d in range(p.data_shards)],
             peak_pages_per_shard=list(p.peak_pages_per_shard),
-            kv_bytes_per_shard=p.pages_per_shard * p.kv_bytes_per_page())
+            kv_bytes_per_shard=p.pages_per_shard * p.kv_bytes_per_page(),
+            pages_host=p.pages_host, swap_in=p.swap_in_count,
+            swap_out=p.swap_out_count)
 
     def step(self) -> List[Result]:
         """One serving step: admit queued requests into free slots, run one
@@ -636,9 +656,16 @@ class Engine:
 
         # pipelined decode steps must drain before the decode membership
         # can change: admissions and prefill completions create new decode
-        # slots whose first input token only exists on the host
-        if self._inflight and (self._queue or self.pool.prefill_slots()):
+        # slots whose first input token only exists on the host (swap-ins
+        # rejoin the decode batch the same way)
+        if self._inflight and (self._queue or self.pool.prefill_slots()
+                               or self.pool.swapped_slots()):
             self._drain_inflight(finished)
+
+        # resume swapped-out residents first, FIFO in swap-out order, from
+        # pages freed since (they are older than anything still queued)
+        if self._host_swap:
+            self._resume_swapped()
 
         free = self.pool.free_slots()
         while free and self._queue:
@@ -661,6 +688,11 @@ class Engine:
                     slot = i
                     break
             if slot is None:
+                # page exhaustion with a free slot: the swap tier evicts
+                # cold residents to host memory instead of hard-queueing
+                if self._host_swap and self._swap_out_for_head(
+                        request, graph_key, finished):
+                    continue
                 break                  # head-of-line: wait for pages
             free.remove(slot)
             request, submit_step, submit_time = self._queue.popleft()
@@ -778,6 +810,113 @@ class Engine:
     def _drain_inflight(self, finished: List[Result]):
         while self._inflight:
             self._collect_one(finished)
+
+    # ------------------------------------------------------------------
+    # host-memory swap scheduling (mechanism: serve/batching.PagePool)
+    # ------------------------------------------------------------------
+
+    def _swap_graph_key(self, slot: int):
+        request = self._slot_meta[slot][0]
+        return (self._graph_key(int(request.prompt.size))
+                if self._chunked else None)
+
+    def _resume_swapped(self):
+        """Swap resumable residents back in, strictly FIFO in swap-out
+        order: the oldest swapped request resumes first or nobody does
+        (skipping ahead could starve it forever).  `resume_gen` pins the
+        progress gate — a resumed slot cannot be re-victimized until it
+        has decoded at least one more token, so every swap cycle makes
+        progress and the swap tier cannot livelock."""
+        for slot in self.pool.swapped_slots():
+            request = self._slot_meta[slot][0]
+            gk = self._swap_graph_key(slot)
+            if not self.pool.can_resume(slot, request.prompt, gk):
+                break
+            self.pool.swap_in(slot, request.prompt, gk)
+            s = self.pool.slots[slot]
+            s.resume_gen = s.generated
+
+    def _swap_out_for_head(self, request, graph_key, finished) -> bool:
+        """Make room for the head-of-line request by swapping decoding
+        residents out to host memory.  Victims are picked by most
+        remaining work (they would hold their pages longest), progress-
+        gated on `resume_gen`; returns True once the head admits."""
+        # in-flight decode steps reference the victims: drain first
+        self._drain_inflight(finished)
+        while not self.pool.can_admit(request.prompt,
+                                      request.max_new_tokens, graph_key, 0):
+            victims = [i for i in self.pool.decode_slots()
+                       if self.pool.slots[i].generated
+                       > self.pool.slots[i].resume_gen]
+            if not victims:
+                return False
+            victim = max(victims, key=lambda i: (
+                self.pool.slots[i].max_new - self.pool.slots[i].generated,
+                -i))
+            self.pool.swap_out(victim)
+        return True
+
+    def swapped_requests(self) -> List[int]:
+        """Request ids currently parked in the host swap tier (the async
+        front-end's deadline sweep covers them: a swapped request can
+        still expire and be aborted)."""
+        if self.pool is None:
+            return []
+        return [self.pool.slots[i].request_id
+                for i in self.pool.swapped_slots()]
+
+    # ------------------------------------------------------------------
+    # teacher-forced scoring (the bench's int8 NLL-delta probe)
+    # ------------------------------------------------------------------
+
+    def score(self, prompt, tokens) -> np.ndarray:
+        """Per-token logprobs of `tokens` continuing `prompt`, teacher-
+        forced through THIS engine's paged decode path (same kv_dtype, so
+        an int8 engine scores through int8 pages).  Returns
+        (len(tokens),) f32 with entry i = log p(tokens[i] | prompt,
+        tokens[:i]).  Runs on a private B=1 pool; serving state is
+        untouched."""
+        assert self.pool is not None, "score() needs the paged slot path"
+        assert self.mesh is None, "score() runs unsharded"
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        tokens = [int(t) for t in tokens]
+        L, n = int(prompt.size), len(tokens)
+        if n == 0:
+            return np.zeros((0,), np.float32)
+        assert L + n <= self.max_len + 1, (L, n, self.max_len)
+        if self._score_pool is None:
+            self._score_pool = PagePool(self.cfg, 1, self.max_len,
+                                        kv_dtype=self.kv_dtype)
+            self._score_fn = jax.jit(
+                lambda p, c, tok, pos, pt: Dec.decode_step(
+                    p, self.cfg, c, tok, pos, page_tables=pt),
+                donate_argnums=(1,))
+        pool = self._score_pool
+        state = SlotState(request_id=-1, pos=L, generated=0, max_new=n,
+                          stop_token=None, tokens=[], prompt_len=L,
+                          admit_step=0)
+        pool.allocate(0, prompt, n, state=state)
+        try:
+            toks, last_index = self._pad_prompts([prompt])
+            logits, cache1 = self._admit_prefill(
+                self.params, {"tokens": toks}, last_index,
+                self._page_bucket(L))
+            pool.write_prefill(0, cache1)
+            lps = [float(jax.nn.log_softmax(
+                logits[0].astype(jnp.float32))[tokens[0]])]
+            for i in range(n - 1):
+                pos = L + i
+                pool.ensure_capacity(0, pos // pool.page_size)
+                logits, pool.cache = self._score_fn(
+                    self.params, pool.cache,
+                    jnp.asarray([[tokens[i]]], I32),
+                    jnp.asarray([pos], I32),
+                    jnp.asarray(pool.table_matrix()))
+                lps.append(float(jax.nn.log_softmax(
+                    logits[0].astype(jnp.float32))[tokens[i + 1]]))
+        finally:
+            pool.evict(0)
+        return np.asarray(lps, np.float32)
 
     # ------------------------------------------------------------------
     # cancellation

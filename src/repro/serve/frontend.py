@@ -26,7 +26,11 @@ Scheduling semantics (DESIGN.md §Async front-end):
     expires while queued (or resident but before its first streamed
     token) finishes with `finish_reason="deadline_exceeded"`; its pages
     and reservations are released through `Engine.abort`.  Once a token
-    has streamed the deadline no longer applies.
+    has streamed the deadline no longer applies — UNLESS the request is
+    later swapped out to the host tier (`Engine(host_swap=True)`): a
+    swapped resident's next token may be arbitrarily delayed, so the
+    deadline re-arms for exactly as long as it stays swapped
+    (`Engine.swapped_requests`), releasing its host buffer on expiry.
   * load shedding — the admission queue holds at most `max_queue`
     requests.  A submit against a full queue sheds the lowest-priority
     queued request if the newcomer outranks it, else the newcomer —
@@ -278,10 +282,13 @@ class AsyncEngine:
                 del self._queued[rid]
                 sess._finish(_empty_result(sess, "deadline_exceeded"))
         self._update_space()
+        # deadline covers TTFT — and re-arms while a resident sits in the
+        # host swap tier (its next token is not schedulable until resume)
+        swapped = set(self._engine.swapped_requests())
         for rid, sess in list(self._live.items()):
             if (
                 sess.deadline is not None
-                and sess._emitted == 0
+                and (sess._emitted == 0 or rid in swapped)
                 and now >= sess.deadline
             ):
                 del self._live[rid]

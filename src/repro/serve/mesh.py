@@ -57,9 +57,11 @@ def parse_mesh(spec: str):
     return make_mesh(d, m)
 
 
-def cache_pspecs(cfg, capacity: int, max_len: int, num_pages: int):
+def cache_pspecs(cfg, capacity: int, max_len: int, num_pages: int,
+                 kv_dtype=None):
     """PartitionSpec tree for the paged serving cache."""
-    return Sh.serving_cache_pspecs(cfg, capacity, max_len, num_pages)
+    return Sh.serving_cache_pspecs(cfg, capacity, max_len, num_pages,
+                                   kv_dtype=kv_dtype)
 
 
 def place_cache(cache, mesh, pspecs):

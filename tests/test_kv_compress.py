@@ -1,0 +1,291 @@
+"""Quantized KV pages + host-memory swap (DESIGN.md §Paged cache):
+
+* int8 page stores carry per-(page, kv-head) f32 scales; the pool's
+  write paths quantize, the kernels dequantize in VMEM — the Pallas and
+  XLA paths must agree on the SAME int8 pages;
+* the host swap tier is exact: pages round-trip host memory bitwise,
+  so a starved pool with host_swap produces token streams identical to
+  an ample pool's, while admitting past physical page capacity;
+* every pool lifecycle invariant (refcounts, CoW prefix sharing,
+  reservations, abort) must hold unchanged under both features.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec
+from repro.models import decode as D
+from repro.models import model as M
+from repro.serve import Engine, Request, SamplingSpec, SpecConfig
+from repro.serve.batching import PagePool, SlotState
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small_cfg(vocab=128, max_seq=256):
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    return M.ModelConfig(name="kvc-test", d_model=32, num_layers=2,
+                         num_heads=4, num_kv_heads=4, d_ff=64,
+                         vocab_size=vocab, attn=bb, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=max_seq)
+
+
+def _pool_empty(pool):
+    return (pool.pages_in_use == 0 and pool.pages_reserved == 0
+            and pool.pages_host == 0
+            and sum(len(f) for f in pool._free) == pool.num_pages - 1)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cfg = _small_cfg()
+    return cfg, M.init(cfg, KEY)
+
+
+def _reqs(n=5, seed=7, base=20, step=3, max_new=12, prefix=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        body = rng.integers(4, 127, size=base + step * i).astype(np.int32)
+        if prefix is not None:
+            body = np.concatenate([prefix, body])
+        out.append(Request(prompt=body, max_new_tokens=max_new,
+                           sampling=SamplingSpec(seed=i), request_id=i))
+    return out
+
+
+def _run(cfg, params, reqs, **kw):
+    eng = Engine(cfg, params, max_len=64, capacity=3, **kw)
+    for r in reqs:
+        eng.submit(Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                           sampling=r.sampling, request_id=r.request_id))
+    return eng, {r.request_id: r.tokens for r in eng.drain()}
+
+
+# --------------------------------------------------------------------------
+# int8 page stores
+# --------------------------------------------------------------------------
+
+def test_int8_cache_layout_and_bytes():
+    """int8 pool: k/v stores go int8, scale leaves ks/vs appear with
+    per-(page, kv-head) f32 granularity, and bytes/page drop under 0.3x
+    (the satellite's >= 40% KV cut, with scale overhead included)."""
+    cfg = _small_cfg()
+    pool8 = PagePool(cfg, capacity=2, max_len=64, kv_dtype="int8")
+    l0 = pool8.cache["layer0"]
+    assert l0["k"].dtype == jnp.int8 and l0["v"].dtype == jnp.int8
+    assert l0["ks"].dtype == jnp.float32
+    assert l0["ks"].shape == (pool8.num_pages, cfg.num_kv_heads)
+    poolf = PagePool(cfg, capacity=2, max_len=64)
+    assert "ks" not in poolf.cache["layer0"]
+    ratio = pool8.kv_bytes_per_page() / poolf.kv_bytes_per_page()
+    assert ratio < 0.3, ratio
+
+
+def test_quantize_pages_roundtrip_error_bound():
+    """Dequantized error <= half a quantization step per (page, head)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((3, 4, 8, 8)),
+                    jnp.float32)
+    q, s = D._quantize_pages(x)
+    assert q.dtype == jnp.int8 and s.shape == (3, 4)
+    err = jnp.abs(q.astype(jnp.float32) * s[..., None, None] - x)
+    assert float(jnp.max(err - 0.5 * s[..., None, None])) <= 1e-6
+    # all-zero pages quantize to zeros with the epsilon scale, not NaN
+    q0, s0 = D._quantize_pages(jnp.zeros((1, 2, 8, 8)))
+    assert float(jnp.max(jnp.abs(q0))) == 0 and bool(jnp.all(s0 > 0))
+
+
+def test_int8_paged_decode_pallas_vs_xla_parity():
+    """The Pallas kernel dequantizing int8 in VMEM must match the XLA
+    path fed the SAME dequantized pages — quantization error lives in
+    the pages, never in the kernel."""
+    from repro.kernels import ops
+    cfg = _small_cfg()
+    bbc = cfg.attn_spec(cfg.layer_pattern[0]).bigbird_config(64)
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, dh, b = 2, 4, 4, 8, 8
+    P, npages = 16, 8
+    kc = jnp.asarray(rng.integers(-127, 128, (P, Hkv, b, dh)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, (P, Hkv, b, dh)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.1, (P, Hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.01, 0.1, (P, Hkv)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, Hq, 1, dh)), jnp.float32)
+    pt = jnp.asarray(rng.integers(1, P, (B, npages)), jnp.int32)
+    pos = jnp.asarray([13, 55], jnp.int32)
+    out_q = ops.bigbird_paged_decode_attn(q, kc, vc, pt, pos, bbc,
+                                          k_scale=ks, v_scale=vs)
+    kf = kc.astype(jnp.float32) * ks[:, :, None, None]
+    vf = vc.astype(jnp.float32) * vs[:, :, None, None]
+    out_f = ops.bigbird_paged_decode_attn(q, kf, vf, pt, pos, bbc)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               atol=2e-5)
+
+
+def test_int8_engine_lifecycle_and_prefix_sharing(built):
+    """Oversubscribed int8 engine with a shared prompt prefix: every
+    request finishes full-length, prefix pages are shared (CoW refcounts
+    survive quantized writes), and the pool drains clean."""
+    cfg, params = built
+    prefix = np.arange(4, 4 + 8, dtype=np.int32)    # one full page
+    reqs = _reqs(5, prefix=prefix)
+    eng, res = _run(cfg, params, reqs, kv_dtype="int8")
+    assert set(res) == {0, 1, 2, 3, 4}
+    assert all(len(res[i]) == 12 for i in res)
+    st = eng.stats()
+    assert st.prefix_hits > 0
+    assert _pool_empty(eng.pool)
+
+
+def test_int8_score_nll_close_to_f32(built):
+    """Teacher-forced NLL through the int8 paged path stays near the f32
+    engine's — the quality number the CI gate bands."""
+    cfg, params = built
+    reqs = _reqs(1)
+    engf = Engine(cfg, params, max_len=64, capacity=1)
+    eng8 = Engine(cfg, params, max_len=64, capacity=1, kv_dtype="int8")
+    engf.submit(reqs[0])
+    toks = engf.drain()[0].tokens
+    lp_f = engf.score(reqs[0].prompt, toks)
+    lp_8 = eng8.score(reqs[0].prompt, toks)
+    assert lp_f.shape == (12,) and np.all(lp_f <= 0)
+    assert abs(float(np.mean(lp_f) - np.mean(lp_8))) < 0.5
+    assert _pool_empty(engf.pool) and _pool_empty(eng8.pool)
+
+
+def test_int8_spec_decode_completes_clean(built):
+    """Speculative draft/verify over int8 pages: rollback (page-table
+    truncation + RMW scale state) must leave the pool consistent."""
+    cfg, params = built
+    reqs = _reqs(4, max_new=10)
+    eng, res = _run(cfg, params, reqs, kv_dtype="int8",
+                    spec=SpecConfig(k=3, provider="ngram"))
+    assert all(len(res[i]) == 10 for i in res)
+    assert _pool_empty(eng.pool)
+
+
+# --------------------------------------------------------------------------
+# host-memory swap tier
+# --------------------------------------------------------------------------
+
+def test_pool_swap_roundtrip_bitwise():
+    """swap_out releases pages + reservation and parks the stores on
+    host; swap_in restores them bitwise into fresh pages."""
+    cfg = _small_cfg()
+    pool = PagePool(cfg, capacity=2, max_len=64, kv_dtype="int8")
+    prompt = np.random.default_rng(1).integers(0, 127, 17).astype(np.int32)
+    st = SlotState(request_id=1, pos=17, generated=0, max_new=20,
+                   stop_token=None, tokens=[], prompt_len=17, admit_step=0)
+    pool.allocate(0, prompt, 20, graph_key="g", state=st)
+    idx = jnp.asarray(st.pages)
+    for key in ("k", "v"):
+        c = pool.cache["layer0"][key]
+        pool.cache["layer0"][key] = c.at[idx].set(
+            (jnp.arange(c[idx].size, dtype=jnp.float32)
+             .reshape(c[idx].shape) % 100).astype(c.dtype))
+    for key in ("ks", "vs"):
+        pool.cache["layer0"][key] = \
+            pool.cache["layer0"][key].at[idx].set(0.5)
+    before = {k: np.asarray(v[idx]) for k, v in pool.cache["layer0"].items()}
+    free0 = sum(len(f) for f in pool._free)
+    resv, res0 = st.reserved, pool._reserved[0]
+    pool.swap_out(0)
+    assert pool.slots[0].phase == "swapped"
+    assert pool.swapped_slots() == [0]
+    assert pool.pages_host == len(before["k"])
+    assert sum(len(f) for f in pool._free) == free0 + len(before["k"])
+    assert pool._reserved[0] == res0 - resv
+    assert 0 not in pool.decode_slots()          # excluded from batching
+    pool.swap_in(0, prompt, "g")
+    assert pool.slots[0].phase == "decode" and pool.pages_host == 0
+    assert pool._reserved[0] == res0
+    after = {k: np.asarray(
+        pool.cache["layer0"][k][jnp.asarray(pool.slots[0].pages)])
+        for k in before}
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k])
+
+
+def test_host_swap_streams_bitwise_and_admits_past_capacity(built):
+    """THE acceptance test: a pool too small for the workload, with
+    host_swap, finishes every request with streams bitwise-identical to
+    an ample pool — and page exhaustion no longer hard-queues (real swap
+    traffic, aggregate footprint past the physical page count)."""
+    cfg, params = built
+    reqs = _reqs(5)
+    engf, resf = _run(cfg, params, reqs)
+    engs, ress = _run(cfg, params, reqs, host_swap=True, num_pages=9)
+    assert ress == resf
+    st = engs.stats()
+    assert st.swap_out > 0 and st.swap_in > 0
+    assert st.pages_host == 0
+    # the ample run's peak working set exceeds the tiny pool's usable
+    # pages: only the swap tier made this workload fit
+    assert engf.stats().peak_pages_in_use > engs.pool.num_pages - 1
+    assert _pool_empty(engs.pool)
+
+
+def test_host_swap_with_shared_prefix(built):
+    """Swap cycles while co-residents share prefix pages: a swapped-out
+    sharer must not strand or corrupt the shared pages, and swap_in
+    reattaches via the prefix index (content-addressed, still bitwise)."""
+    cfg, params = built
+    prefix = np.arange(4, 4 + 8, dtype=np.int32)
+    reqs = _reqs(5, prefix=prefix)
+    engf, resf = _run(cfg, params, reqs)
+    engs, ress = _run(cfg, params, reqs, host_swap=True, num_pages=10)
+    assert ress == resf
+    assert engs.stats().swap_out > 0
+    assert _pool_empty(engs.pool)
+
+
+def test_abort_swapped_request_releases_host_buffer(built):
+    """Aborting a request while it sits in the host tier frees its host
+    blob and leaves the remaining workload unaffected."""
+    cfg, params = built
+    reqs = _reqs(5)
+    eng = Engine(cfg, params, max_len=64, capacity=3, host_swap=True,
+                 num_pages=9)
+    for r in reqs:
+        eng.submit(r)
+    victim = None
+    for _ in range(400):
+        eng.step()
+        swapped = eng.swapped_requests()
+        if swapped:
+            victim = swapped[0]
+            break
+    assert victim is not None, "workload produced no swap traffic"
+    assert eng.pool.pages_host > 0
+    res = eng.abort(victim)
+    assert res is not None and res.finish_reason == "aborted"
+    assert victim not in eng.swapped_requests()
+    rest = {r.request_id: r.tokens for r in eng.drain()}
+    assert set(rest) == {0, 1, 2, 3, 4} - {victim}
+    assert all(len(t) == 12 for t in rest.values())
+    assert _pool_empty(eng.pool)
+
+
+def test_host_swap_requires_unsharded_lm(built):
+    cfg, params = built
+    from repro.serve import mesh as Mx
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_len=64, capacity=3, host_swap=True,
+               mesh=Mx.parse_mesh("1x1"))
+
+
+def test_int8_plus_host_swap_compose(built):
+    """Both features together: quantized pages swap host and back; the
+    run must equal the int8-no-swap run bitwise (swap adds no loss on
+    top of quantization)."""
+    cfg, params = built
+    reqs = _reqs(5)
+    _, res8 = _run(cfg, params, reqs, kv_dtype="int8")
+    engs, ress = _run(cfg, params, reqs, kv_dtype="int8", host_swap=True,
+                      num_pages=9)
+    assert ress == res8
+    assert engs.stats().swap_out > 0
+    assert _pool_empty(engs.pool)

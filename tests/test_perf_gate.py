@@ -1,0 +1,171 @@
+"""CI perf gate (benchmarks/perf_gate.py): band edges and the new
+swap/int8 gates, exercised as pure dict-in/violations-out unit tests —
+the gate's acceptance bands are load-bearing CI policy, so their edge
+behavior is pinned here rather than discovered in a red build."""
+import copy
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import perf_gate as PG  # noqa: E402
+
+BAND = 4.0
+
+
+def _base(**over):
+    d = {
+        "kv_bytes_per_request_paged": 573440,
+        "page_size": 32,
+        "max_concurrency_paged": 7,
+        "kv_reduction": 0.4531,
+        "ttft_s": 0.1,
+        "decode_tok_s": 300.0,
+        "continuous_tok_s": 330.0,
+    }
+    d.update(over)
+    return d
+
+
+def _ok(fresh, base):
+    return PG.check(fresh, base, BAND)
+
+
+def test_identical_passes():
+    b = _base()
+    assert _ok(copy.deepcopy(b), b) == []
+
+
+def test_kv_growth_band_edges():
+    b = _base()
+    f = _base(kv_bytes_per_request_paged=int(573440 * 1.009))
+    assert _ok(f, b) == []                      # just inside 1%
+    f = _base(kv_bytes_per_request_paged=int(573440 * 1.02))
+    assert any("kv_bytes_per_request_paged" in v for v in _ok(f, b))
+
+
+def test_structural_exact_fields_gate_hard():
+    for key, val in (("page_size", 16), ("max_concurrency_paged", 6),
+                     ("kv_reduction", 0.3)):
+        f = _base(**{key: val})
+        assert any(key in v for v in _ok(f, _base())), key
+
+
+def test_timing_band_is_wide_not_vacuous():
+    b = _base()
+    assert _ok(_base(continuous_tok_s=330.0 / BAND + 0.1), b) == []
+    assert any("continuous_tok_s" in v
+               for v in _ok(_base(continuous_tok_s=330.0 / BAND - 5), b))
+
+
+# ---- spec acceptance floor: max(b - 0.15, 0.5*b) -------------------------
+
+def _spec(base_rate, fresh_rate):
+    b = _base(spec_acceptance_rate=base_rate, spec_outputs_match=True,
+              spec_continuous_tok_s=400.0)
+    f = _base(spec_acceptance_rate=fresh_rate, spec_outputs_match=True,
+              spec_continuous_tok_s=400.0)
+    return _ok(f, b)
+
+
+def test_acceptance_floor_small_baseline_uses_relative_arm():
+    """base 0.0831: absolute arm gives -0.0669 (vacuous); the relative
+    arm 0.5*0.0831 = 0.04155 is the binding floor."""
+    assert _spec(0.0831, 0.0416) == []
+    bad = _spec(0.0831, 0.0415 - 1e-5)
+    assert any("spec_acceptance_rate dropped" in v for v in bad)
+
+
+def test_acceptance_floor_large_baseline_uses_absolute_arm():
+    """base 0.5: floor = max(0.35, 0.25) = 0.35 — the absolute arm."""
+    assert _spec(0.5, 0.351) == []
+    assert any("spec_acceptance_rate dropped" in v for v in _spec(0.5, 0.349))
+
+
+def test_spec_outputs_match_gates_hard():
+    b = _base(spec_acceptance_rate=0.1, spec_outputs_match=True,
+              spec_continuous_tok_s=400.0)
+    f = _base(spec_acceptance_rate=0.1, spec_outputs_match=False,
+              spec_continuous_tok_s=400.0)
+    assert any("spec_outputs_match" in v for v in _ok(f, b))
+
+
+def test_spec_fields_missing_from_fresh_run_fails():
+    b = _base(spec_acceptance_rate=0.1, spec_outputs_match=True,
+              spec_continuous_tok_s=400.0)
+    assert any("spec metrics missing" in v for v in _ok(_base(), b))
+
+
+# ---- host-swap gates -----------------------------------------------------
+
+def _swap(**over):
+    d = _base(swap_outputs_match=True, swap_out_total=4)
+    d.update(over)
+    return d
+
+
+def test_swap_digest_gates_hard():
+    assert _ok(_swap(), _swap()) == []
+    bad = _ok(_swap(swap_outputs_match=False), _swap())
+    assert any("swap_outputs_match" in v for v in bad)
+
+
+def test_swap_must_actually_run():
+    """swap_out_total == 0 means the digest equality proved nothing."""
+    bad = _ok(_swap(swap_out_total=0), _swap())
+    assert any("swap_out_total is 0" in v for v in bad)
+
+
+def test_swap_gates_inactive_without_baseline_fields():
+    assert _ok(_base(), _base()) == []
+
+
+# ---- int8 KV gates -------------------------------------------------------
+
+def _int8(**over):
+    d = _base(int8_nll_delta=0.001, kv_bytes_per_request_int8=160000,
+              max_concurrency_int8=20)
+    d.update(over)
+    return d
+
+
+def test_int8_nll_ceiling_uses_absolute_floor_for_tiny_baselines():
+    """baseline delta 0.001 -> ceiling max(0.1, 0.002) = 0.1."""
+    assert _ok(_int8(int8_nll_delta=0.09), _int8()) == []
+    bad = _ok(_int8(int8_nll_delta=0.11), _int8())
+    assert any("int8_nll_delta rose" in v for v in bad)
+
+
+def test_int8_nll_ceiling_scales_with_large_baselines():
+    """baseline 0.2 -> ceiling 0.4: relative arm takes over."""
+    b = _int8(int8_nll_delta=0.2)
+    assert _ok(_int8(int8_nll_delta=0.39), b) == []
+    assert any("int8_nll_delta rose" in v
+               for v in _ok(_int8(int8_nll_delta=0.41), b))
+
+
+def test_int8_kv_bytes_growth_gates_hard():
+    bad = _ok(_int8(kv_bytes_per_request_int8=int(160000 * 1.02)), _int8())
+    assert any("kv_bytes_per_request_int8 grew" in v for v in bad)
+
+
+def test_int8_concurrency_exact_and_above_paged():
+    bad = _ok(_int8(max_concurrency_int8=19), _int8())
+    assert any("max_concurrency_int8 changed" in v for v in bad)
+    # equal to paged: the compressed pool buys nothing -> gate
+    b = _int8(max_concurrency_int8=7)
+    bad = _ok(_int8(max_concurrency_int8=7), b)
+    assert any("does not exceed" in v for v in bad)
+
+
+def test_int8_acceptance_floor_matches_f32_formula():
+    b = _int8(spec_acceptance_rate_int8=0.0831)
+    assert _ok(_int8(spec_acceptance_rate_int8=0.0416), b) == []
+    bad = _ok(_int8(spec_acceptance_rate_int8=0.041), b)
+    assert any("spec_acceptance_rate_int8 dropped" in v for v in bad)
+
+
+def test_parse_serving_json_prefers_marker_line():
+    text = 'noise\nSERVING_JSON {"a": 1}\nmore'
+    assert PG.parse_serving_json(text) == {"a": 1}
+    assert PG.parse_serving_json('{"b": 2}') == {"b": 2}
