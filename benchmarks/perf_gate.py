@@ -32,11 +32,14 @@ Speculative-decoding metrics (benchmarks/serving.py --spec) gate on both
 sides: `spec_outputs_match` must stay true (greedy speculation is
 lossless BY CONSTRUCTION — a false here means accepted tokens diverged
 from the vanilla stream, a correctness bug no timing band should excuse),
-and `spec_acceptance_rate` may not fall below
-max(base − ACCEPT_DROP_TOL, base · ACCEPT_REL_FLOOR) (the draft pipeline
-silently proposing garbage is a real regression even when wall-clock
-stays inside the wide band).  Spec fields
-are gated only when the baseline carries them.
+and `spec_acceptance_rate` gates per provider: the statistical ngram
+draft keeps the loose band max(base − ACCEPT_DROP_TOL,
+base · ACCEPT_REL_FLOOR), while trained drafts (`spec_provider`
+"tree"/"model") must clear the hard absolute TRAINED_ACCEPT_FLOOR
+(≥ 0.35) — a band around a small baseline would pass a draft that
+accepts nothing, and a distilled draft below the floor has lost its
+training signal even when wall-clock stays inside the wide band.  Spec
+fields are gated only when the baseline carries them.
 
 KV-compression metrics (benchmarks/serving.py --kv-dtype int8,
 --host-swap), gated once the baseline carries them:
@@ -81,6 +84,12 @@ KV_GROWTH_TOL = 0.01  # hard gate: paged KV bytes/request may grow <= 1%
 ACCEPT_DROP_TOL = 0.15   # spec acceptance may drop <= 15 points absolute...
 ACCEPT_REL_FLOOR = 0.5   # ...but never below half the baseline rate (the
 #                          absolute band alone is vacuous for small baselines)
+TRAINED_ACCEPT_FLOOR = 0.35  # hard absolute floor for trained drafts
+#                          (spec_provider "tree"/"model"): a distilled draft
+#                          that stops clearing 35% has lost its training
+#                          signal, wherever the baseline sat.  The loose
+#                          band above applies only to the statistical ngram
+#                          provider, whose baseline is legitimately small.
 INT8_NLL_ABS_CEIL = 0.1  # int8 NLL inflation ceiling (nats/token), floor of
 #                          the relative band 2x|baseline| for tiny baselines
 
@@ -155,12 +164,24 @@ def check(fresh: dict, base: dict, timing_band: float) -> list:
                 "acceptance correctness bug, not a perf regression)"
             )
         a_f, a_b = fresh["spec_acceptance_rate"], base["spec_acceptance_rate"]
-        floor = max(a_b - ACCEPT_DROP_TOL, a_b * ACCEPT_REL_FLOOR)
-        if a_f < floor:
+        prov = fresh.get("spec_provider", base.get("spec_provider", "ngram"))
+        if prov == "ngram":
+            # statistical draft: loose band around a legitimately small base
+            floor = max(a_b - ACCEPT_DROP_TOL, a_b * ACCEPT_REL_FLOOR)
+            if a_f < floor:
+                bad.append(
+                    f"spec_acceptance_rate dropped {a_b} -> {a_f} "
+                    f"(floor {floor:.4f}: -{ACCEPT_DROP_TOL} absolute, "
+                    f"x{ACCEPT_REL_FLOOR} relative)"
+                )
+        elif a_f < TRAINED_ACCEPT_FLOOR:
+            # trained draft (tree/model): hard absolute floor — the loose
+            # band around a 0.08 ngram baseline would pass a provider that
+            # accepts nothing, which is exactly the regression that matters
             bad.append(
-                f"spec_acceptance_rate dropped {a_b} -> {a_f} "
-                f"(floor {floor:.4f}: -{ACCEPT_DROP_TOL} absolute, "
-                f"x{ACCEPT_REL_FLOOR} relative)"
+                f"spec_acceptance_rate {a_f} below the trained-draft "
+                f"floor {TRAINED_ACCEPT_FLOOR} (provider={prov}: the "
+                f"distilled draft no longer predicts the target)"
             )
         if fresh["spec_continuous_tok_s"] * timing_band < \
                 base["spec_continuous_tok_s"]:

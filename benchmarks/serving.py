@@ -17,12 +17,20 @@ Measurements over a small BigBird LM (bounded decode, paged KV pool):
                           2): streamed tokens must be digest-identical to
                           the synchronous drain (`stream_outputs_match`);
   serving_spec          — (--spec) the same continuous workload through the
-                          speculative draft/verify path (n-gram provider):
-                          spec-vs-vanilla tok/s, acceptance rate, and the
-                          accepted-length histogram.  Greedy speculation is
+                          speculative draft/verify path: the n-gram
+                          provider, or (--spec-provider tree) a draft model
+                          distilled IN-JOB from the bench target (fixed
+                          seed and step budget) proposing token trees
+                          verified in one paged forward.  Reports
+                          spec-vs-vanilla tok/s, acceptance rate, the
+                          accepted-length histogram and (tree) per-depth
+                          off-spine stats.  Greedy speculation is
                           lossless, so `spec_outputs_match` asserts the
                           spec digest equals the vanilla digest — a CI-level
-                          restatement of the token-identity contract;
+                          restatement of the token-identity contract.  The
+                          bench target itself is briefly pretrained at
+                          build time (seed 0, fixed steps) so acceptance
+                          is measured against a model, not noise;
   serving_int8          — (--kv-dtype int8) the workload on quantized KV
                           pages: bytes/request and same-HBM concurrency
                           under int8, plus `int8_nll_delta` — the mean
@@ -71,11 +79,17 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.core.attention import AttentionSpec
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as S
 from repro.models import model as M
 from repro.serve import AsyncEngine, Engine, Request, SamplingSpec, SpecConfig
 
 B, PROMPT, GEN, MAXLEN = 4, 256, 24, 512
 POISSON_GAP_S = 0.08               # mean interarrival (seeded open loop)
+PRETRAIN_STEPS = 300               # fixed budget: the bench checkpoint is a
+#                                    pure function of (seed 0, 300 steps)
+DISTILL_STEPS = 300                # ditto for the in-job distilled draft
+TRAIN_SEQ = 128                    # pretrain/distill sequence length
 
 
 def _build():
@@ -87,7 +101,65 @@ def _build():
                         vocab_size=1024, attn=bigbird, dtype=jnp.float32,
                         scan_layers=False, remat="none", loss_chunk=128)
     params = M.init(cfg, jax.random.PRNGKey(0))
-    return cfg, params
+    # brief deterministic pretraining on the structured synthetic corpus
+    # (data/pipeline.py): the served model must be a trained LM, not noise.
+    # A random-init target's argmax is an unlearnable function, so any
+    # draft-acceptance measurement against it gates nothing; a fixed seed
+    # and step budget keep the checkpoint (and every digest downstream of
+    # it) reproducible across runs.
+    opt = S.make_optimizer(kind="adamw", schedule="cosine", peak_lr=3e-3,
+                           warmup=20, total=PRETRAIN_STEPS)
+    train = jax.jit(S.make_train_step(cfg, opt), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=TRAIN_SEQ, batch_size=8, seed=0,
+                                  mlm=False))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    for i in range(PRETRAIN_STEPS):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        state, metrics = train(state, b)
+    print(f"# bench target: {PRETRAIN_STEPS} pretrain steps, final "
+          f"loss {float(metrics['loss']):.3f}")
+    return cfg, state["params"]
+
+
+def _distill_draft(tcfg, tparams):
+    """In-job distillation (the launch/train.py --distill objective): a
+    small draft trained with per-position KL against the bench target's
+    logits.  Batches alternate between the synthetic corpus and uniform-
+    random token streams: the bench prompts are random tokens, and the
+    teacher's next-token map (largely the corpus' context-free bigram)
+    applies there too — but the draft only matches it on contexts it was
+    distilled on.  Fixed seeds + step budget, so the draft checkpoint —
+    and the tree-spec acceptance rate measured with it — is
+    reproducible."""
+    dcfg = M.ModelConfig(name="bench-draft", d_model=64, num_layers=2,
+                         num_heads=4, num_kv_heads=2, d_ff=256,
+                         vocab_size=tcfg.vocab_size, attn=tcfg.attn,
+                         dtype=jnp.float32, scan_layers=False, remat="none",
+                         loss_chunk=128)
+    opt = S.make_optimizer(kind="adamw", schedule="cosine", peak_lr=3e-3,
+                           warmup=20, total=DISTILL_STEPS)
+    dstep = jax.jit(S.make_distill_step(dcfg, tcfg, opt), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab_size=tcfg.vocab_size,
+                                  seq_len=TRAIN_SEQ, batch_size=8, seed=1,
+                                  mlm=False))
+    rng = np.random.default_rng(1)
+    params = M.init(dcfg, jax.random.PRNGKey(1))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    for i in range(DISTILL_STEPS):
+        if i % 2 == 0:
+            b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        else:
+            t = rng.integers(4, tcfg.vocab_size,
+                             size=(8, TRAIN_SEQ)).astype(np.int32)
+            b = {"tokens": jnp.asarray(t), "labels": jnp.asarray(t)}
+        state, metrics = dstep(state, tparams, b)
+    agree = float(metrics["agree"])
+    print(f"# distilled draft: {DISTILL_STEPS} KL steps, teacher argmax "
+          f"agreement {agree:.3f}")
+    return dcfg, state["params"], agree
 
 
 def _digest(results) -> str:
@@ -110,6 +182,15 @@ def main(argv=None):
                          "speculative draft/verify path")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per verify round (default 4)")
+    ap.add_argument("--spec-provider", default="ngram",
+                    choices=("ngram", "tree"),
+                    help="ngram: prompt-lookup statistical draft; tree: a "
+                         "draft model distilled IN-JOB from the bench "
+                         "target (fixed seed/steps) proposing a token tree "
+                         "verified in one paged forward")
+    ap.add_argument("--spec-fanout", default=None, metavar="F1,F2,..",
+                    help="tree branching per depth (default 2 per depth "
+                         "over K levels)")
     ap.add_argument("--kv-dtype", default=None, choices=(None, "int8"),
                     help="also run the workload on quantized KV pages and "
                          "report bytes/concurrency/NLL-delta")
@@ -249,9 +330,19 @@ def main(argv=None):
 
     # ---- speculative decoding: same workload, draft/verify path ----------
     spec_json = {}
+    spec_cfg = None
     if args.spec:
+        if args.spec_provider == "tree":
+            dcfg, dparams, agree = _distill_draft(cfg, params)
+            fanout = (tuple(int(f) for f in args.spec_fanout.split(","))
+                      if args.spec_fanout else ())
+            spec_cfg = SpecConfig(k=args.spec_k, provider="tree",
+                                  draft_cfg=dcfg, draft_params=dparams,
+                                  fanout=fanout)
+        else:
+            spec_cfg = SpecConfig(k=args.spec_k, provider="ngram")
         spec_eng = Engine(cfg, params, max_len=MAXLEN, capacity=B,
-                          spec=SpecConfig(k=args.spec_k, provider="ngram"))
+                          spec=spec_cfg)
         for r in make_reqs(100):       # warm the verify/chunk executables
             spec_eng.submit(r)
         spec_eng.drain()
@@ -273,7 +364,7 @@ def main(argv=None):
         sstats = spec_eng.spec_stats()
         spec_json = {
             "spec_k": args.spec_k,
-            "spec_provider": "ngram",
+            "spec_provider": args.spec_provider,
             "spec_continuous_tok_s": round(sp_tps, 1),
             "spec_speedup": round(sp_tps / max(cb_tps, 1e-9), 3),
             "spec_acceptance_rate": round(accepted / max(proposed, 1), 4),
@@ -284,8 +375,18 @@ def main(argv=None):
             # greedy speculation is lossless: same streams, same digest
             "spec_outputs_match": _digest(spec_results) == _digest(results),
         }
+        if args.spec_provider == "tree":
+            spec_json.update({
+                "spec_fanout": sstats["fanout"],
+                "spec_tree_nodes": sstats["tree_nodes"],
+                "spec_offspine_accepted": sstats["offspine_accepted"],
+                "spec_offspine_hist": sstats["offspine_hist"],
+                "spec_distill_steps": DISTILL_STEPS,
+                "spec_draft_agree": round(agree, 4),
+            })
         row("serving_spec", t_sp / max(sp_toks, 1) * 1e6,
             f"{sp_tps:.1f}tok/s;k={args.spec_k};"
+            f"provider={args.spec_provider};"
             f"accept={spec_json['spec_acceptance_rate']:.0%};"
             f"match={spec_json['spec_outputs_match']}")
 
@@ -352,9 +453,10 @@ def main(argv=None):
             "int8_nll_delta": round(nll_delta, 5),
         }
         if args.spec:
+            # same provider (and distilled draft) as the f32 spec section:
+            # the int8 acceptance rate isolates quantization, not the draft
             spec8 = Engine(cfg, params, max_len=MAXLEN, capacity=B,
-                           kv_dtype="int8",
-                           spec=SpecConfig(k=args.spec_k, provider="ngram"))
+                           kv_dtype="int8", spec=spec_cfg)
             for r in make_reqs(100):
                 spec8.submit(r)
             spec8.drain()

@@ -15,10 +15,13 @@ bit-identical to the replicated run (DESIGN.md §Mesh-parallel serving).
 Needs D*M visible devices (CPU: XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
 `--spec K` (e.g. `--spec 4`) serves through the speculative-decoding
-path: a draft provider (`--spec-provider ngram|draft`, the latter a small
-bigbird-draft model) proposes up to K tokens per slot per step and one
-verify forward scores them all — losslessly, so the streams match the
-vanilla engine's exactly (DESIGN.md §Speculative decoding).
+path: a draft provider (`--spec-provider ngram|draft|tree` — prompt
+n-grams, a small bigbird-draft model, or the same model drafting a token
+TREE with per-depth fanout `--spec-fanout`) proposes up to K tokens per
+slot per step and one verify forward scores them all — losslessly, so
+the streams match the vanilla engine's exactly (DESIGN.md §Speculative
+decoding).  The end-of-run summary prints the accepted-length histogram
+and, for trees, the off-spine acceptance stats.
 
 `--stream` serves through the asyncio front-end (AsyncEngine): requests
 are submitted with staggered arrivals and every token is printed the
@@ -64,9 +67,14 @@ def main(argv=None):
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="speculative decoding with K draft tokens/round")
     ap.add_argument("--spec-provider", default="ngram",
-                    choices=("ngram", "draft"),
-                    help="draft source: prompt-lookup n-grams or a small "
-                         "bigbird-draft model")
+                    choices=("ngram", "draft", "tree"),
+                    help="draft source: prompt-lookup n-grams, a small "
+                         "bigbird-draft model (linear), or the same model "
+                         "drafting a token TREE (per-depth fanout, one "
+                         "verify forward scores every branch)")
+    ap.add_argument("--spec-fanout", default=None, metavar="F1,F2,..",
+                    help="tree branching per depth (--spec-provider tree); "
+                         "default 2 per depth over K levels")
     ap.add_argument("--stream", action="store_true",
                     help="serve through the async front-end and print "
                          "tokens as they arrive")
@@ -171,13 +179,23 @@ def main(argv=None):
     if args.spec:
         # speculative decoding: draft/verify with lossless acceptance
         spec = SpecConfig(k=args.spec, provider="ngram")
-        if args.spec_provider == "draft":
+        if args.spec_provider in ("draft", "tree"):
             dcfg = (configs.smoke("bigbird-draft") if args.smoke
                     else configs.get("bigbird-draft"))
             dcfg = dataclasses.replace(dcfg, vocab_size=cfg.vocab_size)
             dparams = M.init(dcfg, jax.random.PRNGKey(args.seed + 1))
-            spec = SpecConfig(k=args.spec, provider="model",
-                              draft_cfg=dcfg, draft_params=dparams)
+            if args.spec_provider == "tree":
+                fanout = (tuple(int(f) for f in args.spec_fanout.split(","))
+                          if args.spec_fanout else ())
+                spec = SpecConfig(k=args.spec, provider="tree",
+                                  draft_cfg=dcfg, draft_params=dparams,
+                                  fanout=fanout,
+                                  draft_temperature=args.temperature,
+                                  draft_top_k=args.top_k,
+                                  draft_top_p=args.top_p)
+            else:
+                spec = SpecConfig(k=args.spec, provider="model",
+                                  draft_cfg=dcfg, draft_params=dparams)
         engine = Engine(cfg, params, max_len=max_len, capacity=B, spec=spec,
                         **eng_kw)
         for i in range(B):
@@ -195,6 +213,21 @@ def main(argv=None):
               f"({toks/dt:.1f} tok/s), mean accepted/round "
               f"{st['mean_accepted_len']:.2f}, acceptance {acc:.0%}, "
               f"mean TPOT {np.mean([r.tpot_s for r in results])*1e3:.1f}ms")
+        # accepted-length histogram: hist[m] = verify rounds that kept m
+        # draft tokens (the per-round acceptance distribution, not just
+        # the mean — regressions usually show up in the tail first)
+        hist = st["accept_len_hist"]
+        print("[serve] accept_len_hist "
+              + " ".join(f"{m}:{int(n)}" for m, n in enumerate(hist)))
+        if "offspine_hist" in st:
+            # tree stats: rounds whose accepted path left the greedy spine
+            # at depth m — the branches' contribution over a linear draft
+            print(f"[serve] tree fanout={st['fanout']} "
+                  f"nodes={st['tree_nodes']} "
+                  f"offspine_accepted={int(st['offspine_accepted'])} "
+                  f"offspine_hist "
+                  + " ".join(f"{m}:{int(n)}"
+                             for m, n in enumerate(st["offspine_hist"])))
         print("[serve] sample:", results[0].tokens[:16])
         return jnp.asarray([r.tokens for r in results])
 

@@ -69,6 +69,44 @@ def make_train_step(cfg: M.ModelConfig, opt: Opt.Optimizer, microbatches: int = 
     return train_step
 
 
+def make_distill_step(student_cfg: M.ModelConfig, teacher_cfg: M.ModelConfig,
+                      opt: Opt.Optimizer):
+    """Distill a draft LM from a frozen teacher: per-position
+    KL(teacher || student) over teacher-forced CLM positions
+    (`models/model.chunked_kl_loss`), the objective that maximizes the
+    draft's greedy acceptance rate in speculative serving.  The student
+    backward runs the same custom_vjp attention path as `make_train_step`
+    (impl="pallas" fused kernels); the teacher forward is grad-free.
+
+    distill_step(state, teacher_params, batch) -> (state, metrics) with
+    metrics["agree"] = teacher/student argmax agreement fraction."""
+    assert student_cfg.vocab_size == teacher_cfg.vocab_size, \
+        (student_cfg.vocab_size, teacher_cfg.vocab_size)
+
+    def distill_step(state, teacher_params, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        h_t, _ = M.hidden_states(teacher_params, teacher_cfg, batch)
+        w_t = M._unembed_weight(teacher_params, teacher_cfg)
+        h_t, w_t = jax.lax.stop_gradient((h_t, w_t))
+
+        def loss_of(p):
+            h_s, aux = M.hidden_states(p, student_cfg, batch)
+            w_s = M._unembed_weight(p, student_cfg)
+            kl, agree = M.chunked_kl_loss(
+                h_s, w_s, h_t, w_t, student_cfg.loss_chunk,
+                vocab_real=student_cfg.vocab_size)
+            return kl + student_cfg.aux_loss_weight * aux, agree
+
+        (loss, agree), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        new_params, new_opt, metrics = opt.update(grads, opt_state, params,
+                                                  step)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        return new_state, dict(metrics, loss=loss, agree=agree)
+
+    return distill_step
+
+
 def make_optimizer(cfg_name: str = "", kind: str = "adamw",
                    schedule: str = "cosine", peak_lr: float = 1e-4,
                    warmup: int = 10_000, total: int = 100_000):

@@ -52,7 +52,22 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=None,
                     help="simulate a failure at this step (FT test)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--distill", action="store_true",
+                    help="distillation mode: train --arch (the student, "
+                         "e.g. bigbird-draft) against --teacher-arch "
+                         "teacher logits with per-position KL on "
+                         "teacher-forced CLM positions (serve/spec.py "
+                         "draft providers load the resulting checkpoint)")
+    ap.add_argument("--teacher-arch", default="bigbird-base")
+    ap.add_argument("--teacher-ckpt", default=None,
+                    help="checkpoint dir for teacher params (--distill); "
+                         "default: deterministic random init from "
+                         "--teacher-seed")
+    ap.add_argument("--teacher-seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.distill:
+        return distill_main(args)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.seq:
@@ -135,6 +150,79 @@ def main(argv=None):
     if args.ckpt_dir:
         CKPT.save(state, args.ckpt_dir, args.steps)
         print(f"[train] final checkpoint at step {args.steps}")
+    return state
+
+
+def distill_main(args):
+    """--distill: train the student (--arch, typically bigbird-draft)
+    against frozen --teacher-arch logits with per-position KL on
+    teacher-forced CLM positions.  The checkpoint it writes is what
+    serve/spec.py draft providers (ModelDraft / TreeDraft) load."""
+    from repro.configs.common import with_attn_impl
+
+    mk = configs.smoke if args.smoke else configs.get
+    scfg, tcfg = mk(args.arch), mk(args.teacher_arch)
+    if args.seq:
+        scfg = dataclasses.replace(scfg, max_seq=max(scfg.max_seq, args.seq))
+        tcfg = dataclasses.replace(tcfg, max_seq=max(tcfg.max_seq, args.seq))
+    scfg = with_attn_impl(scfg, args.impl)
+    tcfg = with_attn_impl(tcfg, args.impl)
+    assert scfg.kind == tcfg.kind == "lm", "distill is decoder-LM only"
+
+    if args.teacher_ckpt and CKPT.latest_step(args.teacher_ckpt) is not None:
+        tstate, tstep = CKPT.restore(args.teacher_ckpt)
+        teacher_params = jax.tree.map(jnp.asarray, tstate["params"])
+        print(f"[distill] teacher {args.teacher_arch} from "
+              f"{args.teacher_ckpt} step {tstep}")
+    else:
+        teacher_params = M.init(tcfg, jax.random.PRNGKey(args.teacher_seed))
+        print(f"[distill] teacher {args.teacher_arch} "
+              f"random-init seed={args.teacher_seed}")
+
+    opt = S.make_optimizer(kind=configs.optimizer_for(args.arch),
+                           schedule=configs.schedule_for(args.arch),
+                           peak_lr=args.lr, warmup=args.warmup,
+                           total=args.steps)
+    distill_step = jax.jit(S.make_distill_step(scfg, tcfg, opt),
+                           donate_argnums=(0,))
+
+    # teacher-forced CLM stream: same deterministic generator the serving
+    # bench replays, never MLM (drafts serve a causal decode loop)
+    data = SyntheticLM(DataConfig(
+        vocab_size=scfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
+        seed=args.seed, mlm=False))
+
+    start_step = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        state, start_step = CKPT.restore(args.ckpt_dir)
+        state = jax.tree.map(jnp.asarray, state)
+        print(f"[distill] restored student checkpoint at step {start_step}")
+    else:
+        params = M.init(scfg, jax.random.PRNGKey(args.seed))
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+
+    nparams = sum(int(np.prod(x.shape))
+                  for x in jax.tree.leaves(state["params"]))
+    ntp = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(teacher_params))
+    print(f"[distill] student={args.arch} ({nparams/1e6:.2f}M) "
+          f"teacher={args.teacher_arch} ({ntp/1e6:.2f}M) "
+          f"batch={args.batch} seq={args.seq} impl={args.impl}")
+
+    agree = 0.0
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, metrics = distill_step(state, teacher_params, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = (time.time() - t0) / max(step - start_step + 1, 1)
+            agree = float(metrics["agree"])
+            print(f"[distill] step={step} kl={float(metrics['loss']):.4f} "
+                  f"agree={agree:.3f} lr={float(metrics['lr']):.2e} "
+                  f"{dt:.2f}s/step", flush=True)
+    if args.ckpt_dir:
+        CKPT.save(state, args.ckpt_dir, args.steps)
+        print(f"[distill] final checkpoint at step {args.steps}")
     return state
 
 

@@ -1110,6 +1110,243 @@ def verify_step(params, cfg: M.ModelConfig, cache, tokens, pos, n_valid,
 
 
 # --------------------------------------------------------------------------
+# tree verification (speculative token trees; DESIGN.md §Speculative decoding)
+# --------------------------------------------------------------------------
+
+def _verify_tree_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
+                            layer, pos, page_tables, depths, anc,
+                            model_axis=None):
+    """One attention layer of a TREE verify window: T tree nodes per slot,
+    node t at logical position pos + depths[t], its within-window key set
+    being exactly its own root-to-node ancestor chain (`anc[t, j]` = the
+    ancestor of node t at depth j; node 0 is the root, the slot's pending
+    last token).
+
+    Unlike the linear window, sibling nodes share a logical position, so
+    the tree pass never writes the cache: the pattern-row gather still runs
+    against the paged store, and gathered slots that fall INSIDE the window
+    (pos <= flat <= pos + depth(t)) are substituted per query with the
+    fresh K/V of t's ancestor at that depth — the cache rows sequential
+    decode would have held had t's path been taken, value for value, in the
+    same gathered slot, so the contraction is the linear verify's with
+    different operand values only.  The layer returns its window K/V; the
+    accepted root-to-leaf path is persisted afterwards by `commit_window`
+    (the caller knows the path only after acceptance)."""
+    assert spec.causal, "verify is causal-only (decoder LM serving)"
+    B, T, _ = x.shape
+    pm = p["mix"]
+    h = L.rms_norm(pm["norm"], x, cfg.norm_eps)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    depths = jnp.asarray(depths, jnp.int32)               # (T,)
+    anc = jnp.asarray(anc, jnp.int32)                     # (T, Dmax + 1)
+    positions = pos[:, None] + depths[None, :]            # (B, T)
+    q = (h @ pm["wq"]).reshape(B, T, hq, dh).transpose(0, 2, 1, 3)
+    k = (h @ pm["wk"]).reshape(B, T, hkv, dh).transpose(0, 2, 1, 3)
+    v = (h @ pm["wv"]).reshape(B, T, hkv, dh).transpose(0, 2, 1, 3)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    hq_full = hq
+    if model_axis is not None:
+        q, k, v = _local_heads(q, k, v, c["k"], model_axis)
+        hq, hkv = q.shape[1], k.shape[1]
+    # shard-local window K/V handed to commit_window (heads match c["k"])
+    wk, wv = k, v
+    grp = hq // hkv
+
+    b = c["k"].shape[-2]
+    max_pages = page_tables.shape[1]
+    S = max_pages * b
+    ks = c.get("ks")
+    vs = c.get("vs")
+
+    # the same bigbird-vs-full decision decode_step makes at the logical
+    # cache length — tree and sequential decode must build the same graph
+    use_bb = spec.kind in ("bigbird", "window")
+    if use_bb:
+        bb = spec.bigbird_config(S)
+        nb = S // bb.block_size if S % bb.block_size == 0 else -1
+        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
+                      + bb.num_random_blocks) > nb:
+            use_bb = False
+
+    if use_bb:
+        pat = patterns.build_pattern(bb, S, layer=layer)
+        idx = jnp.asarray(pat.key_blocks)              # (nb, Ls)
+        msk = jnp.asarray(pat.key_mask)
+        jq = positions // b                            # (B, T), OOB clamps
+        row_idx, row_msk = idx[jq], msk[jq]            # (B, T, Ls)
+    else:
+        # full fallback: every logical block is "the pattern row" (the
+        # dense gather order sequential decode uses), per query — costs
+        # T x the dense read, acceptable at the small S this branch serves
+        row_idx = jnp.broadcast_to(
+            jnp.arange(max_pages, dtype=jnp.int32)[None, None],
+            (B, T, max_pages))
+        row_msk = jnp.ones((B, T, max_pages), bool)
+    Ls = row_idx.shape[-1]
+    kg = _paged_gather(c["k"], page_tables, row_idx.reshape(B, T * Ls), ks) \
+        .reshape(B, hkv, T, Ls * b, dh)
+    vg = _paged_gather(c["v"], page_tables, row_idx.reshape(B, T * Ls), vs) \
+        .reshape(B, hkv, T, Ls * b, dh)
+    flat = (row_idx[..., None] * b
+            + jnp.arange(b)).reshape(B, T, Ls * b)
+    # ancestor substitution: a gathered slot at in-window depth j holds,
+    # for query t, the fresh K/V of t's ancestor at depth j (the linear
+    # window is the chain special case anc[t, j] = j, where the cache rows
+    # the gather returns are already exactly these values)
+    rel = flat - pos[:, None, None]                       # (B, T, Ls*b)
+    inwin = (rel >= 0) & (rel <= depths[None, :, None])
+    src = anc[jnp.arange(T)[None, :, None],
+              jnp.clip(rel, 0, anc.shape[1] - 1)]         # (B, T, Ls*b)
+    bidx = jnp.arange(B)[:, None, None]
+    ksub = k.astype(kg.dtype).transpose(0, 2, 1, 3)[bidx, src] \
+        .transpose(0, 3, 1, 2, 4)                         # (B, hkv, T, K, dh)
+    vsub = v.astype(vg.dtype).transpose(0, 2, 1, 3)[bidx, src] \
+        .transpose(0, 3, 1, 2, 4)
+    sel = inwin[:, None, :, :, None]
+    kg = jnp.where(sel, ksub, kg)
+    vg = jnp.where(sel, vsub, vg)
+    valid = (jnp.repeat(row_msk, b, axis=-1)
+             & (flat <= positions[:, :, None]))           # (B, T, Ls*b)
+    qf = q.reshape(B, hkv, grp, T, dh)
+    s = jnp.einsum("bhgtd,bhtkd->bhgtk", qf, kg,
+                   preferred_element_type=F32) / np.sqrt(dh)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(vg.dtype)
+    o = jnp.einsum("bhgtk,bhtkd->bhgtd", pr, vg,
+                   preferred_element_type=F32)
+    o = o.reshape(B, hq, T, dh).astype(q.dtype)
+    if model_axis is not None:
+        o = _gather_heads(o, model_axis)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, hq_full * dh)
+    x = x + o @ pm["wo"]
+    if "ffn" in p:
+        if cfg.layer_pattern[layer % cfg.period].moe:
+            x, _ = L.moe_block(p["ffn"], x, cfg.moe, eps=cfg.norm_eps)
+        else:
+            x = L.mlp_block(p["ffn"], x, eps=cfg.norm_eps)
+    return x, {"k": wk, "v": wv}
+
+
+def verify_tree_step(params, cfg: M.ModelConfig, cache, tokens, pos,
+                     page_tables, depths, anc, model_axis=None):
+    """Score a speculative token TREE in ONE paged forward.
+
+    tokens (B, T) int32 — node 0 is the slot's pending last token (the
+    tree root), nodes 1.. are draft candidates; `depths` (T,) int and
+    `anc` (T, Dmax+1) int are the STATIC tree topology shared by every
+    slot (anc[t, j] = t's ancestor node at depth j, anc[t, depths[t]] = t).
+    pos (B,) int32 — the root's write position, `decode_step`'s contract.
+
+    Returns (logits (B, T, V) f32, window_kv): `logits[:, t]` is the
+    target's next-token distribution after node t GIVEN t's root-to-node
+    path — for every node, the distribution sequential decode would
+    produce after emitting that path.  The cache is NOT written (siblings
+    share logical positions); `window_kv` carries each layer's fresh
+    window K/V so `commit_window` can persist the accepted path once the
+    caller has walked the tree (serve/spec.py `accept_tree`)."""
+    assert all(ls.kind == "attn" for ls in cfg.layer_pattern), \
+        "speculative verify supports attention-only configs"
+    assert cfg.kind != "encdec", "speculative verify is decoder-only"
+    pos = jnp.asarray(pos, jnp.int32)
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    stack = params["layers"]
+    pattern = cfg.layer_pattern
+    scanned = cfg.scan_layers and cfg.repeats > 1 and \
+        not all(k.startswith("layer") for k in stack)
+
+    if scanned:
+        def body(x, xs):
+            pslice, cslice = xs
+            wkv = {}
+            for i, ls in enumerate(pattern):
+                x, w = _verify_tree_attn_layer(
+                    pslice[f"p{i}"], cslice[f"p{i}"], x, cfg,
+                    cfg.attn_spec(ls), i, pos, page_tables, depths, anc,
+                    model_axis)
+                wkv[f"p{i}"] = w
+            return x, wkv
+        x, window_kv = jax.lax.scan(body, x, (stack, cache))
+    else:
+        window_kv = {}
+        for i in range(cfg.num_layers):
+            ls = pattern[i % len(pattern)]
+            x, w = _verify_tree_attn_layer(
+                stack[f"layer{i}"], cache[f"layer{i}"], x, cfg,
+                cfg.attn_spec(ls), i, pos, page_tables, depths, anc,
+                model_axis)
+            window_kv[f"layer{i}"] = w
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    w_out = M._unembed_weight(params, cfg)
+    logits = (x @ w_out).astype(F32)[..., :cfg.vocab_size]
+    return logits, window_kv
+
+
+def _commit_layer(c, w, page_tables, pos, path, cnt):
+    """Persist one layer's accepted path: token j of `path` (a window node
+    index) writes its window K/V at logical position pos + j, for
+    j < cnt (out-of-range / surplus writes scatter with mode="drop")."""
+    B, J = path.shape
+    b = c["k"].shape[-2]
+    P = c["k"].shape[0]
+    max_pages = page_tables.shape[1]
+    S = max_pages * b
+    positions = pos[:, None] + jnp.arange(J)              # (B, J)
+    blk = jnp.clip(positions // b, 0, max_pages - 1)
+    pg = jnp.take_along_axis(page_tables, blk, axis=1)
+    ok = (jnp.arange(J)[None] < cnt[:, None]) & (positions < S)
+    pg = jnp.where(ok, pg, P)
+    off = positions % b
+    sel = path[:, :, None, None]
+    kw = jnp.take_along_axis(w["k"].transpose(0, 2, 1, 3), sel, 1)  # (B,J,H,dh)
+    vw = jnp.take_along_axis(w["v"].transpose(0, 2, 1, 3), sel, 1)
+    new_c = dict(c)
+    if "ks" in c:
+        # int8 pages: the accepted tokens land one by one, the exact RMW
+        # monotone-scale discipline sequential decode applies — and unlike
+        # the linear window, no rejected garbage ever inflates a scale
+        kc, ks, vc, vs = c["k"], c["ks"], c["v"], c["vs"]
+        for j in range(J):
+            kc, ks = _quant_token_write(kc, ks, kw[:, j], pg[:, j],
+                                        off[:, j], drop=True)
+            vc, vs = _quant_token_write(vc, vs, vw[:, j], pg[:, j],
+                                        off[:, j], drop=True)
+        new_c.update(k=kc, ks=ks, v=vc, vs=vs)
+    else:
+        new_c["k"] = c["k"].at[pg, :, off].set(
+            kw.astype(c["k"].dtype), mode="drop")
+        new_c["v"] = c["v"].at[pg, :, off].set(
+            vw.astype(c["v"].dtype), mode="drop")
+    return new_c
+
+
+def commit_window(cfg: M.ModelConfig, cache, window_kv, page_tables, pos,
+                  path, cnt):
+    """Write a tree-verify round's accepted root-to-leaf path into the
+    paged cache.  path (B, J) int32 — window node indices, entry 0 the
+    root; cnt (B,) int32 — tokens to persist (the root plus the accepted
+    candidates; the corrected/bonus token is sampled, never written).
+    Positions pos..pos+cnt-1 end up holding exactly the K/V sequential
+    decode would have written there (`_verify_tree_attn_layer` computes
+    them from the same path-conditioned hidden states)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    path = jnp.asarray(path, jnp.int32)
+    cnt = jnp.asarray(cnt, jnp.int32)
+    stacked = not all(k.startswith("layer") for k in cache)
+    if stacked:
+        def body(_, xs):
+            cslice, wslice = xs
+            return None, {key: _commit_layer(cslice[key], wslice[key],
+                                             page_tables, pos, path, cnt)
+                          for key in cslice}
+        _, new_cache = jax.lax.scan(body, None, (cache, window_kv))
+        return new_cache
+    return {key: _commit_layer(cache[key], window_kv[key], page_tables,
+                               pos, path, cnt)
+            for key in cache}
+
+
+# --------------------------------------------------------------------------
 # prefill (forward pass that also fills the caches)
 # --------------------------------------------------------------------------
 

@@ -349,6 +349,48 @@ def chunked_ce_loss(h, w_out, labels, chunk, loss_mask=None, vocab_real=None):
     return total / jnp.maximum(count, 1.0)
 
 
+def chunked_kl_loss(h_s, w_s, h_t, w_t, chunk, vocab_real=None):
+    """Distillation objective: mean per-position KL(teacher || student)
+    over teacher-forced positions, plus the teacher/student argmax
+    agreement fraction (the greedy-drafting acceptance proxy).
+
+    h_s/h_t (B,S,d_s)/(B,S,d_t) student/teacher hidden states over the
+    SAME token stream; w_s/w_t their unembeddings.  Same rematted chunk
+    scan as `chunked_ce_loss` — neither (B, S, V) logits tensor ever
+    materializes.  The caller stops gradients through the teacher."""
+    B, S, _ = h_s.shape
+    assert h_t.shape[:2] == (B, S), (h_s.shape, h_t.shape)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    hs = h_s.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    ht = h_t.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    Vs, Vt = w_s.shape[-1], w_t.shape[-1]
+
+    @jax.checkpoint
+    def step(acc, xs):
+        hc_s, hc_t = xs
+        zs = (hc_s @ w_s).astype(F32)                  # (B, chunk, Vs)
+        zt = (hc_t @ w_t).astype(F32)
+        if vocab_real is not None:
+            zs = jnp.where(jnp.arange(Vs) < vocab_real, zs, -1e30)
+            zt = jnp.where(jnp.arange(Vt) < vocab_real, zt, -1e30)
+        lps = jax.nn.log_softmax(zs, axis=-1)
+        lpt = jax.nn.log_softmax(zt, axis=-1)
+        pt = jnp.exp(lpt)
+        kl = jnp.sum(pt * (lpt - lps), axis=-1)        # (B, chunk)
+        agree = (jnp.argmax(zt, axis=-1)
+                 == jnp.argmax(zs, axis=-1)).astype(F32)
+        tot, agr, cnt = acc
+        return (tot + kl.sum(), agr + agree.sum(),
+                cnt + jnp.asarray(kl.size, F32)), None
+
+    (total, agreed, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), F32), jnp.zeros((), F32), jnp.zeros((), F32)),
+        (hs, ht))
+    return total / jnp.maximum(count, 1.0), agreed / jnp.maximum(count, 1.0)
+
+
 def loss_fn(params, cfg: ModelConfig, batch):
     """Mean CE + MoE aux loss.  CLM by default; MLM when batch carries
     loss_mask (the paper's pretraining objective)."""

@@ -19,8 +19,8 @@ from repro.serve.api import GenerateOutput, PoolStats, Request, Result
 from repro.serve.engine import Engine
 from repro.serve.frontend import AsyncEngine, StreamSession
 from repro.serve.sampling import SamplingSpec
-from repro.serve.spec import ModelDraft, NGramDraft, SpecConfig
+from repro.serve.spec import ModelDraft, NGramDraft, SpecConfig, TreeDraft
 
 __all__ = ["Engine", "AsyncEngine", "StreamSession", "Request", "Result",
            "GenerateOutput", "PoolStats", "SamplingSpec", "SpecConfig",
-           "NGramDraft", "ModelDraft"]
+           "NGramDraft", "ModelDraft", "TreeDraft"]

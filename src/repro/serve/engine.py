@@ -178,15 +178,41 @@ class Engine:
                     "causal LM config (the paged verify envelope)")
             self._provider = Spc.make_provider(spec, cfg, capacity,
                                                self.max_len)
-            self._accept_hist = np.zeros(spec.k + 1, np.int64)
-            if mesh is not None:
-                from repro.serve import mesh as Mx
-                self._verify = Mx.verify_fn(cfg, mesh, self._cache_ps)
+            if spec.provider == "tree":
+                # static tree topology, closed over the verify/commit
+                # executables as numpy constants (no traced operands)
+                self._topo = Spc.tree_topology(spec.fanout)
+                self._accept_hist = np.zeros(self._topo.depth + 1, np.int64)
+                self._offspine_hist = np.zeros(self._topo.depth + 1,
+                                               np.int64)
+                self._draft_spec = SamplingSpec(
+                    temperature=spec.draft_temperature,
+                    top_k=spec.draft_top_k, top_p=spec.draft_top_p, seed=0)
+                depths_c, anc_c = self._topo.depths, self._topo.anc
+                if mesh is not None:
+                    from repro.serve import mesh as Mx
+                    self._verify_tree = Mx.verify_tree_fn(
+                        cfg, mesh, self._cache_ps, depths_c, anc_c)
+                    self._commit_tree = Mx.commit_fn(cfg, mesh,
+                                                     self._cache_ps)
+                else:
+                    self._verify_tree = jax.jit(
+                        lambda p, c, tok, pos, pt: Dec.verify_tree_step(
+                            p, cfg, c, tok, pos, pt, depths_c, anc_c))
+                    self._commit_tree = jax.jit(
+                        lambda c, w, pt, pos, path, cnt: Dec.commit_window(
+                            cfg, c, w, pt, pos, path, cnt),
+                        donate_argnums=(0,))
             else:
-                self._verify = jax.jit(
-                    lambda p, c, tok, pos, nv, pt: Dec.verify_step(
-                        p, cfg, c, tok, pos, nv, pt),
-                    donate_argnums=(1,))
+                self._accept_hist = np.zeros(spec.k + 1, np.int64)
+                if mesh is not None:
+                    from repro.serve import mesh as Mx
+                    self._verify = Mx.verify_fn(cfg, mesh, self._cache_ps)
+                else:
+                    self._verify = jax.jit(
+                        lambda p, c, tok, pos, nv, pt: Dec.verify_step(
+                            p, cfg, c, tok, pos, nv, pt),
+                        donate_argnums=(1,))
         self._queue: collections.deque = collections.deque()
         self._slot_meta: dict = {}     # slot -> (request, base key, submit step)
         self._next_id = 0
@@ -961,6 +987,8 @@ class Engine:
         and k+1 tokens per slot; the output stream is exactly the vanilla
         stream (greedy: token-identical; sampling: same distribution via
         residual rejection — serve/spec.py)."""
+        if self.spec.provider == "tree":
+            return self._spec_decode_tree(active)
         k = self.spec.k
         B, psz = self.capacity, self.pool.page_size
         pos = self.pool.position_vector()
@@ -1033,10 +1061,124 @@ class Engine:
                 finished.append(self._finish(i, reason))
         return finished
 
+    def _spec_decode_tree(self, active: List[int]) -> List[Result]:
+        """One TREE draft/verify round (provider="tree").
+
+        The draft proposes a static-topology token tree per slot
+        (serve/spec.TreeDraft), `verify_tree_step` scores every node in
+        ONE paged forward WITHOUT writing the cache (sibling nodes share
+        logical positions), acceptance walks the tree per slot, and a
+        single batched `commit_window` persists exactly the accepted
+        root-to-leaf path before rollback unmaps everything past it —
+        the pool never holds a rejected branch's K/V."""
+        topo = self._topo
+        D, T = topo.depth, topo.size
+        B, psz = self.capacity, self.pool.page_size
+        pos = self.pool.position_vector()
+        budgets = np.zeros((B,), np.int32)
+        for i in active:
+            s = self.pool.slots[i]
+            # accepted path depth is capped by the decode budget (the
+            # token after the last accepted one is sampled, never
+            # written) and by the logical cache end
+            budgets[i] = max(0, min(D, s.max_new - s.generated - 1,
+                                    self.max_len - 1 - s.pos))
+        seeds = np.zeros((B,), np.uint32)
+        for i in active:
+            seeds[i] = np.uint32(
+                self._slot_meta[i][0].sampling.seed & 0xFFFFFFFF)
+        cand, draft_logits = self._provider.propose_tree(
+            active, budgets, seeds)
+        tok = np.zeros((B, T), np.int32)
+        for i in active:
+            s = self.pool.slots[i]
+            tok[i, 0] = s.tokens[-1]
+            tok[i, 1:] = cand[i]
+            # map + privatize every page the accepted path could write
+            # ([pos, pos + budget] — commit happens after acceptance)
+            for blk in range(s.pos // psz,
+                             (s.pos + int(budgets[i])) // psz + 1):
+                self.pool.ensure_capacity(i, blk)
+                self.pool.ensure_writable(i, blk)
+        tables = jnp.asarray(self.pool.table_matrix())
+        logits_dev, window_kv = self._verify_tree(
+            self.params, self.pool.cache, jnp.asarray(tok),
+            jnp.asarray(pos), tables)
+        all_greedy = all(
+            self._slot_meta[i][0].sampling.temperature <= 0.0
+            for i in active)
+        if all_greedy:
+            argmaxes = np.asarray(jnp.argmax(logits_dev, axis=-1))
+            logits = None
+        else:
+            logits = np.asarray(logits_dev)            # (B, T, V) f32
+
+        path = np.zeros((B, D + 1), np.int32)
+        cnt = np.zeros((B,), np.int32)
+        emitted_by: dict = {}
+        for i in active:
+            s = self.pool.slots[i]
+            sampling = self._slot_meta[i][0].sampling
+            bud = int(budgets[i])
+            if logits is None:
+                emitted, m, fin = Spc.accept_tree_greedy(
+                    argmaxes[i], tok[i], topo, bud)
+            else:
+                rng = (Spc.accept_rng(sampling, s.generated)
+                       if sampling.temperature > 0.0 else None)
+                dq = None
+                if draft_logits is not None and sampling.temperature > 0.0:
+                    dq = np.stack([
+                        Smp.truncated_probs(draft_logits[i, d],
+                                            self._draft_spec)
+                        for d in range(D)])
+                emitted, m, fin = Spc.accept_tree(
+                    logits[i], tok[i], topo, bud, sampling, rng, dq)
+            if s.stop_token is not None and s.stop_token in emitted:
+                emitted = emitted[:emitted.index(s.stop_token) + 1]
+            # sequential decode after emitting e_1..e_L holds K/V for the
+            # root + e_1..e_{L-1} (the final token is the next pending
+            # last): commit that many path entries, never more than the
+            # accepted prefix the truncation kept
+            m_kept = min(m, len(emitted))
+            cnt[i] = min(m, len(emitted) - 1) + 1
+            path[i, :m + 1] = topo.anc[fin, :m + 1]
+            s.tokens.extend(emitted)
+            s.generated += len(emitted)
+            s.pos += len(emitted)
+            s.draft_proposed += bud
+            s.draft_accepted += m_kept
+            s.verify_steps += 1
+            self._accept_hist[m_kept] += 1
+            if int(topo.spine[m]) != fin:
+                self._offspine_hist[m_kept] += 1
+            emitted_by[i] = emitted
+
+        # ONE batched commit of every slot's accepted path, against the
+        # tables verify used (rollback below may unmap pages, so commit
+        # strictly precedes it)
+        self.pool.cache = self._commit_tree(
+            self.pool.cache, window_kv, tables, jnp.asarray(pos),
+            jnp.asarray(path), jnp.asarray(cnt))
+
+        finished: List[Result] = []
+        for i in active:
+            s = self.pool.slots[i]
+            self.pool.rollback(i, (s.pos - 1) // psz + 1)
+            self._provider.observe(i, emitted_by[i])
+            reason = self._slot_done(s)
+            if reason:
+                finished.append(self._finish(i, reason))
+        return finished
+
     def spec_stats(self, reset: bool = False) -> Optional[dict]:
         """Aggregate speculative-decoding counters: the accepted-length
         histogram (index m = verify rounds that accepted m draft tokens)
-        and the overall acceptance rate.  None when spec is off."""
+        and the overall acceptance rate.  None when spec is off.  Tree
+        providers add per-depth detail: `accept_len_hist[m]` is already
+        "rounds whose accepted path reached depth m", and
+        `offspine_hist[m]` counts those that ended on an OFF-spine
+        candidate (branches paying their way)."""
         if self.spec is None:
             return None
         hist = self._accept_hist.copy()
@@ -1050,8 +1192,15 @@ class Engine:
             "accepted_total": accepted,
             "mean_accepted_len": accepted / rounds if rounds else 0.0,
         }
+        if self.spec.provider == "tree":
+            out["fanout"] = list(self.spec.fanout)
+            out["tree_nodes"] = self._topo.size
+            out["offspine_hist"] = [int(c) for c in self._offspine_hist]
+            out["offspine_accepted"] = int(self._offspine_hist.sum())
         if reset:
             self._accept_hist[:] = 0
+            if self.spec.provider == "tree":
+                self._offspine_hist[:] = 0
         return out
 
     def drain(self) -> List[Result]:

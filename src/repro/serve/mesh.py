@@ -147,6 +147,74 @@ def verify_fn(cfg, mesh, cache_ps):
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def _window_pspecs(cfg):
+    """PartitionSpec tree for `verify_tree_step`'s window K/V aux output:
+    per layer {"k","v"} of (B, local kv heads, T, dh) — batch over
+    `data`, kv heads over `model` (captured AFTER the head slice, so the
+    leaves line up with the cache's head sharding)."""
+    scanned = cfg.scan_layers and cfg.repeats > 1
+    if scanned:
+        leaf = P(None, DATA_AXIS, MODEL_AXIS, None, None)
+        return {f"p{i}": {"k": leaf, "v": leaf}
+                for i in range(len(cfg.layer_pattern))}
+    leaf = P(DATA_AXIS, MODEL_AXIS, None, None)
+    return {f"layer{i}": {"k": leaf, "v": leaf}
+            for i in range(cfg.num_layers)}
+
+
+def verify_tree_fn(cfg, mesh, cache_ps, depths, anc):
+    """The sharded TREE verify: (params, cache, tok (B, T), pos, tables)
+    -> (logits (B, T, V), window_kv).  The static topology (depths, anc)
+    is closed over as constants; the cache is read, never written — the
+    accepted path lands via `commit_fn` after host-side acceptance."""
+
+    def body(params, cache, tok, pos, pt):
+        return Dec.verify_tree_step(
+            params, cfg, cache, tok, pos, pt, depths, anc,
+            model_axis=MODEL_AXIS
+        )
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(),
+            cache_ps,
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+            P(DATA_AXIS, None),
+        ),
+        out_specs=(P(DATA_AXIS, None, None), _window_pspecs(cfg)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def commit_fn(cfg, mesh, cache_ps):
+    """The sharded accepted-path commit: (cache, window_kv, tables, pos,
+    path, cnt) -> cache.  Pure per-shard scatters (local pages x local
+    kv heads) — no collectives, bit-identical to the replicated commit."""
+
+    def body(cache, w, pt, pos, path, cnt):
+        return Dec.commit_window(cfg, cache, w, pt, pos, path, cnt)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            cache_ps,
+            _window_pspecs(cfg),
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+            P(DATA_AXIS, None),
+            P(DATA_AXIS),
+        ),
+        out_specs=cache_ps,
+        check_rep=False,
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
 def chunk_fn(cfg, mesh, cache_ps, start: int, bucket_len: int):
     """One sharded prefill chunk: (params, cache, toks, tables,
     write_tables, last_index) -> (logits (D, V), cache).  Row d of every

@@ -34,6 +34,15 @@ Providers implement the `DraftProvider` protocol:
   drafting k greedy tokens in a batched loop.  Draft-side rollback is
   free: rejected positions are simply re-written on the next propose
   (contiguous cache reads mask strictly by position).
+* `TreeDraft` — the same draft model proposing a token TREE per round
+  (SpecInfer/Medusa-style): `SpecConfig.fanout[d-1]` candidates at
+  depth d, all children of the depth-(d-1) spine node, scored together
+  by `models/decode.verify_tree_step` in one paged forward.  Acceptance
+  (`accept_tree`) walks the tree with recursive rejection per depth —
+  spine first with the draft's true proposal distribution q (sampled
+  spine) or point masses (greedy spine), siblings as point masses —
+  which preserves the emitted marginal exactly at every step; greedy
+  tree-spec stays token-identical to vanilla greedy decode.
 
 Target-side rollback lives in `serve/batching.PagePool.rollback`:
 verify's window writes may lazily map reserved pages past the accepted
@@ -63,18 +72,39 @@ class SpecConfig:
 
     `k` draft tokens are proposed and verified per round; `provider`
     selects the draft source ("ngram" needs nothing, "model" needs a
-    draft ModelConfig + params with the target's vocab)."""
+    draft ModelConfig + params with the target's vocab; "tree" drafts a
+    token TREE from the same draft model — `fanout[d]` candidates at
+    depth d+1, all children of the depth-d spine node — verified in one
+    forward via `models/decode.verify_tree_step`).
+
+    `draft_temperature > 0` makes the tree's spine SAMPLED from the
+    draft's own truncated distribution (draft_top_k / draft_top_p)
+    instead of greedy; acceptance stays lossless because the residual
+    rule subtracts the actual proposal distribution q (module
+    docstring)."""
     k: int = 4
-    provider: str = "ngram"            # "ngram" | "model"
+    provider: str = "ngram"            # "ngram" | "model" | "tree"
     ngram_max: int = 3                 # longest suffix n-gram to match
     ngram_min: int = 1
-    draft_cfg: object = None           # ModelConfig (provider="model")
+    draft_cfg: object = None           # ModelConfig (provider="model"/"tree")
     draft_params: object = None
+    fanout: tuple = ()                 # per-depth branching (provider="tree")
+    draft_temperature: float = 0.0     # 0 -> greedy spine (point masses)
+    draft_top_k: int = 0
+    draft_top_p: float = 1.0
 
     def __post_init__(self):
         assert self.k >= 1
-        assert self.provider in ("ngram", "model"), self.provider
+        assert self.provider in ("ngram", "model", "tree"), self.provider
         assert 1 <= self.ngram_min <= self.ngram_max
+        if self.provider == "tree":
+            if not self.fanout:
+                # default caterpillar: binary branching, depth k
+                object.__setattr__(self, "fanout", (2,) * self.k)
+            fo = tuple(int(f) for f in self.fanout)
+            object.__setattr__(self, "fanout", fo)
+            assert all(f >= 1 for f in fo), fo
+            assert self.draft_temperature >= 0.0
 
 
 class DraftProvider(Protocol):
@@ -241,7 +271,12 @@ def make_provider(spec: SpecConfig, cfg, capacity: int,
     if spec.provider == "ngram":
         return NGramDraft(spec.k, spec.ngram_max, spec.ngram_min)
     assert spec.draft_cfg is not None and spec.draft_params is not None, \
-        "provider='model' needs SpecConfig.draft_cfg + draft_params"
+        f"provider={spec.provider!r} needs SpecConfig.draft_cfg + draft_params"
+    if spec.provider == "tree":
+        return TreeDraft(spec.draft_cfg, spec.draft_params, capacity,
+                         max_len, cfg.vocab_size, spec.fanout,
+                         spec.draft_temperature, spec.draft_top_k,
+                         spec.draft_top_p)
     return ModelDraft(spec.draft_cfg, spec.draft_params, capacity,
                       max_len, cfg.vocab_size, spec.k)
 
@@ -307,3 +342,351 @@ def accept_rng(sampling: SamplingSpec, generated: int) -> np.random.Generator:
     return np.random.default_rng([0x5BEC,
                                   sampling.seed & 0xFFFFFFFFFFFFFFFF,
                                   generated])
+
+
+# --------------------------------------------------------------------------
+# token trees (SpecInfer/Medusa-style multi-candidate verification)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TreeTopology:
+    """A STATIC caterpillar token tree shared by every slot and compiled
+    into the verify graph (numpy constants, no traced operands).
+
+    Node 0 is the root (the slot's pending last token).  Depth d
+    (1-based) contributes `fanout[d-1]` candidate nodes, ALL children of
+    the depth-(d-1) SPINE node; the spine node of each depth is the
+    first of its group (the draft's top-1 / sampled continuation), and
+    off-spine nodes are leaves.  `anc[t, j]` is node t's ancestor at
+    depth j (anc[t, depths[t]] = t; entries past t's depth pad with t
+    and are masked out by the verify kernel's depth test)."""
+    fanout: tuple
+    depths: np.ndarray                 # (T,) int32
+    anc: np.ndarray                    # (T, D+1) int32
+    parent: np.ndarray                 # (T,) int32, parent[0] = -1
+    spine: np.ndarray                  # (D+1,) int32 node index per depth
+    children: tuple                    # children[u] = node tuple, spine first
+
+    @property
+    def size(self) -> int:
+        return int(self.depths.shape[0])
+
+    @property
+    def depth(self) -> int:
+        return len(self.fanout)
+
+
+def tree_topology(fanout) -> TreeTopology:
+    fanout = tuple(int(f) for f in fanout)
+    assert fanout and all(f >= 1 for f in fanout), fanout
+    D = len(fanout)
+    T = 1 + sum(fanout)
+    depths = np.zeros((T,), np.int32)
+    parent = np.full((T,), -1, np.int32)
+    spine = np.zeros((D + 1,), np.int32)
+    t = 1
+    for d, f in enumerate(fanout, start=1):
+        spine[d] = t
+        for _ in range(f):
+            depths[t] = d
+            parent[t] = spine[d - 1]
+            t += 1
+    children = [[] for _ in range(T)]
+    for u in range(1, T):
+        children[int(parent[u])].append(u)
+    anc = np.zeros((T, D + 1), np.int32)
+    for u in range(T):
+        anc[u] = u                     # pad; masked past depths[u]
+        v = u
+        for j in range(int(depths[u]), -1, -1):
+            anc[u, j] = v
+            v = int(parent[v]) if v else 0
+    return TreeTopology(fanout, depths, anc, parent, spine,
+                        tuple(tuple(c) for c in children))
+
+
+class TreeDraft:
+    """Draft a token TREE per round from a small model's logits.
+
+    The spine (depth-wise top-1, or a sample from the draft's own
+    truncated distribution when `temperature` > 0) is decoded
+    autoregressively through the draft's slot-contiguous cache; the
+    off-spine candidates at depth d are the remaining top-`fanout[d-1]`
+    tokens of the SAME logits row — one draft forward per depth buys
+    fanout[d-1] verified candidates.
+
+    Cache bookkeeping differs from `ModelDraft` because the target can
+    accept an OFF-spine candidate, diverging from everything the draft
+    wrote past that depth.  Per slot we track `pos` (tokens whose K/V
+    the draft cache holds for the slot's true history) and `_pending`
+    (emitted tokens not yet ingested, always ending with the slot's
+    pending last token).  `propose_tree` is one fused jit: phase 1
+    ingests the padded pending tokens (the logits row after the LAST
+    real pending token seeds depth 1; garbage writes past it are
+    overwritten by phase 2 — guaranteed because pending is never empty),
+    phase 2 runs `depth` spine steps.  `observe` advances `pos` by the
+    ingested count plus the emitted/spine common prefix and re-queues
+    the rest as pending — the caterpillar analogue of ModelDraft's
+    "rejected positions are simply re-written next round"."""
+
+    def __init__(self, cfg, params, capacity: int, max_len: int,
+                 vocab_size: int, fanout, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0):
+        assert cfg.kind == "lm" and all(
+            ls.kind == "attn" for ls in cfg.layer_pattern), \
+            "draft model must be an attention-only LM"
+        assert all(cfg.attn_spec(ls).causal for ls in cfg.layer_pattern), \
+            "draft model must be causal"
+        assert cfg.vocab_size == vocab_size, \
+            f"draft vocab {cfg.vocab_size} != target vocab {vocab_size}"
+        assert not (cfg.scan_layers and cfg.repeats > 1), \
+            "scanned draft stacks are not supported"
+        self.cfg, self.params = cfg, params
+        self.topo = tree_topology(fanout)
+        self.fanout = self.topo.fanout
+        self.depth = self.topo.depth
+        self.max_f = max(self.fanout)
+        self.temperature = float(temperature)
+        self.top_k, self.top_p = int(top_k), float(top_p)
+        self.capacity, self.max_len = capacity, max_len
+        self.cache = Dec.cache_spec(cfg, capacity, max_len, abstract=False)
+        self.pos = np.full((capacity,), max_len - 1, np.int64)
+        self._pending: dict = {}       # slot -> [int] not yet in cache
+        self._spine: dict = {}         # slot -> last proposed spine tokens
+        self._ingested: dict = {}      # slot -> pending consumed last round
+        self._prefill = jax.jit(
+            lambda p, t, li: Dec.prefill(p, cfg, {"tokens": t}, max_len,
+                                         last_index=li))
+        self._scatter = jax.jit(
+            lambda c, one, slot: jax.tree.map(
+                lambda cl, ol: cl.at[slot].set(ol[0].astype(cl.dtype)),
+                c, one),
+            donate_argnums=(0,))
+        self._propose = jax.jit(self._propose_impl, donate_argnums=(1,))
+
+    def _propose_impl(self, params, cache, pend, plen, pos, dseed):
+        """pend (B, depth+1) int32 padded pending tokens, plen (B,) >= 1
+        real lengths, pos (B,) first pending write position, dseed (B,)
+        uint32 per-slot draft seed (the request's sampling seed).
+        Returns (spine (B, D), topk (B, D, max_f), draft logits
+        (B, D, V) or None, cache)."""
+        B = pend.shape[0]
+        # phase 1 — ingest pending: step j writes pend[:, j] at pos + j.
+        # Rows past plen write garbage at pos+plen..pos+depth; phase 2's
+        # spine writes cover pos+plen..pos+plen+depth-1, a superset
+        # because plen >= 1, and reads mask strictly by position, so no
+        # garbage row is ever read before it is overwritten.
+        rows = []
+        for j in range(self.depth + 1):
+            logits, cache = Dec.decode_step(params, self.cfg, cache,
+                                            pend[:, j][:, None], pos + j)
+            rows.append(logits)
+        allrows = jnp.stack(rows, axis=1)                      # (B, J, V)
+        logits = jnp.take_along_axis(
+            allrows, (plen - 1)[:, None, None], axis=1)[:, 0]  # (B, V)
+        if self.temperature > 0.0:
+            # per-REQUEST draft randomness: the key stream folds the
+            # request's sampling seed and the spine start position (depth
+            # via fold_step_keys).  Slot-index independent, so a request
+            # drafts reproducibly under any batching — but distinct
+            # requests with identical histories draw INDEPENDENT spine
+            # samples, which q-aware acceptance (accept_tree's
+            # min(1, r/q) rule) requires: it is only lossless when the
+            # spine is a fresh sample from q, not a deterministic
+            # function of the history
+            base = jax.random.PRNGKey(0x7BEE)
+            keys = jax.vmap(
+                lambda sd, s: jax.random.fold_in(
+                    jax.random.fold_in(base, sd), s))(dseed, pos + plen)
+            temps = jnp.full((B,), self.temperature, jnp.float32)
+            tks = jnp.full((B,), self.top_k, jnp.int32)
+            tps = jnp.full((B,), self.top_p, jnp.float32)
+        spine, topk, qrows = [], [], []
+        for d in range(self.depth):
+            topk.append(jax.lax.top_k(logits, self.max_f)[1]
+                        .astype(jnp.int32))
+            if self.temperature > 0.0:
+                qrows.append(logits)
+                s = Smp.sample_tokens(logits, Smp.fold_step_keys(keys, d),
+                                      temps, tks, tps)
+            else:
+                s = jnp.argmax(logits, axis=-1)
+            s = s.astype(jnp.int32)
+            spine.append(s)
+            logits, cache = Dec.decode_step(params, self.cfg, cache,
+                                            s[:, None], pos + plen + d)
+        qout = jnp.stack(qrows, axis=1) if qrows else None
+        return (jnp.stack(spine, axis=1), jnp.stack(topk, axis=1),
+                qout, cache)
+
+    def admit(self, slot: int, prompt: np.ndarray) -> None:
+        L = int(prompt.size)
+        b = pow2_bucket(L, self.max_len)   # the Engine's prompt bucketing
+        toks = np.zeros((1, b), np.int32)
+        toks[0, :L] = prompt
+        _, one = self._prefill(self.params, jnp.asarray(toks),
+                               jnp.asarray([L - 1], jnp.int32))
+        self.cache = self._scatter(self.cache, one,
+                                   jnp.asarray(slot, jnp.int32))
+        # cache now holds positions 0..L-1; the first emitted batch (the
+        # prefill-sampled token) arrives via observe() as pending
+        self.pos[slot] = L
+        self._pending[slot] = []
+        self._spine.pop(slot, None)
+        self._ingested.pop(slot, None)
+
+    def observe(self, slot: int, tokens: list) -> None:
+        toks = [int(t) for t in tokens]
+        sp = self._spine.pop(slot, [])
+        j = 0
+        while j < min(len(sp), len(toks)) and toks[j] == sp[j]:
+            j += 1
+        self.pos[slot] += self._ingested.pop(slot, 0) + j
+        self._pending[slot] = self._pending.get(slot, []) + toks[j:]
+
+    def evict(self, slot: int) -> None:
+        self.pos[slot] = self.max_len - 1
+        self._pending.pop(slot, None)
+        self._spine.pop(slot, None)
+        self._ingested.pop(slot, None)
+
+    def propose(self, active, last, budgets):
+        raise NotImplementedError(
+            "TreeDraft drafts trees; the engine calls propose_tree()")
+
+    def propose_tree(self, active, budgets, seeds=None):
+        """Returns (cand (capacity, T-1) int32 — candidate tokens for
+        tree nodes 1..T-1 in node order — and draft_q: None for a greedy
+        spine, else (capacity, D, V) f32 draft logits whose
+        `truncated_probs` under the draft's sampling spec is the exact
+        spine proposal distribution q at each depth).  `seeds` (B,)
+        uint32 per-slot request seeds drive the sampled spine's key
+        stream — required when temperature > 0 so each request's spine
+        is an independent q-sample (accept_tree's q-aware rule is only
+        lossless against fresh samples)."""
+        B, J = self.capacity, self.depth + 1
+        pend = np.zeros((B, J), np.int32)
+        plen = np.ones((B,), np.int32)
+        pos = np.full((B,), self.max_len - 1, np.int64)
+        if seeds is None:
+            seeds = np.zeros((B,), np.uint32)
+        for i in active:
+            pl = self._pending.get(i, [])
+            assert pl, "propose_tree() before the slot's first observe()"
+            self._ingested[i] = len(pl)
+            pend[i, :len(pl)] = pl
+            plen[i] = len(pl)
+            pos[i] = self.pos[i]
+            self._pending[i] = []
+        spine, topk, qrows, self.cache = self._propose(
+            self.params, self.cache, jnp.asarray(pend),
+            jnp.asarray(plen), jnp.asarray(pos, jnp.int32),
+            jnp.asarray(seeds, jnp.uint32))
+        spine, topk = np.asarray(spine), np.asarray(topk)
+        cand = np.zeros((B, self.topo.size - 1), np.int32)
+        for i in active:
+            self._spine[i] = [int(t) for t in spine[i]]
+            col = 0
+            for d, f in enumerate(self.fanout):
+                grp = [int(spine[i, d])]
+                for t in topk[i, d]:
+                    if len(grp) >= f:
+                        break
+                    if int(t) != grp[0]:
+                        grp.append(int(t))
+                cand[i, col:col + f] = grp[:f]
+                col += f
+        dq = np.asarray(qrows) if qrows is not None else None
+        return cand, dq
+
+
+def accept_tree_greedy(argmax_rows: np.ndarray, tokens: np.ndarray,
+                       topo: TreeTopology, budget: int) -> tuple:
+    """Walk the tree greedily: from the current node emit the target's
+    argmax; if it equals a child candidate (within the depth budget),
+    descend — that child IS what sequential greedy decode would have
+    emitted there — else stop.  Children are scanned spine-first so a
+    sampled-spine duplicate of a sibling prefers the deeper
+    continuation.  Returns (emitted tokens, accepted count m, final
+    accepted node index — depths[final] == m, and the root-to-final
+    path is anc[final, :m+1])."""
+    out, cur, m = [], 0, 0
+    while True:
+        g = int(argmax_rows[cur])
+        out.append(g)
+        nxt = None
+        for c in topo.children[cur]:
+            if int(topo.depths[c]) <= budget and int(tokens[c]) == g:
+                nxt = c
+                break
+        if nxt is None:
+            return out, m, cur
+        cur, m = nxt, m + 1
+
+
+def accept_tree(logits: np.ndarray, tokens: np.ndarray, topo: TreeTopology,
+                budget: int, sampling: SamplingSpec,
+                rng: Optional[np.random.Generator],
+                draft_q: Optional[np.ndarray] = None) -> tuple:
+    """Multi-candidate lossless acceptance over one slot's tree logits.
+
+    logits (T, V) f32 — row t is the target's next-token distribution
+    after node t's root-to-node path; tokens (T,) int32 (tokens[0] is
+    the root's token, never re-emitted); draft_q None (all candidates
+    are point masses) or (D, V) f64 — row d-1 is the spine's exact
+    proposal distribution at depth d (`sampling.truncated_probs` of the
+    draft's logits under the DRAFT's sampling spec).
+
+    At each accepted node, recursive rejection over its children
+    (spine first): candidate c with proposal distribution q_c is
+    accepted w.p. min(1, r(c)/q_c(c)) against the running residual r
+    (initially the truncated target p), and on rejection
+    r <- norm(max(r - q_c, 0)); if every child is rejected, emit a
+    sample from the final residual and stop.  Each step preserves the
+    emitted marginal exactly (module docstring), so composing them down
+    the tree keeps every emitted token distributed as vanilla
+    sampling's — with a point-mass q this is PR 5's `accept`, and with
+    one child per depth the walk reduces to the linear window.
+
+    Returns (emitted tokens, accepted count m, final node index)."""
+    if sampling.temperature <= 0.0:
+        return accept_tree_greedy(np.argmax(logits, axis=-1), tokens,
+                                  topo, budget)
+    out, cur, m = [], 0, 0
+    while True:
+        kids = [c for c in topo.children[cur]
+                if int(topo.depths[c]) <= budget]
+        p = Smp.truncated_probs(logits[cur], sampling)
+        if not kids:
+            out.append(int(rng.choice(p.size, p=p)))
+            return out, m, cur
+        r = p.astype(np.float64)
+        took = None
+        for c in kids:
+            d = int(tokens[c])
+            is_spine = draft_q is not None and c == int(
+                topo.spine[int(topo.depths[c])])
+            if is_spine:
+                q = draft_q[int(topo.depths[c]) - 1]
+                qd = float(q[d])
+                a = min(1.0, r[d] / qd) if qd > 0.0 else float(r[d] > 0.0)
+                if rng.random() <= a:
+                    took = c
+                    break
+                r = np.maximum(r - q, 0.0)
+            else:
+                if rng.random() <= r[d]:
+                    took = c
+                    break
+                r = r.copy()
+                r[d] = 0.0
+            tot = r.sum()
+            if tot <= 0.0:             # residual exhausted: accept c
+                took = c
+                break
+            r = r / tot
+        if took is None:
+            out.append(int(rng.choice(r.size, p=r)))
+            return out, m, cur
+        out.append(int(tokens[took]))
+        cur, m = took, m + 1

@@ -82,6 +82,37 @@ def test_acceptance_floor_large_baseline_uses_absolute_arm():
     assert any("spec_acceptance_rate dropped" in v for v in _spec(0.5, 0.349))
 
 
+def test_trained_draft_floor_is_absolute_not_banded():
+    """spec_provider tree/model: the hard 0.35 floor replaces the loose
+    band.  A drop from 0.6 to 0.36 passes (the band's 0.45 floor would
+    have failed it) but 0.34 fails, wherever the baseline sat."""
+    b = _base(spec_acceptance_rate=0.6, spec_outputs_match=True,
+              spec_continuous_tok_s=900.0, spec_provider="tree")
+    f = copy.deepcopy(b)
+    f["spec_acceptance_rate"] = 0.36
+    assert _ok(f, b) == []
+    f["spec_acceptance_rate"] = 0.34
+    assert any("trained-draft" in v for v in _ok(f, b))
+
+
+def test_trained_draft_floor_binds_even_with_low_baseline():
+    """The floor is absolute: a trained draft under 0.35 fails even when
+    the committed baseline was itself low (the banded formula would have
+    passed it — exactly the vacuous-gate hole this floor closes).  The
+    same numbers under the ngram provider stay inside the loose band."""
+    for prov in ("model", "tree"):
+        b = _base(spec_acceptance_rate=0.2, spec_outputs_match=True,
+                  spec_continuous_tok_s=900.0, spec_provider=prov)
+        f = copy.deepcopy(b)
+        f["spec_acceptance_rate"] = 0.21
+        assert any("trained-draft" in v for v in _ok(f, b)), prov
+    b = _base(spec_acceptance_rate=0.2, spec_outputs_match=True,
+              spec_continuous_tok_s=900.0, spec_provider="ngram")
+    f = copy.deepcopy(b)
+    f["spec_acceptance_rate"] = 0.21
+    assert _ok(f, b) == []
+
+
 def test_spec_outputs_match_gates_hard():
     b = _base(spec_acceptance_rate=0.1, spec_outputs_match=True,
               spec_continuous_tok_s=400.0)

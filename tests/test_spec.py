@@ -9,7 +9,12 @@ The load-bearing claims (DESIGN.md §Speculative decoding):
     sampling — checked both at the unit level against the exact target
     distribution and at the engine level);
   * rollback releases only private speculative pages: refcounts, the
-    reservation ledger, and shared prefix pages all survive.
+    reservation ledger, and shared prefix pages all survive;
+  * tree speculation (N branches, one paged verify forward) keeps all of
+    the above: greedy tree spec is token-identical to vanilla, sampled
+    tree spec draws from exactly the truncated target distribution even
+    when the draft proposes from its own temperature, and path rollback
+    preserves the ledger.
 """
 import jax
 import jax.numpy as jnp
@@ -354,6 +359,188 @@ def test_spec_requires_attention_only_causal_lm(built):
 
 
 # --------------------------------------------------------------------------
+# tree speculation: one verify forward scores N branches
+# --------------------------------------------------------------------------
+
+def test_tree_topology_caterpillar_structure():
+    topo = Spc.tree_topology((3, 2, 1))
+    assert topo.size == 7 and topo.depth == 3
+    assert topo.depths.tolist() == [0, 1, 1, 1, 2, 2, 3]
+    assert topo.parent.tolist() == [-1, 0, 0, 0, 1, 1, 4]
+    # the spine (first node of each depth group) carries the linear draft
+    assert topo.spine.tolist() == [0, 1, 4, 6]
+    assert topo.children[0][0] == 1 and topo.children[1][0] == 4
+    # anc[u, d] = u's ancestor at depth d (the verify-mask gather table)
+    assert topo.anc[6].tolist() == [0, 1, 4, 6]
+    assert topo.anc[5].tolist()[:3] == [0, 1, 5]
+
+
+def test_tree_greedy_walk_accepts_offspine_branch():
+    """The greedy walk must descend into a non-spine sibling when the
+    target argmax says so, and stop at its leaf with a bonus token."""
+    topo = Spc.tree_topology((2, 1))
+    tokens = np.zeros(topo.size, np.int64)
+    tokens[1], tokens[2], tokens[3] = 5, 9, 7     # spine, sibling, child
+    logits = np.full((topo.size, 16), -1.0, np.float32)
+    logits[0, 9] = 1.0          # root context: argmax = sibling's token
+    logits[2, 11] = 1.0         # sibling context: bonus token 11
+    out, m, fin = Spc.accept_tree_greedy(
+        np.argmax(logits, -1), tokens, topo, budget=2)
+    assert out == [9, 11] and m == 1 and fin == 2
+
+
+@pytest.mark.parametrize("fanout", [(2, 2, 1), (1, 1, 1)])
+def test_greedy_tree_spec_identical_to_vanilla(built, vanilla_ref, fanout):
+    """Greedy tree speculation is token-identical to vanilla decode for
+    branching and degenerate (linear) fanouts; draft == target means the
+    spine is the target argmax chain, so every budgeted depth accepts."""
+    cfg, params = built
+    got, eng = _drain(cfg, params, _reqs(_prompts()),
+                      spec=SpecConfig(k=len(fanout), provider="tree",
+                                      draft_cfg=cfg, draft_params=params,
+                                      fanout=fanout))
+    assert got == vanilla_ref
+    assert eng.spec_stats()["accepted_total"] > 0
+    _pool_ok(eng.pool)
+
+
+def test_greedy_tree_random_draft_rejections_still_identical(built,
+                                                             vanilla_ref):
+    """A random unrelated draft tree is wrong essentially always — every
+    round exercises path rollback (unmapping all but the accepted root) —
+    and the stream must STILL equal vanilla."""
+    cfg, params = built
+    dcfg = M.ModelConfig(name="draft", d_model=16, num_layers=1,
+                         num_heads=2, num_kv_heads=2, d_ff=32,
+                         vocab_size=128, attn=cfg.attn, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=256)
+    dparams = M.init(dcfg, jax.random.PRNGKey(7))
+    got, eng = _drain(cfg, params, _reqs(_prompts()),
+                      spec=SpecConfig(k=2, provider="tree",
+                                      draft_cfg=dcfg, draft_params=dparams,
+                                      fanout=(2, 2)))
+    assert got == vanilla_ref
+    _pool_ok(eng.pool)
+
+
+def test_tree_stop_token_inside_accepted_path(built):
+    cfg, params = built
+    prompt = _prompts(seed=9, lens=(16,))[0]
+    free, _ = _drain(cfg, params,
+                     [Request(prompt=prompt, max_new_tokens=8,
+                              sampling=SamplingSpec(seed=0))])
+    stop = free[0][3]                  # 4th greedy token as "EOS"
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=4, provider="tree",
+                                 draft_cfg=cfg, draft_params=params))
+    eng.submit(Request(prompt=prompt, max_new_tokens=8, stop_token=stop,
+                       sampling=SamplingSpec(seed=0)))
+    res = eng.drain()[0]
+    assert res.finish_reason == "stop"
+    assert res.tokens == free[0][:4]
+    _pool_ok(eng.pool)
+
+
+def test_tree_spec_int8_identical_to_int8_vanilla(built):
+    """Tree verify writes nothing; commit_window's int8 path quantizes
+    only the accepted root-to-leaf tokens — so int8 tree spec must equal
+    int8 vanilla decode exactly (same quantized cache trajectory)."""
+    cfg, params = built
+    ref, _ = _drain(cfg, params, _reqs(_prompts()), kv_dtype="int8")
+    got, eng = _drain(cfg, params, _reqs(_prompts()), kv_dtype="int8",
+                      spec=SpecConfig(k=3, provider="tree", draft_cfg=cfg,
+                                      draft_params=params, fanout=(2, 2, 1)))
+    assert got == ref
+    _pool_ok(eng.pool)
+
+
+def test_tree_rollback_ledger_invariants_every_step(built):
+    cfg, params = built
+    eng = Engine(cfg, params, max_len=64, capacity=3,
+                 spec=SpecConfig(k=3, provider="tree", draft_cfg=cfg,
+                                 draft_params=params, fanout=(2, 1, 1)))
+    for r in _reqs(_prompts(), max_new=12):
+        eng.submit(r)
+    while eng._queue or eng.pool.active_slots():
+        eng.step()
+        _step_invariants(eng.pool)
+    _pool_ok(eng.pool)
+
+
+def test_tree_accept_emits_exactly_the_truncated_target_distribution():
+    """Monte-carlo the TREE acceptance rule: with the spine drawn from the
+    draft's own truncated distribution (draft_q) and siblings as point
+    masses, the first emitted token's marginal must equal the truncated
+    TARGET distribution — the per-depth residual-sampling identity that
+    makes sampled tree drafting lossless."""
+    topo = Spc.tree_topology((2, 2))
+    rng_l = np.random.default_rng(0)
+    logits = rng_l.standard_normal((topo.size, 50)).astype(np.float32) * 2.0
+    samp = SamplingSpec(temperature=0.8, top_k=10, top_p=0.9, seed=0)
+    p = Smp.truncated_probs(logits[0], samp)
+    dspec = SamplingSpec(temperature=1.2, top_k=20, seed=0)
+    dlog = rng_l.standard_normal((topo.depth, 50)).astype(np.float32) * 2.0
+    draft_q = np.stack([Smp.truncated_probs(dlog[d], dspec)
+                        for d in range(topo.depth)])
+    sibling = [int(np.argsort(-draft_q[d])[1]) for d in range(topo.depth)]
+    N = 40000
+    draft_rng = np.random.default_rng(5)
+    rng = np.random.default_rng(1234)
+    counts = np.zeros(50)
+    for _ in range(N):
+        tokens = np.zeros(topo.size, np.int64)
+        for d in range(1, topo.depth + 1):
+            grp = topo.children[topo.spine[d - 1]]
+            tokens[grp[0]] = draft_rng.choice(50, p=draft_q[d - 1])
+            for c in grp[1:]:
+                tokens[c] = sibling[d - 1]
+        emitted, _, _ = Spc.accept_tree(logits, tokens, topo, topo.depth,
+                                        samp, rng, draft_q=draft_q)
+        counts[emitted[0]] += 1
+    tv = 0.5 * np.abs(counts / N - p).sum()
+    assert tv < 0.02, tv
+
+
+def test_sampled_tree_spec_engine_marginals_match_vanilla():
+    """Engine-level seeded statistical check for sampled TREE speculation
+    with the draft proposing from its own temperature: per-position
+    marginals equal the vanilla engine's (cf. the linear-spec version of
+    this test above)."""
+    cfg = _cfg(vocab=12)
+    params = M.init(cfg, KEY)
+    dcfg = M.ModelConfig(name="draft", d_model=16, num_layers=1,
+                         num_heads=2, num_kv_heads=2, d_ff=32,
+                         vocab_size=12, attn=cfg.attn, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=256)
+    dparams = M.init(dcfg, jax.random.PRNGKey(7))
+    prompt = np.random.default_rng(21).integers(
+        4, 12, size=24).astype(np.int32)
+    N, T = 200, 3
+
+    def streams(spec):
+        out = []
+        eng = Engine(cfg, params, max_len=64, capacity=1, spec=spec)
+        for s in range(N):
+            eng.submit(Request(
+                prompt=prompt, max_new_tokens=T,
+                sampling=SamplingSpec(temperature=1.0, seed=s)))
+            out.append(eng.drain()[0].tokens)
+        return np.asarray(out)
+
+    a = streams(None)
+    b = streams(SpecConfig(k=2, provider="tree", draft_cfg=dcfg,
+                           draft_params=dparams, fanout=(2, 2),
+                           draft_temperature=1.0))
+    np.testing.assert_array_equal(a[:, 0], b[:, 0])
+    for t in range(1, T):
+        ca = np.bincount(a[:, t], minlength=cfg.vocab_size) / N
+        cb = np.bincount(b[:, t], minlength=cfg.vocab_size) / N
+        assert 0.5 * np.abs(ca - cb).sum() < 0.2, t
+
+
+# --------------------------------------------------------------------------
 # mesh composition
 # --------------------------------------------------------------------------
 
@@ -379,6 +566,36 @@ def test_spec_on_mesh_bit_identical_to_vanilla(built):
     ref = [r.tokens for r in eng.drain()]
     eng = Engine(cfg, params, max_len=64, capacity=4,
                  mesh=Mx.make_mesh(2, 2), spec=SpecConfig(k=3))
+    for r in reqs():
+        eng.submit(r)
+    got = [r.tokens for r in eng.drain()]
+    assert got == ref
+    _pool_ok(eng.pool)
+
+
+@pytest.mark.multidevice
+def test_tree_spec_on_mesh_bit_identical_to_vanilla(built):
+    """Tree verification over a (2, 2) mesh: window K/V capture and the
+    path commit are per-shard (heads on the model axis, slots on data),
+    and the streams must equal the unsharded, unspeculated engine's."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 devices; run with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.serve import mesh as Mx
+    cfg = _cfg(kv_heads=2)
+    params = M.init(cfg, KEY)
+    prompts = _prompts(seed=3, lens=(19, 33, 11, 26))
+    reqs = lambda: [Request(prompt=p, max_new_tokens=8,
+                            sampling=SamplingSpec(seed=i))
+                    for i, p in enumerate(prompts)]
+    eng = Engine(cfg, params, max_len=64, capacity=4)
+    for r in reqs():
+        eng.submit(r)
+    ref = [r.tokens for r in eng.drain()]
+    eng = Engine(cfg, params, max_len=64, capacity=4,
+                 mesh=Mx.make_mesh(2, 2),
+                 spec=SpecConfig(k=3, provider="tree", draft_cfg=cfg,
+                                 draft_params=params, fanout=(2, 2, 1)))
     for r in reqs():
         eng.submit(r)
     got = [r.tokens for r in eng.drain()]
