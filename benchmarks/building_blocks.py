@@ -97,11 +97,15 @@ def recall_only_loss(params, cfg, step):
     return float(M.loss_fn(params, cfg, batch))
 
 
-def train_variant(spec):
-    cfg = M.ModelConfig(
+def _variant_cfg(spec):
+    return M.ModelConfig(
         name="tab1", d_model=48, num_layers=2, num_heads=4, num_kv_heads=4,
         head_dim=12, d_ff=96, vocab_size=V, attn=spec,
         dtype=jnp.float32, scan_layers=False, remat="none", loss_chunk=64)
+
+
+def train_variant(spec):
+    cfg = _variant_cfg(spec)
     opt = S.make_optimizer(schedule="constant", peak_lr=5e-3)
     ts = jax.jit(S.make_train_step(cfg, opt), donate_argnums=(0,))
     params = M.init(cfg, jax.random.PRNGKey(0))
@@ -112,7 +116,15 @@ def train_variant(spec):
         state, m = ts(state, batch)
     ev = sum(recall_only_loss(state["params"], cfg, s)
              for s in range(5000, 5004)) / 4
-    return ev
+    # held-out NLL over ALL masked positions (recall answers + MLM stream):
+    # the quality axis of the policy sweep — policies share the global
+    # block (so recall alone cannot separate them) but differ in how the
+    # non-global budget is spent on the local stream
+    nll = 0.0
+    for s in range(6000, 6004):
+        batch = {k: jnp.asarray(v) for k, v in recall_batch(s).items()}
+        nll += float(M.loss_fn(state["params"], cfg, batch))
+    return ev, nll / 4
 
 
 REACH_SEQ = 1024
@@ -179,7 +191,98 @@ def fwd_bwd_bench():
     return times
 
 
-def main():
+POLICIES = ("bigbird", "importance", "littlebird")
+
+
+def policy_fwd_bwd(pol):
+    """Per-policy fwd and fwd+bwd wall-clock through the fused Pallas path.
+
+    Paper-sized blocks (64), causal, matched slot budget across policies —
+    the layouts differ only in where the non-global slots point, so fwd
+    cost is matched by construction; the backward differs through the
+    transposed map's padded width U (littlebird's regular window keeps the
+    in-degree exactly w+r, while random/importance picks concentrate on
+    low-index blocks and pad U up to ~w + r·log nb).
+    Returns (fwd_us, fwdbwd_us, U)."""
+    from repro.core import patterns
+    B, H, d = 1, 4, 32
+    spec = AttentionSpec(kind="bigbird", causal=True, block_size=64,
+                         num_window_blocks=3, num_global_blocks=2,
+                         num_random_blocks=3, impl="pallas", pattern=pol)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    cot = jnp.asarray(rng.standard_normal((B, H, FB_SEQ, d)), jnp.float32)
+    fwd = jax.jit(lambda q, k, v: attention(q, k, v, spec))
+    fb = jax.jit(jax.value_and_grad(
+        lambda q, k, v: jnp.sum(attention(q, k, v, spec) * cot),
+        argnums=(0, 1, 2)))
+    us_f, _ = time_call(fwd, q, k, v)
+    us_fb, (_, grads) = time_call(fb, q, k, v)
+    assert all(bool(jnp.isfinite(g).all()) for g in grads)
+    tq, _ = patterns.transposed_pattern(spec.bigbird_config(FB_SEQ), FB_SEQ)
+    return us_f, us_fb, tq.shape[1]
+
+
+def policy_sweep():
+    """NLL-vs-speed sweep over the registered pattern policies.
+
+    One row per policy: held-out masked NLL (+ recall-only NLL) after the
+    700-step MLM run on the recall corpus, per-step train wall-clock,
+    fused fwd/fwd+bwd kernel timings at S=1024, and a decode-throughput
+    row measured through the serving engine (benchmarks/serving.py's
+    decode_throughput — same engine, paged pool and kernels; only the
+    block layout changes).  A final verdict row per non-default policy
+    says whether it beats the default at matched quality or matched speed
+    — the evidence for promoting a policy to a registered config.
+    """
+    from benchmarks.serving import decode_throughput
+    out = {}
+    for pol in POLICIES:
+        spec = dataclasses.replace(_spec(3, 1, 2), pattern=pol)
+        t0 = time.perf_counter()
+        recall, nll = train_variant(spec)
+        train_us = (time.perf_counter() - t0) * 1e6 / STEPS
+        fwd_us, fb_us, U = policy_fwd_bwd(pol)
+        dcfg = dataclasses.replace(
+            _variant_cfg(dataclasses.replace(
+                spec, causal=True, num_random_blocks=2)),
+            name=f"sweep-{pol}")
+        params = M.init(dcfg, jax.random.PRNGKey(0))
+        ttft, dec = decode_throughput(dcfg, params, batch=4, prompt_len=128,
+                                      gen=16, max_len=256)
+        out[pol] = {"nll": nll, "recall": recall, "train_us": train_us,
+                    "fwd_us": fwd_us, "fb_us": fb_us, "dec": dec}
+        row(f"policy_{pol}", fb_us,
+            f"mlm_nll={nll:.4f};recall_nll={recall:.4f};"
+            f"train_us_step={train_us:.0f};fwd_us={fwd_us:.0f};"
+            f"fwdbwd_us={fb_us:.0f};bwd_U={U};decode_tok_s={dec:.1f};"
+            f"ttft_s={ttft:.3f}")
+    base = out["bigbird"]
+    for pol in POLICIES[1:]:
+        o = out[pol]
+        # wins = better NLL at matched (<= +2%) wall-clock, or matched
+        # (<= +2%) NLL at better wall-clock, on the fwd+bwd timing
+        win = ((o["nll"] < base["nll"] and o["fb_us"] <= base["fb_us"] * 1.02)
+               or (o["nll"] <= base["nll"] * 1.02
+                   and o["fb_us"] < base["fb_us"]))
+        row(f"policy_sweep_{pol}_vs_default", 0.0,
+            f"mlm_nll={o['nll']:.4f}_vs_{base['nll']:.4f};"
+            f"fwdbwd_us={o['fb_us']:.0f}_vs_{base['fb_us']:.0f};"
+            f"decode_tok_s={o['dec']:.1f}_vs_{base['dec']:.1f};wins={win}")
+    return out
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policies", action="store_true",
+                    help="run only the pattern-policy NLL-vs-speed sweep "
+                         "(default: the full Table-1 bench + the sweep)")
+    args = ap.parse_args(argv)
+    if args.policies:
+        return policy_sweep()
     results = {}
     # trainability: fwd+bwd wall-clock comparison (blockified vs fused kernel)
     fwd_bwd_bench()
@@ -199,10 +302,12 @@ def main():
     # so the exact reach metric above carries the Table-1 ordering claim)
     for name, spec in VARIANTS.items():
         t0 = time.perf_counter()
-        loss = train_variant(spec)
+        loss, _ = train_variant(spec)
         us = (time.perf_counter() - t0) * 1e6 / STEPS
         results[name] = loss
         row(f"tab1_{name}", us, f"recall_loss={loss:.4f}")
+    # NLL-vs-speed sweep over pattern policies (core/patterns.py)
+    results["policies"] = policy_sweep()
     return results
 
 

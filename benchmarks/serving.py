@@ -162,6 +162,32 @@ def _distill_draft(tcfg, tparams):
     return dcfg, state["params"], agree
 
 
+def decode_throughput(cfg, params, *, batch=4, prompt_len=128, gen=16,
+                      max_len=256):
+    """Warm TTFT + steady-state decode tok/s for one engine config.
+
+    The same measurement recipe as the ttft/decode section of main()
+    (warm generate(1)/generate(gen), then time both), packaged so other
+    benches — building_blocks.py's pattern-policy sweep — can report a
+    decode-throughput row per config without duplicating the protocol.
+    Returns (ttft_s, decode_tok_s)."""
+    engine = Engine(cfg, params, max_len=max_len, capacity=batch)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(4, cfg.vocab_size,
+                            size=prompt_len).astype(np.int32)
+               for _ in range(batch)]
+    engine.generate(prompts, max_new=1)
+    engine.generate(prompts, max_new=gen)
+    t0 = time.perf_counter()
+    engine.generate(prompts, max_new=1)
+    ttft = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    engine.generate(prompts, max_new=gen)
+    t_gen = time.perf_counter() - t0
+    dec_tps = batch * (gen - 1) / max(t_gen - ttft, 1e-9)
+    return ttft, dec_tps
+
+
 def _digest(results) -> str:
     """Schedule-independent hash of every request's token stream.  Ids are
     normalized to submission order so runs of the same workload through

@@ -78,6 +78,29 @@ def with_attn_impl(cfg: ModelConfig, impl: str) -> ModelConfig:
     return new
 
 
+def with_attn_pattern(cfg: ModelConfig, pattern: str) -> ModelConfig:
+    """Rewrite every BigBird AttentionSpec to use pattern policy ``pattern``.
+
+    Used by the launchers' --pattern flag: "bigbird" (paper layout, the
+    default), "importance" (Smart Bird-style scored block selection),
+    "littlebird" (sliding window + packed globals).  Window and
+    full-attention specs are left untouched — SWA is the window component
+    alone and has no policy choice to make.
+    """
+    def swap(spec):
+        if spec is not None and spec.kind == "bigbird":
+            return dataclasses.replace(spec, pattern=pattern)
+        return spec
+
+    layers = tuple(
+        dataclasses.replace(ls, attn=swap(ls.attn)) if ls.kind == "attn" else ls
+        for ls in cfg.layer_pattern)
+    new = dataclasses.replace(cfg, layer_pattern=layers, attn=swap(cfg.attn))
+    if getattr(cfg, "enc_attn", None) is not None:
+        new = dataclasses.replace(new, enc_attn=swap(cfg.enc_attn))
+    return new
+
+
 def is_subquadratic(cfg: ModelConfig) -> bool:
     """True if no layer in the reference config does full attention."""
     def full(spec):

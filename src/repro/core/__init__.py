@@ -1,3 +1,3 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Model-agnostic building blocks: attention dispatch, pattern policies
+(``core.patterns``), and the reference / blockified / chunked attention
+implementations the fused kernels are verified against."""

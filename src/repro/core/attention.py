@@ -33,6 +33,14 @@ __all__ = ["AttentionSpec", "attention"]
 
 @dataclasses.dataclass(frozen=True)
 class AttentionSpec:
+    """Per-layer attention choice: kind, sparsity geometry, impl, policy.
+
+    Frozen/hashable — model configs embed it and jit caches key on it.
+    ``pattern`` names a registered PatternPolicy (core/patterns.py) and
+    only applies to ``kind="bigbird"``; window layers always use the
+    default layout (SWA is the window component alone).
+    """
+
     kind: str = "full"                 # full | bigbird | window
     causal: bool = True
     # bigbird / window parameters (blocks)
@@ -43,9 +51,12 @@ class AttentionSpec:
     window_tokens: Optional[int] = None   # SWA: token window, rounded to blocks
     seed: int = 0
     impl: str = "blockified"           # reference | blockified | pallas | chunked
+    pattern: str = "bigbird"           # PatternPolicy name (core/patterns.py)
 
     def bigbird_config(self, seq_len: int) -> patterns.BigBirdConfig:
+        """Lower this spec to the BigBirdConfig the pattern builder keys on."""
         if self.kind == "window":
+            # SWA is the window component alone — always the default layout
             assert self.window_tokens is not None
             wb = -(-self.window_tokens // self.block_size)     # ceil
             if not self.causal and wb % 2 == 0:
@@ -60,7 +71,7 @@ class AttentionSpec:
             num_window_blocks=self.num_window_blocks,
             num_global_blocks=self.num_global_blocks,
             num_random_blocks=self.num_random_blocks,
-            causal=self.causal, seed=self.seed)
+            causal=self.causal, seed=self.seed, pattern=self.pattern)
 
 
 def attention(q, k, v, spec: AttentionSpec, layer: int = 0):
@@ -98,8 +109,7 @@ def attention(q, k, v, spec: AttentionSpec, layer: int = 0):
             q, k, v = zeros(q), zeros(k), zeros(v)
         Sp = S + pad
         nb = Sp // b
-        if (cfg.num_global_blocks + cfg.num_window_blocks
-                + cfg.num_random_blocks) > nb:
+        if not patterns.fits(cfg, nb):
             # pattern covers the whole (small) sequence: exact full attention
             return chunked_full.chunked_full_attention(
                 q[:, :, :S], k[:, :, :S], v[:, :, :S], causal=spec.causal)

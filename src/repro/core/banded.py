@@ -37,6 +37,7 @@ def banded_window_attention(q, k, v, window: int, *, q_chunk: int = 512):
 
     @jax.checkpoint
     def q_step(_, qi_qc):
+        """One query chunk against its static-width key/value band."""
         qi, qc = qi_qc
         start = jnp.clip(qi * q_chunk + q_chunk - band, 0, S - band)
         kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=2)

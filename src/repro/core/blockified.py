@@ -30,6 +30,10 @@ __all__ = ["bigbird_attention_blockified"]
 def _pack_slots(xb, pat: patterns.BlockPattern):
     """xb: (B, Hkv, nb, b, d) -> packed (B, Hkv, nb, L, b, d) via roll/slice/take."""
     cfg = pat.cfg
+    if cfg.pattern != "bigbird":
+        # non-default policies own their slot layout: pack with one static
+        # (compile-time) index gather over the full (nb, L) slot map
+        return jnp.take(xb, jnp.asarray(pat.key_blocks), axis=2)
     g, w, r = cfg.num_global_blocks, cfg.num_window_blocks, cfg.num_random_blocks
     nb = pat.num_blocks
     parts = []
@@ -58,8 +62,8 @@ def _slot_masks(pat: patterns.BlockPattern):
     L = pat.slots
     diag = np.ones((b, L * b), dtype=bool)
     if cfg.causal:
-        # the offset-0 window slot is the last window slot for causal patterns
-        dslot = cfg.num_global_blocks + cfg.num_window_blocks - 1
+        # the policy names the slot holding the query's own block
+        dslot = patterns.diag_slot(cfg)
         diag[:, dslot * b:(dslot + 1) * b] = np.tril(np.ones((b, b), dtype=bool))
     return jnp.asarray(block_mask), jnp.asarray(diag)
 

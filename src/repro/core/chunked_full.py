@@ -45,9 +45,11 @@ def chunked_full_attention(q, k, v, *, causal: bool = False,
 
     @jax.checkpoint
     def q_step(_, qi_qc):
+        """Stream all key chunks past one query chunk (flash softmax)."""
         qi, qc = qi_qc                                    # qc: (B,Hq,qcnk,d)
 
         def k_step(carry, ki_kc):
+            """Fold one key/value chunk into the running (m, l, acc)."""
             m, l, acc = carry
             ki, kc, vc = ki_kc
             s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc,

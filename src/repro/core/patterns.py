@@ -1,8 +1,9 @@
-"""Block-sparse attention pattern algebra for BigBird.
+"""Block-sparse attention patterns for BigBird, as pluggable policies.
 
 The paper (Sec. 2, App. D) defines attention as a directed graph D over token
 positions; BigBird "blockifies" it: the sequence is split into ``nb = n / b``
-blocks and the pattern is expressed block-to-block.  Three components:
+blocks and the pattern is expressed block-to-block.  The default policy is the
+paper's three components:
 
   * window  — query block j attends key blocks j-(w-1)/2 .. j+(w-1)/2
               (circular, matching the paper's rolled key tensor, Fig. 5);
@@ -14,8 +15,28 @@ blocks and the pattern is expressed block-to-block.  Three components:
               per (layer, head) with a fixed seed, avoiding window/global/self
               so no key block is duplicated inside the packed tensor.
 
-Everything here is **static** (numpy, host-side): patterns are compile-time
-constants, which is what makes the TPU kernel gather-free.
+The *layout* is owned by a :class:`PatternPolicy` selected via
+``BigBirdConfig.pattern``.  Registered policies (see DESIGN.md §Pattern
+policies for the full contract):
+
+  * ``"bigbird"``    — the paper's window+global+random layout (default).
+  * ``"importance"`` — Smart Bird-style scored selection: the r random slots
+                       are replaced by the top-r blocks under a cheap
+                       deterministic importance proxy (dyadic-distance
+                       scoring).  Frozen-selection mode: the chosen pattern
+                       is static, so it trains straight through the
+                       ``custom_vjp`` Pallas kernels unchanged.
+  * ``"littlebird"`` — LittleBird-style layout: the random budget is folded
+                       into a wider sliding window (w+r blocks) next to the
+                       packed global blocks; same slot count as the default,
+                       so wall-clock per step is matched.
+
+Every policy emits the same artifacts the rest of the stack consumes — a
+:class:`BlockPattern` (forward slot map), a transposed map for the dK/dV
+backward kernels, and causal rows that are *prefix-stable* under growing
+sequence length (required by chunked prefill and paged decode).  Everything
+here is **static** (numpy, host-side): patterns are compile-time constants,
+which is what makes the TPU kernel gather-free.
 """
 from __future__ import annotations
 
@@ -27,18 +48,31 @@ import numpy as np
 __all__ = [
     "BigBirdConfig",
     "BlockPattern",
+    "PatternPolicy",
     "build_pattern",
     "dense_mask",
+    "diag_slot",
+    "fits",
+    "get_policy",
+    "min_blocks",
+    "register_policy",
+    "registered_policies",
     "transposed_pattern",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class BigBirdConfig:
-    """Static description of a BigBird attention pattern.
+    """Static description of a block-sparse attention pattern.
 
     Counts are in *blocks*, following App. D (paper base config:
-    block 64, g = 2 blocks, w = 3 blocks, r = 3 blocks).
+    block 64, g = 2 blocks, w = 3 blocks, r = 3 blocks).  ``pattern`` names
+    the registered :class:`PatternPolicy` that turns these counts into a
+    slot layout; the default ``"bigbird"`` is the paper's layout.  Instances
+    are frozen and hashable — they key the ``build_pattern`` cache, ride
+    inside ``jax.custom_vjp`` nondiff args, and are part of the serving
+    engine's graph keys, so two configs that compare equal must always
+    produce bit-identical patterns.
     """
 
     block_size: int = 64
@@ -47,23 +81,24 @@ class BigBirdConfig:
     num_random_blocks: int = 3
     causal: bool = False
     seed: int = 0
+    pattern: str = "bigbird"        # registered PatternPolicy name
 
     def __post_init__(self):
-        if not self.causal and self.num_window_blocks % 2 == 0:
-            raise ValueError("non-causal window must be odd (w/2 each side)")
         if self.block_size < 1:
             raise ValueError("block_size must be >= 1")
+        get_policy(self.pattern).check(self)
 
     def validate(self, seq_len: int) -> None:
+        """Raise ValueError unless the pattern fits a ``seq_len`` sequence."""
         if seq_len % self.block_size != 0:
             raise ValueError(
                 f"seq_len {seq_len} not divisible by block {self.block_size}")
         nb = seq_len // self.block_size
-        if self.num_global_blocks + self.num_window_blocks + self.num_random_blocks > nb:
+        need = get_policy(self.pattern).min_blocks(self)
+        if need > nb:
             raise ValueError(
-                f"pattern ({self.num_global_blocks}+{self.num_window_blocks}+"
-                f"{self.num_random_blocks} blocks) larger than sequence ({nb} blocks); "
-                "use full attention instead")
+                f"pattern {self.pattern!r} needs {need} blocks, sequence has "
+                f"{nb}; use full attention instead")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +108,9 @@ class BlockPattern:
     ``key_blocks[j, t]``  : index of the t-th key block for query block j.
     ``key_mask[j, t]``    : False where the slot is a duplicate / out of range
                             (masked out of the softmax).
-    Slot layout along t: [g globals | w window | r random].
+    Slot layout along t is policy-owned (default: [g globals | w window |
+    r random]); consumers must treat it as opaque except for the contract
+    exposed through :func:`diag_slot`.
     Global *query* rows (j < g) additionally attend to every block; they are
     recomputed densely by the caller (paper: "the first row-block ... computed
     by direct multiplication").
@@ -87,6 +124,7 @@ class BlockPattern:
 
     @property
     def slots(self) -> int:
+        """Number of key-block slots L per query block."""
         return self.key_blocks.shape[1]
 
     def token_level_slot_mask(self) -> np.ndarray:
@@ -95,7 +133,105 @@ class BlockPattern:
         return np.repeat(self.key_mask, b, axis=1)
 
 
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+class PatternPolicy:
+    """A block-sparse layout family, selected by ``BigBirdConfig.pattern``.
+
+    Subclasses own the slot layout.  The contract every policy must satisfy
+    (DESIGN.md §Pattern policies; property-tested in tests/test_patterns.py):
+
+      * ``build`` returns a :class:`BlockPattern` whose masked slots, plus
+        the dense global query/key rows, equal the policy's intended
+        token-level adjacency (:func:`dense_mask` is derived from it).
+      * Causal rows must be *prefix-stable*: row j of ``build(cfg, S1)``
+        equals row j of ``build(cfg, S2)`` for every j both contain.  Paged
+        decode and chunked prefill rebuild the pattern at growing cache
+        lengths and assume earlier rows never change.
+      * The only slot that may reference the query's own block is the one
+        named by ``diag_slot`` (causal kernels apply the triangular mask
+        there and nowhere else).
+      * ``build`` must be a pure function of ``(cfg, seq_len, layer, head)``
+        — results are cached and shared across the serving engine's graphs.
+    """
+
+    name = "?"
+
+    def check(self, cfg: BigBirdConfig) -> None:
+        """Reject configs the policy cannot realise (called from __post_init__)."""
+
+    def min_blocks(self, cfg: BigBirdConfig) -> int:
+        """Smallest block count the pattern fits; fewer -> full attention."""
+        return (cfg.num_global_blocks + cfg.num_window_blocks
+                + cfg.num_random_blocks)
+
+    def diag_slot(self, cfg: BigBirdConfig) -> int:
+        """Slot index holding the query's own block for causal patterns.
+
+        Causal kernels refine exactly this slot with the intra-block
+        triangular mask; -1 means no slot needs refinement (non-causal).
+        """
+        return -1
+
+    def build(self, cfg: BigBirdConfig, seq_len: int,
+              layer: int, head: int) -> BlockPattern:
+        """Materialise the slot map; called via the cached :func:`build_pattern`."""
+        raise NotImplementedError
+
+
+_POLICIES: dict = {}
+
+
+def register_policy(policy: PatternPolicy) -> PatternPolicy:
+    """Register ``policy`` under ``policy.name`` (last registration wins)."""
+    _POLICIES[policy.name] = policy
+    return policy
+
+
+def get_policy(name: str) -> PatternPolicy:
+    """Look up a registered policy; raises ValueError with the known names."""
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown pattern policy {name!r}; registered: "
+            f"{sorted(_POLICIES)}") from None
+
+
+def registered_policies() -> tuple:
+    """Names of all registered policies, sorted."""
+    return tuple(sorted(_POLICIES))
+
+
+def diag_slot(cfg: BigBirdConfig) -> int:
+    """Policy-dispatched :meth:`PatternPolicy.diag_slot` for ``cfg``."""
+    return get_policy(cfg.pattern).diag_slot(cfg)
+
+
+def min_blocks(cfg: BigBirdConfig) -> int:
+    """Policy-dispatched :meth:`PatternPolicy.min_blocks` for ``cfg``."""
+    return get_policy(cfg.pattern).min_blocks(cfg)
+
+
+def fits(cfg: BigBirdConfig, num_blocks: int) -> bool:
+    """True if the pattern fits a ``num_blocks``-block sequence.
+
+    Callers (attention dispatch, bounded decode, engine graph keys) fall
+    back to exact full attention when this is False.
+    """
+    return num_blocks >= 0 and min_blocks(cfg) <= num_blocks
+
+
+# ---------------------------------------------------------------------------
+# shared layout helpers
+# ---------------------------------------------------------------------------
+
+
 def _window_offsets(cfg: BigBirdConfig) -> np.ndarray:
+    """Window block offsets for the default layout (causal: trailing w)."""
     w = cfg.num_window_blocks
     if cfg.causal:
         return np.arange(-(w - 1), 1)          # j-w+1 .. j
@@ -103,18 +239,18 @@ def _window_offsets(cfg: BigBirdConfig) -> np.ndarray:
     return np.arange(-half, half + 1)          # j-w/2 .. j+w/2
 
 
-@functools.lru_cache(maxsize=256)
-def build_pattern(cfg: BigBirdConfig, seq_len: int,
-                  layer: int = 0, head: int = 0) -> BlockPattern:
-    """Build the static block pattern (cached: it is pure and reused often)."""
-    cfg.validate(seq_len)
-    b = cfg.block_size
-    nb = seq_len // b
-    g, w, r = cfg.num_global_blocks, cfg.num_window_blocks, cfg.num_random_blocks
-    offs = _window_offsets(cfg)
+def _global_window_slots(cfg: BigBirdConfig, nb: int, offs: np.ndarray,
+                         extra: int):
+    """Fill the [g globals | window | extra] layout shared by the policies.
 
-    key_blocks = np.zeros((nb, g + w + r), dtype=np.int32)
-    key_mask = np.zeros((nb, g + w + r), dtype=bool)
+    Returns ``(key_blocks, key_mask, win_idx)`` with the trailing ``extra``
+    slots zeroed/masked for the caller to fill.  ``win_idx`` is the (nb, w)
+    window map after clipping/wrapping, needed to avoid duplicates.
+    """
+    g = cfg.num_global_blocks
+    w = len(offs)
+    key_blocks = np.zeros((nb, g + w + extra), dtype=np.int32)
+    key_mask = np.zeros((nb, g + w + extra), dtype=bool)
 
     # --- global slots -------------------------------------------------------
     key_blocks[:, :g] = np.arange(g)[None, :]
@@ -133,44 +269,179 @@ def build_pattern(cfg: BigBirdConfig, seq_len: int,
     win_valid &= win_idx >= g
     key_blocks[:, g:g + w] = win_idx
     key_mask[:, g:g + w] = win_valid
+    return key_blocks, key_mask, win_idx
 
-    # --- random slots -------------------------------------------------------
-    # Seeded PER ROW (not per total length): causal patterns are then
-    # *prefix-stable* — build_pattern(cfg, S1) rows agree with
-    # build_pattern(cfg, S2) rows for every shared block.  This is what makes
-    # prefill (prompt length) and bounded decode (cache length) attend the
-    # same random graph.
-    if r > 0:
-        for jj in range(nb):
-            rng = np.random.default_rng(
-                np.random.SeedSequence([cfg.seed, layer, head, jj]))
-            forbidden = set(range(g)) | {int(x) for x in win_idx[jj]} | {jj}
-            hi = jj if cfg.causal else nb          # sample in [g, hi)
-            n_free = max(hi - g - sum(1 for f in forbidden if g <= f < hi), 0)
-            take = min(r, n_free)
-            if take == 0:
-                continue
-            if hi - g <= 4 * (r + len(forbidden)):
-                # small range: explicit candidate list
-                cand = np.array([c for c in range(g, hi) if c not in forbidden])
-                pick = rng.choice(cand, size=take, replace=False)
-            else:
-                # large range: rejection sampling, O(r) expected
-                picks: list = []
-                seen = set(forbidden)
-                while len(picks) < take:
-                    for c in rng.integers(g, hi, size=2 * take):
-                        ci = int(c)
-                        if ci not in seen:
-                            seen.add(ci)
-                            picks.append(ci)
-                            if len(picks) == take:
-                                break
-                pick = np.array(picks)
-            key_blocks[jj, g + w:g + w + take] = pick
-            key_mask[jj, g + w:g + w + take] = True
-    return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
-                        key_blocks=key_blocks, key_mask=key_mask)
+
+class BigBirdPolicy(PatternPolicy):
+    """The paper's layout: [g globals | w window | r random] (default)."""
+
+    name = "bigbird"
+
+    def check(self, cfg: BigBirdConfig) -> None:
+        """Non-causal windows must be odd so w/2 sits on each side."""
+        if not cfg.causal and cfg.num_window_blocks % 2 == 0:
+            raise ValueError("non-causal window must be odd (w/2 each side)")
+
+    def diag_slot(self, cfg: BigBirdConfig) -> int:
+        """Causal: the offset-0 window slot is the last window slot."""
+        return (cfg.num_global_blocks + cfg.num_window_blocks - 1
+                if cfg.causal else -1)
+
+    def build(self, cfg: BigBirdConfig, seq_len: int,
+              layer: int, head: int) -> BlockPattern:
+        """Globals + window + per-row seeded random slots (App. D)."""
+        b = cfg.block_size
+        nb = seq_len // b
+        g, w, r = (cfg.num_global_blocks, cfg.num_window_blocks,
+                   cfg.num_random_blocks)
+        key_blocks, key_mask, win_idx = _global_window_slots(
+            cfg, nb, _window_offsets(cfg), r)
+
+        # --- random slots ---------------------------------------------------
+        # Seeded PER ROW (not per total length): causal patterns are then
+        # *prefix-stable* — build_pattern(cfg, S1) rows agree with
+        # build_pattern(cfg, S2) rows for every shared block.  This is what
+        # makes prefill (prompt length) and bounded decode (cache length)
+        # attend the same random graph.
+        if r > 0:
+            for jj in range(nb):
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([cfg.seed, layer, head, jj]))
+                forbidden = set(range(g)) | {int(x) for x in win_idx[jj]} | {jj}
+                hi = jj if cfg.causal else nb          # sample in [g, hi)
+                n_free = max(hi - g - sum(1 for f in forbidden if g <= f < hi), 0)
+                take = min(r, n_free)
+                if take == 0:
+                    continue
+                if hi - g <= 4 * (r + len(forbidden)):
+                    # small range: explicit candidate list
+                    cand = np.array([c for c in range(g, hi) if c not in forbidden])
+                    pick = rng.choice(cand, size=take, replace=False)
+                else:
+                    # large range: rejection sampling, O(r) expected
+                    picks: list = []
+                    seen = set(forbidden)
+                    while len(picks) < take:
+                        for c in rng.integers(g, hi, size=2 * take):
+                            ci = int(c)
+                            if ci not in seen:
+                                seen.add(ci)
+                                picks.append(ci)
+                                if len(picks) == take:
+                                    break
+                    pick = np.array(picks)
+                key_blocks[jj, g + w:g + w + take] = pick
+                key_mask[jj, g + w:g + w + take] = True
+        return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
+                            key_blocks=key_blocks, key_mask=key_mask)
+
+
+class ImportancePolicy(BigBirdPolicy):
+    """Smart Bird-style scored selection in place of the random slots.
+
+    Globals and window are identical to the default layout; the r random
+    slots are instead the top-r candidate blocks under a cheap importance
+    proxy: candidates at dyadic (power-of-two) block distances score
+    highest, larger reach preferred, ties broken toward lower block index.
+    The selection is *frozen* (a pure function of the query-block index):
+    this is the straight-through mode — gradients flow through the selected
+    values exactly as for any static pattern, so the ``custom_vjp`` Pallas
+    kernels train it unchanged.  Causal rows depend only on blocks strictly
+    left of the query, so they are prefix-stable by construction.
+    """
+
+    name = "importance"
+
+    def build(self, cfg: BigBirdConfig, seq_len: int,
+              layer: int, head: int) -> BlockPattern:
+        """Globals + window + top-r dyadic-importance slots."""
+        b = cfg.block_size
+        nb = seq_len // b
+        g, w, r = (cfg.num_global_blocks, cfg.num_window_blocks,
+                   cfg.num_random_blocks)
+        key_blocks, key_mask, win_idx = _global_window_slots(
+            cfg, nb, _window_offsets(cfg), r)
+
+        if r > 0:
+            for jj in range(nb):
+                forbidden = set(range(g)) | {int(x) for x in win_idx[jj]} | {jj}
+                hi = jj if cfg.causal else nb          # candidates in [g, hi)
+                cand = np.array(
+                    [c for c in range(g, hi) if c not in forbidden],
+                    dtype=np.int64)
+                if cand.size == 0:
+                    continue
+                dist = np.abs(jj - cand).astype(np.float64)
+                ld = np.log2(dist)
+                # dyadic alignment dominates (0 at exact powers of two),
+                # then larger reach; stable argsort makes ties deterministic
+                score = -np.abs(ld - np.round(ld)) * 1e3 + ld
+                order = np.argsort(-score, kind="stable")
+                pick = cand[order[:r]]
+                take = len(pick)
+                key_blocks[jj, g + w:g + w + take] = pick
+                key_mask[jj, g + w:g + w + take] = True
+        return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
+                            key_blocks=key_blocks, key_mask=key_mask)
+
+
+class LittleBirdPolicy(PatternPolicy):
+    """LittleBird-style layout: packed globals + a wider sliding window.
+
+    The random budget is folded into the window — the layout is
+    [g globals | (w + r) window], the same total slot count as the default,
+    so wall-clock per step is matched.  The packed-global projection of
+    LittleBird is realised by the existing ITC global blocks (as with ETC,
+    packing extra learned globals is a model-level concern).  Non-causal
+    even-width windows split asymmetrically (one extra block to the left),
+    so any (w, r) budget is accepted.
+    """
+
+    name = "littlebird"
+
+    def _offsets(self, cfg: BigBirdConfig) -> np.ndarray:
+        we = cfg.num_window_blocks + cfg.num_random_blocks
+        if cfg.causal:
+            return np.arange(-(we - 1), 1)     # j-we+1 .. j
+        left = we // 2
+        return np.arange(-left, we - left)     # len we, contains 0
+
+    def diag_slot(self, cfg: BigBirdConfig) -> int:
+        """Causal: offset-0 slot is the last slot of the widened window."""
+        return (cfg.num_global_blocks + cfg.num_window_blocks
+                + cfg.num_random_blocks - 1 if cfg.causal else -1)
+
+    def build(self, cfg: BigBirdConfig, seq_len: int,
+              layer: int, head: int) -> BlockPattern:
+        """Globals + widened window; no data-dependent or random slots."""
+        nb = seq_len // cfg.block_size
+        key_blocks, key_mask, _ = _global_window_slots(
+            cfg, nb, self._offsets(cfg), 0)
+        return BlockPattern(cfg=cfg, seq_len=seq_len, num_blocks=nb,
+                            key_blocks=key_blocks, key_mask=key_mask)
+
+
+register_policy(BigBirdPolicy())
+register_policy(ImportancePolicy())
+register_policy(LittleBirdPolicy())
+
+
+# ---------------------------------------------------------------------------
+# cached builders (the public entry points)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def build_pattern(cfg: BigBirdConfig, seq_len: int,
+                  layer: int = 0, head: int = 0) -> BlockPattern:
+    """Build the static block pattern (cached: it is pure and reused often).
+
+    Dispatches to the policy named by ``cfg.pattern``.  Returns a
+    :class:`BlockPattern` with ``key_blocks`` (nb, L) int32 and ``key_mask``
+    (nb, L) bool, where ``nb = seq_len // cfg.block_size``.
+    """
+    cfg.validate(seq_len)
+    return get_policy(cfg.pattern).build(cfg, seq_len, layer, head)
 
 
 @functools.lru_cache(maxsize=256)
@@ -178,16 +449,20 @@ def transposed_pattern(cfg: BigBirdConfig, seq_len: int,
                        layer: int = 0, head: int = 0):
     """Transposed slot map for the backward pass: queries *per key block*.
 
-    Only the window/random slots (t >= g) of non-global query rows (j >= g)
+    Only the non-global slots (t >= g) of non-global query rows (j >= g)
     are transposed: the global slots (key blocks < g, referenced by every
     query row) have dense in-degree nb and get their own reduction kernel,
     and the global *query* rows (j < g) are recomputed densely — their
     sparse-kernel gradient is identically zero, so their edges would only
     pad the map.  Keeping both out bounds the padded width U by the max
     window+random in-degree: exactly O(w + r) for non-causal patterns;
-    causal random picks concentrate on low-index key blocks, so U grows
-    ~ w + r·log(nb) there (dead cells are masked, total padded work
+    causal random/importance picks concentrate on low-index key blocks, so
+    U grows ~ w + r·log(nb) there (dead cells are masked, total padded work
     O(S log S) worst-case — still far below the O(S^2) of a dense map).
+
+    Policy-generic: derived from ``build_pattern``'s output, so it is the
+    exact inverse of the forward map for every registered policy
+    (property-tested in tests/test_patterns.py).
 
     Returns ``(tq, tmask)``:
       tq    (nb, U) int32 — query block indices attending key block i,
@@ -215,7 +490,8 @@ def dense_mask(pat: BlockPattern) -> np.ndarray:
     """(n, n) boolean adjacency A[i, j'] — the oracle the kernels must match.
 
     Includes the global-rows rule (query rows in global blocks attend to all)
-    and, if causal, the intersection with the causal mask.
+    and, if causal, the intersection with the causal mask.  Policy-generic:
+    any :class:`BlockPattern` expands the same way.
     """
     cfg, b, nb, n = pat.cfg, pat.cfg.block_size, pat.num_blocks, pat.seq_len
     g = cfg.num_global_blocks

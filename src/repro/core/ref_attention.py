@@ -53,6 +53,7 @@ def bigbird_attention_reference(q, k, v, cfg: patterns.BigBirdConfig,
 
 
 def full_attention_reference(q, k, v, causal: bool = False):
+    """Dense O(S^2) attention oracle; q (B,Hq,S,d), k/v (B,Hkv,S,d)."""
     b_, hq, sq, d = q.shape
     sk = k.shape[2]
     k = repeat_kv(k, hq)

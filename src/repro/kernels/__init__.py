@@ -1,3 +1,3 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for compute hot-spots (fused BigBird block-sparse
+attention fwd/bwd, paged decode, ragged prefill) plus pure-JAX references
+used for interpret-mode parity tests."""

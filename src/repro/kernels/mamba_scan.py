@@ -37,6 +37,7 @@ def _kernel(u_ref, dt_ref, b_ref, c_ref, nega_ref, dskip_ref, y_ref, s_ref,
     dskip = dskip_ref[...].astype(F32)                     # (1, dib)
 
     def body(i, _):
+        """Advance the SSM state one timestep within the chunk."""
         u = u_ref[0, i].astype(F32)                        # (dib,)
         dt = dt_ref[0, i].astype(F32)
         b = b_ref[0, i].astype(F32)                        # (st,)

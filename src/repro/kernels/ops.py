@@ -62,8 +62,9 @@ def _overwrite_global_rows(out, q, k, v, cfg, grp):
 
 
 def _diag_slot(cfg):
-    return (cfg.num_global_blocks + cfg.num_window_blocks - 1
-            if cfg.causal else -1)
+    # policy-owned: the slot that references the query's own block (the one
+    # the causal kernels refine with the triangular mask) depends on layout
+    return patterns.diag_slot(cfg)
 
 
 def _fused_fwd(q, k, v, cfg, layer, interpret):

@@ -35,6 +35,7 @@ def wkv6_ref(r, k, v, w, u):
     uf = u.astype(jnp.float32)
 
     def step(s, xs):
+        """One WKV recurrence step: emit y_t, decay and rank-1-update s."""
         rt, kt, vt, wt = xs                               # (B, H, D)
         # y[b,h,dv] = sum_dk rt[b,h,dk] * (s[b,h,dk,dv] + u[h,dk]*kt[b,h,dk]*vt[b,h,dv])
         y = jnp.einsum("bhk,bhkv->bhv", rt, s)

@@ -32,6 +32,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk: int):
     u = u_ref[0].astype(jnp.float32)                       # (D,)
 
     def body(t, _):
+        """One WKV recurrence step over the (D, D) state in VMEM."""
         r = r_ref[0, t].astype(jnp.float32)                # (D,)
         k = k_ref[0, t].astype(jnp.float32)
         v = v_ref[0, t].astype(jnp.float32)
@@ -52,7 +53,8 @@ def wkv6_pallas(r, k, v, w, u, *, chunk: int = 64, interpret: bool = False):
     B, T, H, D = r.shape
     assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
 
-    def flat(x):  # (B,T,H,D) -> (B*H, T, D)
+    def flat(x):
+        """(B,T,H,D) -> (B*H, T, D)."""
         return x.transpose(0, 2, 1, 3).reshape(B * H, T, D)
 
     rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)

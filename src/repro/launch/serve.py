@@ -87,6 +87,11 @@ def main(argv=None):
                     help="swap cold residents' KV pages to host memory "
                          "under page pressure instead of queuing "
                          "(unsharded engines only)")
+    ap.add_argument("--pattern", default="bigbird",
+                    choices=["bigbird", "importance", "littlebird"],
+                    help="attention-pattern policy for bigbird layers "
+                         "(core/patterns.py; same engine, paged pool and "
+                         "kernels — only the block layout changes)")
     args = ap.parse_args(argv)
     assert sum(map(bool, (args.mesh, args.spec, args.stream))) <= 1, \
         "--mesh, --spec and --stream are separate demo paths; pick one"
@@ -99,6 +104,9 @@ def main(argv=None):
         eng_kw["host_swap"] = True
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if args.pattern != "bigbird":
+        from repro.configs.common import with_attn_pattern
+        cfg = with_attn_pattern(cfg, args.pattern)
     key = jax.random.PRNGKey(args.seed)
     params = M.init(cfg, key)
     max_len = args.prompt_len + args.gen

@@ -44,6 +44,12 @@ def main(argv=None):
                     choices=["pallas", "blockified", "reference"],
                     help="sparse-attention implementation (pallas = fused "
                          "kernels with custom_vjp backward, the default)")
+    ap.add_argument("--pattern", default="bigbird",
+                    choices=["bigbird", "importance", "littlebird"],
+                    help="attention-pattern policy for bigbird layers "
+                         "(core/patterns.py; importance = Smart Bird-style "
+                         "scored selection, littlebird = sliding window + "
+                         "packed globals)")
     ap.add_argument("--mlm", action="store_true", default=None)
     ap.add_argument("--grad-compress", action="store_true",
                     help="int8 error-feedback gradient sync over a pod "
@@ -72,8 +78,10 @@ def main(argv=None):
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.seq:
         cfg = dataclasses.replace(cfg, max_seq=max(cfg.max_seq, args.seq))
-    from repro.configs.common import with_attn_impl
+    from repro.configs.common import with_attn_impl, with_attn_pattern
     cfg = with_attn_impl(cfg, args.impl)
+    if args.pattern != "bigbird":
+        cfg = with_attn_pattern(cfg, args.pattern)
     mlm = args.mlm if args.mlm is not None else (args.arch == "bigbird-base")
 
     opt = S.make_optimizer(kind=configs.optimizer_for(args.arch),

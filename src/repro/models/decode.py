@@ -430,8 +430,7 @@ def _decode_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if use_bb:
         bb = spec.bigbird_config(S)
         nb = S // bb.block_size if S % bb.block_size == 0 else -1
-        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
-                      + bb.num_random_blocks) > nb:
+        if not patterns.fits(bb, nb):
             use_bb = False                 # cache too short for the pattern
     if page_tables is not None:
         if use_bb:
@@ -613,8 +612,7 @@ def _chunk_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if use_bb:
         bb = spec.bigbird_config(bucket_len)
         nbk = bucket_len // b if bucket_len % b == 0 else -1
-        if nbk < 0 or (bb.num_global_blocks + bb.num_window_blocks
-                       + bb.num_random_blocks) > nbk:
+        if not patterns.fits(bb, nbk):
             use_bb = False
 
     end = start + C
@@ -815,8 +813,7 @@ def _ragged_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     # cannot batch across rows at different offsets
     bb = spec.bigbird_config(bucket_len)
     nbk = bucket_len // b if bucket_len % b == 0 else -1
-    assert nbk >= 0 and (bb.num_global_blocks + bb.num_window_blocks
-                         + bb.num_random_blocks) <= nbk, \
+    assert patterns.fits(bb, nbk), \
         "ragged prefill requires the pattern to fit the prompt bucket"
 
     if spec.impl == "pallas":
@@ -999,8 +996,7 @@ def _verify_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if use_bb:
         bb = spec.bigbird_config(S)
         nb = S // bb.block_size if S % bb.block_size == 0 else -1
-        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
-                      + bb.num_random_blocks) > nb:
+        if not patterns.fits(bb, nb):
             use_bb = False
 
     if use_bb:
@@ -1165,8 +1161,7 @@ def _verify_tree_attn_layer(p, c, x, cfg: M.ModelConfig, spec: AttentionSpec,
     if use_bb:
         bb = spec.bigbird_config(S)
         nb = S // bb.block_size if S % bb.block_size == 0 else -1
-        if nb < 0 or (bb.num_global_blocks + bb.num_window_blocks
-                      + bb.num_random_blocks) > nb:
+        if not patterns.fits(bb, nb):
             use_bb = False
 
     if use_bb:

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import patterns
 from repro.models import decode as Dec
 from repro.models import model as M
 from repro.serve import sampling as Smp
@@ -270,9 +271,7 @@ class Engine:
             spec = self.cfg.attn_spec(ls)
             if spec.kind in ("bigbird", "window"):
                 bb = spec.bigbird_config(bl)
-                fits = (bb.num_global_blocks + bb.num_window_blocks
-                        + bb.num_random_blocks) <= nbk
-                key.append(bb if fits else "full")
+                key.append(bb if patterns.fits(bb, nbk) else "full")
             else:
                 key.append("full")
         return tuple(key)

@@ -1,0 +1,87 @@
+"""Markdown link/anchor checker for the repo docs (stdlib only).
+
+Run by the CI lint job:
+
+    python tools/check_docs.py README.md DESIGN.md
+
+Checks every inline link `[text](target)`:
+  * http(s)/mailto targets are skipped (no network in CI);
+  * relative file targets must exist on disk;
+  * `file#anchor` / `#anchor` targets must match a heading slug in the
+    target file (GitHub slug rules: lowercase, punctuation stripped,
+    spaces to hyphens).
+Exits non-zero listing every broken link.
+"""
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading)          # strip inline code
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)  # drop punctuation
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    """All heading anchors defined in a markdown file."""
+    out = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING.match(line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def check(files):
+    """Return a list of (file, link, reason) for every broken link."""
+    errors = []
+    for name in files:
+        doc = pathlib.Path(name)
+        if not doc.is_file():
+            errors.append((name, "-", "doc file missing"))
+            continue
+        in_fence = False
+        for line in doc.read_text().splitlines():
+            if CODE_FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                file_part, _, anchor = target.partition("#")
+                base = (doc.parent / file_part) if file_part else doc
+                if not base.exists():
+                    errors.append((name, target, "missing file"))
+                    continue
+                if anchor and base.suffix == ".md":
+                    if slugify(anchor) not in anchors_of(base):
+                        errors.append((name, target, "missing anchor"))
+    return errors
+
+
+def main(argv):
+    files = argv or ["README.md", "DESIGN.md"]
+    errors = check(files)
+    for doc, link, why in errors:
+        print(f"{doc}: broken link `{link}` ({why})")
+    print(f"check_docs: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
