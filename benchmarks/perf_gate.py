@@ -62,6 +62,13 @@ KV-compression metrics (benchmarks/serving.py --kv-dtype int8,
   `max_concurrency_paged` (a compressed pool that cannot outpack the
   uncompressed one has lost its reason to exist).
 
+Observability overhead (active once the baseline carries
+`continuous_tok_s_metrics_off`): the bench times the same continuous
+wave with the metrics registry on and off IN THE SAME RUN, and the
+instrumented arm must hold >= (1 - METRICS_OVERHEAD_TOL) of the
+disabled arm's tok/s.  Fresh-vs-fresh, so runner speed cancels — this
+is a hard gate on the cost of obs/, not a noisy timing band.
+
 Exit code 0 = within bands, 1 = regression, 2 = usage/parse error.
 
 Re-baselining: land the new numbers in
@@ -92,6 +99,13 @@ TRAINED_ACCEPT_FLOOR = 0.35  # hard absolute floor for trained drafts
 #                          provider, whose baseline is legitimately small.
 INT8_NLL_ABS_CEIL = 0.1  # int8 NLL inflation ceiling (nats/token), floor of
 #                          the relative band 2x|baseline| for tiny baselines
+METRICS_OVERHEAD_TOL = 0.03  # metrics-on continuous tok/s must stay within
+#                          3% of metrics-off.  Both arms come from the SAME
+#                          fresh run (benchmarks/serving.py times extra
+#                          waves with the registry disabled), so this gate
+#                          compares fresh-vs-fresh and is immune to runner
+#                          speed — it is a hard ceiling on what the
+#                          observability layer may cost, not a timing band.
 
 
 def parse_serving_json(text: str) -> dict:
@@ -189,6 +203,26 @@ def check(fresh: dict, base: dict, timing_band: float) -> list:
                 f"spec_continuous_tok_s {fresh['spec_continuous_tok_s']} vs "
                 f"baseline {base['spec_continuous_tok_s']} "
                 f"(band {timing_band}x)"
+            )
+
+    # metrics-overhead gate, active once the baseline carries the off arm:
+    # within ONE fresh run, the instrumented continuous wave must hold
+    # >= (1 - 3%) of the registry-disabled wave's throughput
+    if "continuous_tok_s_metrics_off" in base:
+        on = fresh.get("continuous_tok_s_metrics_on")
+        off = fresh.get("continuous_tok_s_metrics_off")
+        if on is None or off is None:
+            bad.append(
+                "metrics overhead arms missing from fresh run "
+                "(continuous_tok_s_metrics_on/off: benchmarks/serving.py "
+                "must time the metrics-off waves)"
+            )
+        elif on < off * (1.0 - METRICS_OVERHEAD_TOL):
+            bad.append(
+                f"metrics overhead: continuous_tok_s_metrics_on {on} vs "
+                f"metrics_off {off} (hard gate: within "
+                f"{METRICS_OVERHEAD_TOL:.0%} — the observability layer "
+                f"got too expensive)"
             )
 
     # host-swap gates: the swap tier is exact by construction, so digest

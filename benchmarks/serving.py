@@ -82,6 +82,8 @@ from repro.core.attention import AttentionSpec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as S
 from repro.models import model as M
+from repro.obs import metrics as Om
+from repro.obs import trace as Otr
 from repro.serve import AsyncEngine, Engine, Request, SamplingSpec, SpecConfig
 
 B, PROMPT, GEN, MAXLEN = 4, 256, 24, 512
@@ -223,6 +225,14 @@ def main(argv=None):
     ap.add_argument("--host-swap", action="store_true",
                     help="also run the workload on a starved pool with the "
                          "host-memory swap tier (digest-gated)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record per-request timelines + engine phase spans "
+                         "during the measured sections and write Chrome "
+                         "trace-event JSON here (perfetto-loadable)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live Prometheus metrics while the bench "
+                         "runs (0 = ephemeral port) and self-scrape "
+                         "/metrics at the end (metrics_endpoint_ok)")
     args = ap.parse_args(argv)
     assert not ((args.kv_dtype or args.host_swap)
                 and args.mesh and args.mesh != "1x1"), \
@@ -233,6 +243,12 @@ def main(argv=None):
         from repro.serve import mesh as Mx
         mesh = Mx.parse_mesh(args.mesh)
         mesh_name = args.mesh
+
+    mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import server as Osrv
+        mserver = Osrv.start_metrics_server(args.metrics_port)
+        print(f"# metrics: http://127.0.0.1:{mserver.port}/metrics")
 
     cfg, params = _build()
     engine = Engine(cfg, params, max_len=MAXLEN, capacity=B, mesh=mesh)
@@ -281,19 +297,62 @@ def main(argv=None):
     engine.drain()
     engine.pool.reset_stats()
 
-    reqs = make_reqs(0)
-    for r in reqs[:B]:
-        engine.submit(r)
-    engine.step()                      # first wave in flight
-    t0 = time.perf_counter()
-    for r in reqs[B:]:
-        engine.submit(r)               # second wave admitted as pages free
-    results = engine.drain()
-    t_cb = time.perf_counter() - t0
+    def _wave(eng):
+        """One timed continuous-batching wave: first B requests in flight,
+        the rest admitted as pages free.  Every wave serves the same
+        prompts and seeds, so wave digests must all match."""
+        reqs = make_reqs(0)
+        for r in reqs[:B]:
+            eng.submit(r)
+        eng.step()                     # first wave in flight
+        t0 = time.perf_counter()
+        for r in reqs[B:]:
+            eng.submit(r)              # second wave admitted as pages free
+        res = eng.drain()
+        return res, time.perf_counter() - t0
+
+    # the warmup's observations would pollute the continuous percentiles:
+    # reset the registry so serve_* histograms hold only the timed wave
+    Om.REGISTRY.reset()
+    if args.trace:
+        Otr.enable()
+    results, t_cb = _wave(engine)
     cb_toks = sum(len(r.tokens) for r in results)
     cb_tps = cb_toks / max(t_cb, 1e-9)
     mean_tpot = float(np.mean([r.tpot_s for r in results]))
     mean_ttft = float(np.mean([r.ttft_s for r in results]))
+    # continuous-section tail latency, straight from the obs histograms
+    # the engine recorded during the timed wave (log-bucket interpolation,
+    # obs/metrics.Histogram.quantile)
+    h_ttft = Om.REGISTRY.get("serve_ttft_seconds")
+    h_tpot = Om.REGISTRY.get("serve_tpot_seconds")
+    cont_ttft_p50, cont_ttft_p95 = h_ttft.quantile(0.5), h_ttft.quantile(0.95)
+    cont_tpot_p50, cont_tpot_p95 = h_tpot.quantile(0.5), h_tpot.quantile(0.95)
+
+    # ---- instrumentation overhead: metrics-on vs metrics-off -------------
+    # One extra wave per arm on the SAME warm engine, trace off in both so
+    # the comparison isolates the metrics layer.  Comparing fresh-vs-fresh
+    # within one process is far less noisy than fresh-vs-baseline; the
+    # perf gate holds tps_on >= tps_off * (1 - 3%).  Two off waves and the
+    # max() guard against a single slow outlier run.
+    trace_was = Otr.TRACE.enabled
+    Otr.TRACE.disable()
+    res_on2, t_on2 = _wave(engine)
+    Om.disable()
+    res_off1, t_off1 = _wave(engine)
+    res_off2, t_off2 = _wave(engine)
+    Om.enable()
+    if trace_was:
+        Otr.TRACE.enable()
+    for extra in (res_on2, res_off1, res_off2):
+        assert _digest(extra) == _digest(results), \
+            "instrumentation changed the token streams"
+    tps_on = max(cb_tps,
+                 sum(len(r.tokens) for r in res_on2) / max(t_on2, 1e-9))
+    tps_off = max(sum(len(r.tokens) for r in res_off1) / max(t_off1, 1e-9),
+                  sum(len(r.tokens) for r in res_off2) / max(t_off2, 1e-9))
+    row("serving_metrics_overhead", max(0.0, 1 - tps_on / tps_off) * 1e6,
+        f"on={tps_on:.1f};off={tps_off:.1f}tok/s")
 
     # ---- open-loop Poisson arrivals: tail latency under load -------------
     # Seeded interarrival gaps make the arrival SCHEDULE deterministic; the
@@ -536,6 +595,24 @@ def main(argv=None):
             f"out={st_sw.swap_out};in={st_sw.swap_in};"
             f"match={swap_json['swap_outputs_match']}")
 
+    obs_json = {}
+    if args.trace:
+        n_ev = Otr.dump(args.trace)
+        obs_json["trace_events"] = n_ev
+        print(f"# trace: wrote {n_ev} events to {args.trace}")
+    if mserver is not None:
+        import urllib.request
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{mserver.port}/metrics",
+                    timeout=5) as resp:
+                body = resp.read().decode()
+            obs_json["metrics_endpoint_ok"] = (
+                resp.status == 200 and "serve_ttft_seconds_bucket" in body)
+        except Exception:
+            obs_json["metrics_endpoint_ok"] = False
+        mserver.shutdown()
+
     row("serving_ttft", ttft * 1e6, f"B{B}xS{PROMPT}")
     row("serving_decode", (t_gen - ttft) / dec_steps * 1e6,
         f"{dec_tps:.1f}tok/s")
@@ -555,6 +632,13 @@ def main(argv=None):
         "continuous_requests": len(results),
         "mean_ttft_s": round(mean_ttft, 6),
         "mean_tpot_s": round(mean_tpot, 6),
+        "continuous_ttft_p50_s": round(cont_ttft_p50, 6),
+        "continuous_ttft_p95_s": round(cont_ttft_p95, 6),
+        "continuous_tpot_p50_s": round(cont_tpot_p50, 6),
+        "continuous_tpot_p95_s": round(cont_tpot_p95, 6),
+        "continuous_tok_s_metrics_on": round(tps_on, 1),
+        "continuous_tok_s_metrics_off": round(tps_off, 1),
+        "metrics_overhead_frac": round(max(0.0, 1 - tps_on / tps_off), 4),
         "ragged_prefill": engine._ragged,
         "poisson_gap_s": POISSON_GAP_S,
         "poisson_requests": len(pois_results),
@@ -570,6 +654,7 @@ def main(argv=None):
         **spec_json,
         **int8_json,
         **swap_json,
+        **obs_json,
         "page_size": st.page_size,
         "kv_bytes_per_request_paged": round(kv_paged),
         "kv_bytes_per_request_slot": round(kv_slot),

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import model as M
+from repro.obs import trace as Otr
 from repro.serve import AsyncEngine, Engine, Request, SamplingSpec, SpecConfig
 
 
@@ -92,11 +93,45 @@ def main(argv=None):
                     help="attention-pattern policy for bigbird layers "
                          "(core/patterns.py; same engine, paged pool and "
                          "kernels — only the block layout changes)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live Prometheus metrics on this port while "
+                         "the demo runs (0 picks an ephemeral port; routes: "
+                         "/metrics, /metrics.json, /healthz)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record per-request timelines + engine-step phase "
+                         "spans and write Chrome trace-event JSON here "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--jax-profile", default=None, metavar="LOGDIR",
+                    help="bracket the run with jax.profiler.trace(LOGDIR) "
+                         "for device-side correlation (no-op if the "
+                         "profiler is unavailable)")
     args = ap.parse_args(argv)
     assert sum(map(bool, (args.mesh, args.spec, args.stream))) <= 1, \
         "--mesh, --spec and --stream are separate demo paths; pick one"
     assert not (args.host_swap and args.mesh), \
         "--host-swap requires an unsharded engine (no --mesh)"
+    mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import server as Osrv
+        mserver = Osrv.start_metrics_server(args.metrics_port)
+        print(f"[serve] metrics: http://127.0.0.1:{mserver.port}/metrics",
+              flush=True)
+    if args.trace:
+        Otr.enable()
+    try:
+        with Otr.profiler_window(args.jax_profile):
+            return _serve(args)
+    finally:
+        if args.trace:
+            n = Otr.dump(args.trace)
+            print(f"[serve] trace: wrote {n} events to {args.trace}")
+        if mserver is not None:
+            mserver.shutdown()
+
+
+def _serve(args):
+    """Run the demo path `main`'s flags selected (factored out so main
+    can bracket it with the metrics server / trace dump / profiler)."""
     eng_kw = {}
     if args.kv_dtype:
         eng_kw["kv_dtype"] = args.kv_dtype

@@ -24,6 +24,27 @@ from repro.ckpt import checkpoint as CKPT
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as S
 from repro.models import model as M
+from repro.obs import metrics as Om
+
+
+def _metrics_tick(step, metrics, tokens_total, dt_step, tokens_per_sec,
+                  prefix="train"):
+    """Record one --metrics-interval tick into obs.metrics and print the
+    registry as one machine-readable JSONL line (loss/lr/grad_norm as
+    gauges, cumulative tokens, per-step wall-clock histogram)."""
+    for k in ("loss", "lr", "grad_norm", "agree"):
+        if k in metrics:
+            Om.gauge(f"{prefix}_{k}",
+                     f"Latest {prefix} {k}").set(float(metrics[k]))
+    tok = Om.counter(f"{prefix}_tokens_total",
+                     f"Cumulative tokens consumed by {prefix}")
+    tok.inc(max(0.0, tokens_total - tok.value()))
+    if dt_step > 0:
+        Om.histogram(f"{prefix}_step_seconds",
+                     f"{prefix} step wall-clock").observe(dt_step)
+        Om.gauge(f"{prefix}_tokens_per_sec",
+                 f"{prefix} token throughput").set(tokens_per_sec)
+    print("[metrics] " + Om.jsonl_line({"step": step}), flush=True)
 
 
 def main(argv=None):
@@ -40,6 +61,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-interval", type=int, default=0, metavar="N",
+                    help="every N steps, record loss/lr/grad_norm/"
+                         "throughput into obs.metrics and print the "
+                         "registry as one machine-readable JSONL line "
+                         "(0 = off)")
     ap.add_argument("--impl", default="pallas",
                     choices=["pallas", "blockified", "reference"],
                     help="sparse-attention implementation (pallas = fused "
@@ -149,6 +175,12 @@ def main(argv=None):
                   f"lr={float(metrics['lr']):.2e} "
                   f"gnorm={float(metrics['grad_norm']):.2f} {dt:.2f}s/step",
                   flush=True)
+        if args.metrics_interval and (step % args.metrics_interval == 0
+                                      or step == args.steps - 1):
+            done = step - start_step + 1
+            dt = (time.time() - t0) / max(done, 1)
+            _metrics_tick(step, metrics, done * args.batch * args.seq, dt,
+                          args.batch * args.seq / max(dt, 1e-9))
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             if pending is not None:
                 pending.join()
@@ -228,6 +260,13 @@ def distill_main(args):
             print(f"[distill] step={step} kl={float(metrics['loss']):.4f} "
                   f"agree={agree:.3f} lr={float(metrics['lr']):.2e} "
                   f"{dt:.2f}s/step", flush=True)
+        if getattr(args, "metrics_interval", 0) and (
+                step % args.metrics_interval == 0 or step == args.steps - 1):
+            done = step - start_step + 1
+            dt = (time.time() - t0) / max(done, 1)
+            _metrics_tick(step, metrics, done * args.batch * args.seq, dt,
+                          args.batch * args.seq / max(dt, 1e-9),
+                          prefix="distill")
     if args.ckpt_dir:
         CKPT.save(state, args.ckpt_dir, args.steps)
         print(f"[distill] final checkpoint at step {args.steps}")

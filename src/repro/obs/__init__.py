@@ -1,0 +1,25 @@
+"""Zero-dependency observability for the serving/training stack.
+
+Three pieces (DESIGN.md §Observability):
+
+  * `obs.metrics` — process-global counters / gauges / log-bucketed
+    histograms, JSON-snapshotable and rendered in Prometheus text
+    format, served live by `obs.server` (`launch/serve.py
+    --metrics-port`) and ticked as JSONL by `launch/train.py
+    --metrics-interval`;
+  * `obs.trace` — per-request event timelines + engine-step phase
+    spans in a bounded ring, exportable as Chrome trace-event JSON
+    (`Engine.dump_trace`, `--trace`);
+  * `obs.clock()` — the injectable wall clock every latency timestamp
+    reads, so tests can install `FakeClock` instead of sleeping.
+
+Everything records on the host, outside jitted regions, and is
+cheap-by-default: metrics are dict updates behind an `enabled` flag,
+tracing is off until enabled, and perf_gate.py holds the metrics-on
+serving path within 3% of metrics-off.
+"""
+from repro.obs import metrics, trace
+from repro.obs.clock import FakeClock, clock, get_clock, set_clock
+
+__all__ = ["metrics", "trace", "clock", "set_clock", "get_clock",
+           "FakeClock"]

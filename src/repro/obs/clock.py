@@ -1,0 +1,56 @@
+"""Injectable wall-clock for the serving/training stack.
+
+Every latency-bearing timestamp in the serving path (engine submit/TTFT/
+finish, frontend deadlines, step spans, trace events) reads
+`obs.clock()` instead of calling `time.perf_counter()` directly, so
+timing-sensitive tests can install a deterministic `FakeClock` and
+assert exact TTFT/TPOT/queue-wait values instead of sleeping real time.
+
+The default clock IS `time.perf_counter` — monotonic seconds with an
+arbitrary epoch — and swapping it never touches device code: the clock
+is only ever read on the host, outside jitted regions.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+_clock: Callable[[], float] = time.perf_counter
+
+
+def clock() -> float:
+    """Current time in (monotonic) seconds from the installed clock."""
+    return _clock()
+
+
+def set_clock(fn: Optional[Callable[[], float]]) -> None:
+    """Install `fn` as the process clock; None restores perf_counter."""
+    global _clock
+    _clock = time.perf_counter if fn is None else fn
+
+
+def get_clock() -> Callable[[], float]:
+    """The currently installed clock callable (for save/restore)."""
+    return _clock
+
+
+class FakeClock:
+    """A deterministic manually-advanced clock for tests.
+
+        fake = FakeClock(start=100.0)
+        obs.set_clock(fake)
+        fake.advance(0.25)       # every obs.clock() read now returns 100.25
+    """
+
+    def __init__(self, start: float = 0.0):
+        """Start the clock at `start` seconds."""
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        """Read the clock (the `obs.clock()` protocol)."""
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        """Move the clock forward `dt` seconds; returns the new time."""
+        self.t += float(dt)
+        return self.t

@@ -1,0 +1,349 @@
+"""Process-global metrics registry: counters, gauges, log histograms.
+
+Zero-dependency (stdlib only) metric primitives for the serving and
+training stack, with two export surfaces:
+
+  * `Registry.snapshot()` — a JSON-able dict (the `/metrics.json`
+    endpoint and the train launcher's `--metrics-interval` JSONL ticker);
+  * `Registry.render_prometheus()` — Prometheus text exposition format
+    version 0.0.4 (the `/metrics` endpoint behind
+    `launch/serve.py --metrics-port`, see obs/server.py).
+
+Metric naming contract (DESIGN.md §Observability): serving metrics are
+`serve_*`, training metrics are `train_*`; durations are histograms in
+seconds with `_seconds` suffix, monotone event counts are counters with
+`_total`, instantaneous levels (pages, queue depth) are gauges.
+Histograms default to log-spaced bucket bounds (`log_buckets`), because
+serving latencies span 100µs decode steps to multi-second queue waits.
+
+Everything here is cheap-by-default and host-side only: recording is a
+dict update under a lock (no device sync can hide in a metric), and
+`disable()` turns every record call into an early return — the bench's
+metrics-on vs metrics-off overhead gate (perf_gate.py) holds the full
+instrumented path within 3% of the disabled path.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def log_buckets(start: float = 1e-4, count: int = 20,
+                factor: float = 2.0) -> Tuple[float, ...]:
+    """Log-spaced histogram bounds: start * factor**i for i in [0, count).
+
+    The default (1e-4, 20, 2.0) spans 100µs .. ~52s — decode-step to
+    queue-wait scale on both CPU CI and real accelerators.
+    """
+    return tuple(start * factor ** i for i in range(count))
+
+
+TIME_BUCKETS = log_buckets()
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value: integral floats print as integers."""
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def _escape(v) -> str:
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _labels_text(key: tuple) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{_escape(v)}"' for k, v in key) + "}"
+
+
+class Counter:
+    """A monotonically increasing count, optionally split by labels."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str, registry: "Registry"):
+        """Create under `registry`; use `Registry.counter` instead."""
+        self.name, self.help = name, help
+        self._reg = registry
+        self._values: Dict[tuple, float] = {}
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        """Add `amount` (default 1) to the child selected by `labels`."""
+        if not self._reg.enabled:
+            return
+        key = _label_key(labels)
+        with self._reg._lock:
+            self._values[key] = self._values.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        """Current count of the child selected by `labels` (0 if unseen)."""
+        return self._values.get(_label_key(labels), 0.0)
+
+    def _render(self, out: List[str]) -> None:
+        for key in sorted(self._values):
+            out.append(f"{self.name}{_labels_text(key)} "
+                       f"{_fmt(self._values[key])}")
+        if not self._values:
+            out.append(f"{self.name} 0")
+
+    def _snapshot(self) -> list:
+        return [{"labels": dict(k), "value": v}
+                for k, v in sorted(self._values.items())]
+
+    def _reset(self) -> None:
+        self._values.clear()
+
+
+class Gauge(Counter):
+    """An instantaneous level (pages in use, queue depth, train loss)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        """Set the child selected by `labels` to `value`."""
+        if not self._reg.enabled:
+            return
+        with self._reg._lock:
+            self._values[_label_key(labels)] = float(value)
+
+    def dec(self, amount: float = 1.0, **labels) -> None:
+        """Subtract `amount` from the child selected by `labels`."""
+        self.inc(-amount, **labels)
+
+
+class Histogram:
+    """A bucketed value distribution with Prometheus `le` semantics.
+
+    `observe(v)` lands in the first bucket whose bound satisfies
+    v <= bound (values past the last bound count only toward +Inf).
+    Rendered buckets are cumulative, as the text format requires.
+    `quantile(q)` estimates a percentile by linear interpolation inside
+    the covering bucket, clamped to the observed min/max — an
+    approximation, good to one bucket's width (the bench's continuous
+    ttft/tpot p50/p95 come from here).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, registry: "Registry",
+                 buckets: Sequence[float] = TIME_BUCKETS):
+        """Create under `registry`; use `Registry.histogram` instead."""
+        self.name, self.help = name, help
+        self._reg = registry
+        self.bounds = tuple(sorted(float(b) for b in buckets))
+        assert self.bounds, "histogram needs at least one bucket bound"
+        # child: [per-bucket counts (+1 overflow), sum, count, min, max]
+        self._values: Dict[tuple, list] = {}
+
+    def _child(self, key: tuple) -> list:
+        c = self._values.get(key)
+        if c is None:
+            c = self._values[key] = [[0] * (len(self.bounds) + 1),
+                                     0.0, 0, float("inf"), float("-inf")]
+        return c
+
+    def observe(self, value: float, **labels) -> None:
+        """Record one observation into the child selected by `labels`."""
+        if not self._reg.enabled:
+            return
+        v = float(value)
+        i = bisect.bisect_left(self.bounds, v)
+        with self._reg._lock:
+            c = self._child(_label_key(labels))
+            c[0][i] += 1
+            c[1] += v
+            c[2] += 1
+            c[3] = min(c[3], v)
+            c[4] = max(c[4], v)
+
+    def summary(self, **labels) -> dict:
+        """{count, sum, min, max, mean} of the selected child."""
+        c = self._values.get(_label_key(labels))
+        if c is None:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "mean": 0.0}
+        return {"count": c[2], "sum": c[1], "min": c[3], "max": c[4],
+                "mean": c[1] / c[2] if c[2] else 0.0}
+
+    def quantile(self, q: float, **labels) -> float:
+        """Approximate q-quantile (0..1) of the selected child, or 0.0
+        when it has no observations."""
+        c = self._values.get(_label_key(labels))
+        if c is None or c[2] == 0:
+            return 0.0
+        counts, total, vmin, vmax = c[0], c[2], c[3], c[4]
+        target = q * total
+        cum = 0.0
+        for i, n in enumerate(counts):
+            if n == 0:
+                continue
+            if cum + n >= target:
+                lo = 0.0 if i == 0 else self.bounds[i - 1]
+                hi = vmax if i == len(self.bounds) else self.bounds[i]
+                frac = (target - cum) / n
+                est = lo + (hi - lo) * max(0.0, min(1.0, frac))
+                return max(vmin, min(vmax, est))
+            cum += n
+        return vmax
+
+    def _render(self, out: List[str]) -> None:
+        items = sorted(self._values.items()) or [((), self._child(()))]
+        for key, c in items:
+            cum = 0
+            for bound, n in zip(self.bounds, c[0]):
+                cum += n
+                lk = key + (("le", _fmt(bound)),)
+                out.append(f"{self.name}_bucket{_labels_text(lk)} {cum}")
+            lk = key + (("le", "+Inf"),)
+            out.append(f"{self.name}_bucket{_labels_text(lk)} {c[2]}")
+            out.append(f"{self.name}_sum{_labels_text(key)} {_fmt(c[1])}")
+            out.append(f"{self.name}_count{_labels_text(key)} {c[2]}")
+
+    def _snapshot(self) -> list:
+        out = []
+        for key, c in sorted(self._values.items()):
+            cum, buckets = 0, []
+            for bound, n in zip(self.bounds, c[0]):
+                cum += n
+                buckets.append([bound, cum])
+            out.append({"labels": dict(key), "count": c[2],
+                        "sum": c[1], "min": c[3], "max": c[4],
+                        "buckets": buckets})
+        return out
+
+    def _reset(self) -> None:
+        self._values.clear()
+
+
+class Registry:
+    """A named collection of metrics with get-or-create registration.
+
+    The process-global instance is `REGISTRY` (module helpers `counter`
+    / `gauge` / `histogram` register there); tests that want isolation
+    construct their own.  `enabled` gates every record call — flipping
+    it is how the bench measures instrumentation overhead.
+    """
+
+    def __init__(self, enabled: bool = True):
+        """Create an empty registry."""
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.RLock()
+        self.enabled = enabled
+
+    def _get(self, cls, name: str, help: str, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, self, **kw)
+            assert type(m) is cls, \
+                f"metric {name} already registered as {m.kind}"
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        """Get or create the counter `name`."""
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        """Get or create the gauge `name`."""
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = TIME_BUCKETS) -> Histogram:
+        """Get or create the histogram `name` (bounds fixed at creation)."""
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    def get(self, name: str) -> Optional[object]:
+        """The registered metric called `name`, or None."""
+        return self._metrics.get(name)
+
+    def reset(self) -> None:
+        """Zero every metric's recorded values (registrations survive)."""
+        with self._lock:
+            for m in self._metrics.values():
+                m._reset()
+
+    def render_prometheus(self) -> str:
+        """The whole registry in Prometheus text exposition format."""
+        out: List[str] = []
+        with self._lock:
+            for name in sorted(self._metrics):
+                m = self._metrics[name]
+                if m.help:
+                    out.append(f"# HELP {name} {m.help}")
+                out.append(f"# TYPE {name} {m.kind}")
+                m._render(out)
+        return "\n".join(out) + "\n"
+
+    def snapshot(self) -> dict:
+        """JSON-able {name: {kind, help, values}} of the whole registry."""
+        with self._lock:
+            return {name: {"kind": m.kind, "help": m.help,
+                           "values": m._snapshot()}
+                    for name, m in sorted(self._metrics.items())}
+
+    def values(self) -> dict:
+        """Flat scalar view: counters/gauges by name (labelled children
+        keyed `name{k=v,...}`), histograms as `name_count`/`name_sum`."""
+        flat: Dict[str, float] = {}
+        with self._lock:
+            for name, m in sorted(self._metrics.items()):
+                if isinstance(m, Histogram):
+                    for entry in m._snapshot():
+                        lt = _labels_text(_label_key(entry["labels"]))
+                        flat[f"{name}_count{lt}"] = entry["count"]
+                        flat[f"{name}_sum{lt}"] = entry["sum"]
+                else:
+                    for key, v in sorted(m._values.items()):
+                        flat[f"{name}{_labels_text(key)}"] = v
+        return flat
+
+
+REGISTRY = Registry()
+
+
+def counter(name: str, help: str = "") -> Counter:
+    """Get or create `name` on the process-global registry."""
+    return REGISTRY.counter(name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    """Get or create `name` on the process-global registry."""
+    return REGISTRY.gauge(name, help)
+
+
+def histogram(name: str, help: str = "",
+              buckets: Sequence[float] = TIME_BUCKETS) -> Histogram:
+    """Get or create `name` on the process-global registry."""
+    return REGISTRY.histogram(name, help, buckets=buckets)
+
+
+def enable() -> None:
+    """Turn recording on for the process-global registry (the default)."""
+    REGISTRY.enabled = True
+
+
+def disable() -> None:
+    """Turn every record call on the global registry into a no-op."""
+    REGISTRY.enabled = False
+
+
+def enabled() -> bool:
+    """Whether the process-global registry is recording."""
+    return REGISTRY.enabled
+
+
+def jsonl_line(extra: Optional[dict] = None) -> str:
+    """One compact JSON line of the global registry's flat values (the
+    train launcher's machine-readable ticker); `extra` keys merge in
+    first so they cannot be shadowed by metric names."""
+    payload = dict(extra or {})
+    payload.update(REGISTRY.values())
+    return json.dumps(payload, separators=(",", ":"), sort_keys=True)

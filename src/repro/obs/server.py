@@ -1,0 +1,87 @@
+"""Live /metrics endpoint: a stdlib http.server thread over the registry.
+
+    from repro.obs import server as Osrv
+    srv = Osrv.start_metrics_server(port)     # 0 = ephemeral
+    ... serve traffic ...                     # GET /metrics while running
+    srv.shutdown()
+
+Routes:
+  /metrics       Prometheus text exposition format (version 0.0.4)
+  /metrics.json  the registry snapshot as JSON
+  /healthz       200 "ok"
+
+The server runs on a daemon thread and renders under the registry lock,
+so scraping concurrent with engine stepping is safe; it never touches
+the engine or device state (launch/serve.py --metrics-port wires it up).
+"""
+from __future__ import annotations
+
+import http.server
+import json
+import threading
+from typing import Optional
+
+from repro.obs import metrics as Om
+
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class _Handler(http.server.BaseHTTPRequestHandler):
+    registry: Om.Registry = Om.REGISTRY
+
+    def do_GET(self):  # noqa: N802 (http.server's casing)
+        """Serve one GET against the metrics routes."""
+        if self.path.split("?")[0] == "/metrics":
+            body = self.registry.render_prometheus().encode()
+            ctype = PROM_CONTENT_TYPE
+        elif self.path.split("?")[0] == "/metrics.json":
+            body = json.dumps(self.registry.snapshot()).encode()
+            ctype = "application/json"
+        elif self.path.split("?")[0] == "/healthz":
+            body, ctype = b"ok\n", "text/plain"
+        else:
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):
+        """Silence per-request access logging (CI output hygiene)."""
+
+
+class MetricsServer:
+    """An http.server thread exposing one registry (see module doc)."""
+
+    def __init__(self, port: int = 0, host: str = "127.0.0.1",
+                 registry: Optional[Om.Registry] = None):
+        """Bind `host:port` (port 0 picks an ephemeral port)."""
+        handler = type("Handler", (_Handler,),
+                       {"registry": registry or Om.REGISTRY})
+        self._httpd = http.server.ThreadingHTTPServer((host, port), handler)
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="obs-metrics", daemon=True)
+
+    @property
+    def port(self) -> int:
+        """The bound TCP port (useful when constructed with port=0)."""
+        return self._httpd.server_address[1]
+
+    def start(self) -> "MetricsServer":
+        """Start serving on the daemon thread; returns self."""
+        self._thread.start()
+        return self
+
+    def shutdown(self) -> None:
+        """Stop the server thread and close the socket."""
+        self._httpd.shutdown()
+        self._httpd.server_close()
+
+
+def start_metrics_server(port: int, host: str = "127.0.0.1",
+                         registry: Optional[Om.Registry] = None
+                         ) -> MetricsServer:
+    """Start a MetricsServer on `host:port` and return it."""
+    return MetricsServer(port, host, registry).start()

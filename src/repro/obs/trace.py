@@ -1,0 +1,158 @@
+"""Per-request event timelines + engine-step phase spans, Chrome-trace
+exportable.
+
+A `TraceRecorder` is a bounded ring buffer of timestamped events:
+
+  * per-request timeline events (tid = request id + 1): submit ->
+    queue_wait span -> admit -> each prefill chunk -> first_token ->
+    spec verify rounds -> swap_out / swap_in -> a closing `request`
+    span covering submit..finish, each carrying args (page counts,
+    accepted lengths, finish reason);
+  * engine-step phase spans (tid = 0): admission / prefill / decode /
+    spec_round / swap, plus the whole `engine_step` envelope.
+
+Recording is OFF by default (`enable()` / `serve.py --trace` /
+`benchmarks/serving.py --trace` turn it on) and costs one deque append
+per event when on — events are recorded on the host, strictly outside
+jitted regions, with timestamps from the injectable `obs.clock()`.  The
+ring (`capacity` events) evicts oldest-first, so a long run keeps its
+tail.
+
+Export (`to_chrome()` / `dump(path)` / `Engine.dump_trace(path)`) emits
+Chrome trace-event JSON — `{"traceEvents": [...]}` with "X"
+(complete-span) and "i" (instant) phases, microsecond timestamps, and
+thread-name metadata — loadable in Perfetto / chrome://tracing.
+
+`profiler_window(logdir)` is the optional device-side correlation hook:
+a context manager wrapping `jax.profiler.trace` when available (and a
+no-op otherwise), so a host-side trace window can be captured together
+with the device profile it brackets.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.clock import clock
+
+DEFAULT_CAPACITY = 65536
+
+
+class TraceRecorder:
+    """A bounded ring of trace events (see the module docstring)."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY):
+        """Create a disabled recorder holding at most `capacity` events."""
+        self._ring: collections.deque = collections.deque(maxlen=capacity)
+        self._tid_names: Dict[int, str] = {}
+        self.enabled = False
+
+    def enable(self, capacity: Optional[int] = None) -> None:
+        """Start recording; `capacity` resizes (and clears) the ring."""
+        if capacity is not None and capacity != self._ring.maxlen:
+            self._ring = collections.deque(maxlen=capacity)
+        self.enabled = True
+
+    def disable(self) -> None:
+        """Stop recording (already-recorded events stay exportable)."""
+        self.enabled = False
+
+    def clear(self) -> None:
+        """Drop every recorded event and thread name."""
+        self._ring.clear()
+        self._tid_names.clear()
+
+    def __len__(self) -> int:
+        """Number of events currently held."""
+        return len(self._ring)
+
+    def name_thread(self, tid: int, name: str) -> None:
+        """Label `tid` in the exported trace (e.g. "req 3", "engine")."""
+        if self.enabled:
+            self._tid_names[tid] = name
+
+    def instant(self, name: str, tid: int = 0, ts: Optional[float] = None,
+                args: Optional[dict] = None) -> None:
+        """Record a point event at `ts` (default: now) on thread `tid`."""
+        if self.enabled:
+            self._ring.append(
+                ("i", name, tid, clock() if ts is None else ts, 0.0, args))
+
+    def span(self, name: str, t0: float, t1: Optional[float] = None,
+             tid: int = 0, args: Optional[dict] = None) -> None:
+        """Record a complete span [t0, t1] (t1 default: now) on `tid`."""
+        if self.enabled:
+            if t1 is None:
+                t1 = clock()
+            self._ring.append(("X", name, tid, t0, max(0.0, t1 - t0), args))
+
+    def events(self) -> List[dict]:
+        """The recorded events, oldest first, as plain dicts."""
+        return [{"ph": ph, "name": name, "tid": tid, "ts": ts,
+                 "dur": dur, "args": args or {}}
+                for ph, name, tid, ts, dur, args in self._ring]
+
+    def to_chrome(self) -> dict:
+        """Chrome trace-event JSON object (perfetto-loadable)."""
+        events: List[dict] = []
+        for tid, name in sorted(self._tid_names.items()):
+            events.append({"ph": "M", "name": "thread_name", "pid": 1,
+                           "tid": tid, "args": {"name": name}})
+        for ph, name, tid, ts, dur, args in self._ring:
+            ev = {"ph": ph, "name": name, "pid": 1, "tid": tid,
+                  "ts": ts * 1e6}
+            if ph == "X":
+                ev["dur"] = dur * 1e6
+            if ph == "i":
+                ev["s"] = "t"
+            if args:
+                ev["args"] = args
+            events.append(ev)
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def dump(self, path: str) -> int:
+        """Write `to_chrome()` to `path`; returns the event count."""
+        doc = self.to_chrome()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return len(self._ring)
+
+
+TRACE = TraceRecorder()
+
+
+def enable(capacity: Optional[int] = None) -> None:
+    """Start recording on the process-global recorder."""
+    TRACE.enable(capacity)
+
+
+def disable() -> None:
+    """Stop recording on the process-global recorder."""
+    TRACE.disable()
+
+
+def dump(path: str) -> int:
+    """Export the process-global recorder to `path` (Chrome trace JSON)."""
+    return TRACE.dump(path)
+
+
+@contextlib.contextmanager
+def profiler_window(logdir: Optional[str]):
+    """Optionally bracket a block with `jax.profiler.trace(logdir)`.
+
+    `logdir=None` (and any environment where the profiler is
+    unavailable) degrades to a no-op, so call sites need no guards.
+    """
+    if not logdir:
+        yield
+        return
+    try:
+        import jax.profiler as _prof
+        cm = _prof.trace(logdir)
+    except Exception:
+        yield
+        return
+    with cm:
+        yield

@@ -43,7 +43,14 @@ class Result:
     shared_prefix_pages: int = 0           # of which reused from a co-resident
     ttft_s: float = 0.0                    # wall-clock submit -> first token
     tpot_s: float = 0.0                    # wall-clock per output token after
-    #                                        the first (the spec-decode win)
+    #                                        the first (the spec-decode win);
+    #                                        0.0 when the engine never
+    #                                        observed a first token (aborted
+    #                                        or shed before TTFT)
+    queue_wait_s: float = 0.0              # wall-clock submit -> admission
+    #                                        (the slice of ttft_s spent
+    #                                        queued; obs records it into
+    #                                        serve_queue_wait_seconds)
     draft_proposed: int = 0                # speculative candidates verified
     draft_accepted: int = 0                # of which the target accepted
     verify_steps: int = 0                  # draft/verify rounds run

@@ -101,8 +101,11 @@ class SlotState:
     pages: list = dataclasses.field(default_factory=list)
     shared_pages: int = 0      # leading pages reused from the prefix index
     reserved: int = 0          # pages reserved but not yet mapped
-    submit_time: float = 0.0   # wall-clock at Engine.submit
-    ttft_time: float = 0.0     # wall-clock when the first token was sampled
+    submit_time: float = 0.0   # wall-clock (obs.clock) at Engine.submit
+    admit_time: float = 0.0    # wall-clock at slot admission (queue wait end)
+    ttft_time: Optional[float] = None  # wall-clock at the first sampled
+    #                            token; None until the engine observes one
+    #                            (aborted/swapped finishes may never set it)
     draft_proposed: int = 0    # speculative draft tokens offered to verify
     draft_accepted: int = 0    # of which the target model accepted
     verify_steps: int = 0      # draft/verify rounds this request ran

@@ -39,7 +39,6 @@ sampling) emits 1..k+1 tokens per round (serve/spec.py, DESIGN.md
 from __future__ import annotations
 
 import collections
-import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -47,6 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import patterns
+from repro.obs import metrics as Om
+from repro.obs import trace as Tr
+from repro.obs.clock import clock
+from repro.obs.trace import TRACE
 from repro.models import decode as Dec
 from repro.models import model as M
 from repro.serve import sampling as Smp
@@ -218,6 +221,48 @@ class Engine:
         self._slot_meta: dict = {}     # slot -> (request, base key, submit step)
         self._next_id = 0
         self._step_count = 0
+
+        # observability handles (repro/obs): get-or-create on the process-
+        # global registry.  Every record below is a host-side dict update
+        # strictly outside jitted regions — no device syncs ride on a
+        # metric — and obs.metrics.disable() turns them all into no-ops
+        # (the perf gate's metrics-on/off overhead contract).
+        self._m_ttft = Om.histogram(
+            "serve_ttft_seconds", "submit -> first token (s)")
+        self._m_tpot = Om.histogram(
+            "serve_tpot_seconds", "per output token after the first (s)")
+        self._m_queue_wait = Om.histogram(
+            "serve_queue_wait_seconds", "submit -> slot admission (s)")
+        self._m_step = Om.histogram(
+            "serve_step_seconds", "engine step wall-clock (s)")
+        self._m_submitted = Om.counter(
+            "serve_requests_submitted_total", "requests entering the queue")
+        self._m_finished = Om.counter(
+            "serve_requests_finished_total", "finished, by finish_reason")
+        self._m_tokens = Om.counter(
+            "serve_tokens_generated_total", "tokens emitted by finished "
+            "requests")
+        self._m_aborts = Om.counter(
+            "serve_aborts_total", "Engine.abort cancellations applied")
+        self._m_swap_out = Om.counter(
+            "serve_swap_out_total", "residents swapped to the host tier")
+        self._m_swap_in = Om.counter(
+            "serve_swap_in_total", "swapped residents resumed on device")
+        self._m_spec_proposed = Om.counter(
+            "serve_spec_proposed_tokens_total", "draft tokens verified")
+        self._m_spec_accepted = Om.counter(
+            "serve_spec_accepted_tokens_total", "draft tokens accepted")
+        self._m_accept_len = Om.histogram(
+            "serve_spec_accept_len", "accepted draft tokens per verify "
+            "round", buckets=tuple(float(i) for i in range(33)))
+        self._m_pages_in_use = Om.gauge(
+            "serve_pages_in_use", "KV pages currently mapped")
+        self._m_pages_reserved = Om.gauge(
+            "serve_pages_reserved", "KV pages promised but unmapped")
+        self._m_pages_host = Om.gauge(
+            "serve_pages_host", "KV pages parked in the host swap tier")
+        self._m_queue_depth = Om.gauge(
+            "serve_queue_depth", "requests waiting in the engine queue")
 
     @property
     def dispatch_depth(self) -> int:
@@ -428,10 +473,26 @@ class Engine:
         if request.request_id is None:
             request.request_id = self._next_id
             self._next_id += 1
-        self._queue.append((request, self._step_count,
-                            time.perf_counter() if submit_time is None
-                            else submit_time))
+        now = clock() if submit_time is None else submit_time
+        self._queue.append((request, self._step_count, now))
+        self._m_submitted.inc()
+        if TRACE.enabled:
+            tid = request.request_id + 1
+            TRACE.name_thread(tid, f"req {request.request_id}")
+            TRACE.instant("submit", tid=tid, ts=now,
+                          args={"prompt_len": int(request.prompt.size),
+                                "max_new": request.max_new_tokens})
         return request.request_id
+
+    def _first_token(self, state: SlotState):
+        """Record the TTFT event for `state` (first sampled token): the
+        timestamp feeding `Result.ttft_s`, the serve_ttft_seconds
+        histogram, and the per-request trace timeline."""
+        state.ttft_time = clock()
+        self._m_ttft.observe(max(0.0, state.ttft_time - state.submit_time))
+        if TRACE.enabled:
+            TRACE.instant("first_token", tid=state.request_id + 1,
+                          ts=state.ttft_time)
 
     def _sample_first(self, logits, sampling: SamplingSpec) -> int:
         samp1 = Smp.spec_arrays([sampling])
@@ -454,6 +515,15 @@ class Engine:
         self.pool.allocate(slot, prompt, request.max_new_tokens,
                            graph_key=graph_key, state=state)
         self._slot_meta[slot] = (request, base_key, submit_step)
+        state.admit_time = clock()
+        self._m_queue_wait.observe(max(0.0, state.admit_time - submit_time))
+        if TRACE.enabled:
+            tid = request.request_id + 1
+            TRACE.span("queue_wait", submit_time, state.admit_time, tid=tid)
+            TRACE.instant("admit", tid=tid, ts=state.admit_time,
+                          args={"slot": slot, "pages": len(state.pages),
+                                "shared_pages": state.shared_pages,
+                                "reserved": state.reserved})
         if self._provider is not None:
             self._provider.admit(slot, prompt)
         if self._chunked:
@@ -470,7 +540,7 @@ class Engine:
             self.pool.write_prefill(slot, cache1)
             tok0 = self._sample_first(logits, request.sampling)
             state.tokens, state.generated = [tok0], 1
-            state.ttft_time = time.perf_counter()
+            self._first_token(state)
             if self._provider is not None:
                 self._provider.observe(slot, [tok0])
 
@@ -517,12 +587,15 @@ class Engine:
         s.prefill_pos = start + C
         self.pool.register_prefix(slot, min(s.prefill_pos, L), prompt,
                                   self._graph_key(L))
+        if TRACE.enabled:
+            TRACE.instant("prefill_chunk", tid=s.request_id + 1,
+                          args={"start": start, "tokens": int(C)})
         if s.prefill_pos >= L:                 # prompt done -> first token
             tok0 = self._sample_first(logits, request.sampling)
             s.tokens, s.generated = [tok0], 1
             s.phase = "decode"
             s.admit_step = self._step_count    # the TTFT event
-            s.ttft_time = time.perf_counter()
+            self._first_token(s)
             if self._provider is not None:
                 self._provider.observe(slot, [tok0])
 
@@ -600,13 +673,17 @@ class Engine:
             s.prefill_pos += C
             self.pool.register_prefix(slot, min(s.prefill_pos, s.prompt_len),
                                       request.prompt, gk)
+            if TRACE.enabled:
+                TRACE.instant("prefill_chunk", tid=s.request_id + 1,
+                              args={"start": int(s.prefill_pos - C),
+                                    "tokens": int(C)})
             if s.prefill_pos >= s.prompt_len:  # prompt done -> first token
                 tok0 = self._sample_first(logits[slot:slot + 1],
                                           request.sampling)
                 s.tokens, s.generated = [tok0], 1
                 s.phase = "decode"
                 s.admit_step = self._step_count    # the TTFT event
-                s.ttft_time = time.perf_counter()
+                self._first_token(s)
                 if self._provider is not None:
                     self._provider.observe(slot, [tok0])
                 reason = self._slot_done(s)
@@ -619,19 +696,40 @@ class Engine:
         _, _, submit_step = self._slot_meta.pop(slot)
         pages_used = len(state.pages)
         shared = state.shared_pages
-        now = time.perf_counter()
+        now = clock()
         n_out = len(state.tokens)
         self.pool.evict(slot)
         if self._provider is not None:
             self._provider.evict(slot)
+        # a request can finish with tokens but no engine-observed first
+        # token (aborted mid-prefill after a swap restored old tokens, or
+        # backdated clocks in tests), so tpot_s guards on ttft_time being
+        # set and clamps at 0.0 — never the now-minus-epoch garbage an
+        # unset (falsy) timestamp would produce
+        ttft_s = (max(0.0, state.ttft_time - state.submit_time)
+                  if state.ttft_time else 0.0)
+        tpot_s = (max(0.0, (now - state.ttft_time) / (n_out - 1))
+                  if n_out > 1 and state.ttft_time else 0.0)
+        queue_wait_s = (max(0.0, state.admit_time - state.submit_time)
+                        if state.admit_time else 0.0)
+        self._m_finished.inc(reason=reason)
+        self._m_tokens.inc(n_out)
+        if n_out > 1 and state.ttft_time:
+            self._m_tpot.observe(tpot_s)
+        if TRACE.enabled:
+            t0 = state.submit_time if state.submit_time else now
+            TRACE.span("request", t0, now, tid=state.request_id + 1,
+                       args={"reason": reason, "tokens": n_out,
+                             "pages_used": pages_used,
+                             "shared_pages": shared,
+                             "draft_accepted": state.draft_accepted,
+                             "draft_proposed": state.draft_proposed})
         return Result(request_id=state.request_id, tokens=state.tokens,
                       prompt_len=state.prompt_len, finish_reason=reason,
                       ttft_steps=state.admit_step - submit_step + 1,
                       pages_used=pages_used, shared_prefix_pages=shared,
-                      ttft_s=(state.ttft_time - state.submit_time
-                              if state.ttft_time else 0.0),
-                      tpot_s=((now - state.ttft_time) / (n_out - 1)
-                              if n_out > 1 else 0.0),
+                      ttft_s=ttft_s, tpot_s=tpot_s,
+                      queue_wait_s=queue_wait_s,
                       draft_proposed=state.draft_proposed,
                       draft_accepted=state.draft_accepted,
                       verify_steps=state.verify_steps)
@@ -678,6 +776,8 @@ class Engine:
         if self.pool is None:          # no slot path (encdec/patch archs)
             self._step_count += 1
             return finished
+        t_step = clock()
+        trace_on = TRACE.enabled
 
         # pipelined decode steps must drain before the decode membership
         # can change: admissions and prefill completions create new decode
@@ -692,6 +792,8 @@ class Engine:
         if self._host_swap:
             self._resume_swapped()
 
+        t_admit = clock() if trace_on else 0.0
+        admitted = 0
         free = self.pool.free_slots()
         while free and self._queue:
             request, _, _ = self._queue[0]
@@ -722,12 +824,16 @@ class Engine:
             free.remove(slot)
             request, submit_step, submit_time = self._queue.popleft()
             self._admit_one(slot, request, submit_step, submit_time)
+            admitted += 1
             s = self.pool.slots[slot]
             if s.phase == "decode":
                 reason = self._slot_done(s)
                 if reason:             # stop/length hit on the prefill token
                     finished.append(self._finish(slot, reason))
+        if trace_on and admitted:
+            TRACE.span("admission", t_admit, args={"admitted": admitted})
 
+        t_prefill = clock() if trace_on else 0.0
         prefilling = self.pool.prefill_slots()
         if prefilling and self.mesh is not None:
             # the mesh path keeps per-slot static chunks (SPMD row layout)
@@ -741,10 +847,17 @@ class Engine:
         elif prefilling:
             for key, group in self._prefill_groups(prefilling):
                 finished.extend(self._run_prefill_group(key, group))
+        if trace_on and prefilling:
+            TRACE.span("prefill", t_prefill,
+                       args={"slots": len(prefilling)})
 
+        t_decode = clock() if trace_on else 0.0
         active = self.pool.decode_slots()
         if active and self.spec is not None:
             finished.extend(self._spec_decode(active))
+            if trace_on:
+                TRACE.span("spec_round", t_decode,
+                           args={"slots": len(active)})
         elif active:
             if len(self._inflight) >= self._depth:
                 self._collect_one(finished)
@@ -763,9 +876,21 @@ class Engine:
                     self._dispatch_decode(active)
                     if self._depth <= 1:
                         self._collect_one(finished)
+            if trace_on:
+                TRACE.span("decode", t_decode,
+                           args={"slots": len(active)})
         elif self._inflight:
             self._drain_inflight(finished)
 
+        p = self.pool
+        self._m_pages_in_use.set(p.pages_in_use)
+        self._m_pages_reserved.set(p.pages_reserved)
+        self._m_pages_host.set(p.pages_host)
+        self._m_queue_depth.set(len(self._queue))
+        self._m_step.observe(clock() - t_step)
+        if trace_on:
+            TRACE.span("engine_step", t_step,
+                       args={"step": self._step_count})
         self._step_count += 1
         return finished
 
@@ -860,6 +985,10 @@ class Engine:
             self.pool.swap_in(slot, request.prompt, gk)
             s = self.pool.slots[slot]
             s.resume_gen = s.generated
+            self._m_swap_in.inc()
+            if TRACE.enabled:
+                TRACE.instant("swap_in", tid=s.request_id + 1,
+                              args={"pages": len(s.pages)})
 
     def _swap_out_for_head(self, request, graph_key, finished) -> bool:
         """Make room for the head-of-line request by swapping decoding
@@ -878,7 +1007,13 @@ class Engine:
             victim = max(victims, key=lambda i: (
                 self.pool.slots[i].max_new - self.pool.slots[i].generated,
                 -i))
+            vs = self.pool.slots[victim]
+            n_pages = len(vs.pages)
             self.pool.swap_out(victim)
+            self._m_swap_out.inc()
+            if TRACE.enabled:
+                TRACE.instant("swap_out", tid=vs.request_id + 1,
+                              args={"pages": n_pages})
         return True
 
     def swapped_requests(self) -> List[int]:
@@ -957,6 +1092,8 @@ class Engine:
         for idx, (request, _, _) in enumerate(self._queue):
             if request.request_id == request_id:
                 del self._queue[idx]
+                self._m_aborts.inc()
+                self._m_finished.inc(reason="aborted")
                 return Result(request_id=request_id, tokens=[],
                               prompt_len=int(request.prompt.size),
                               finish_reason="aborted")
@@ -969,6 +1106,7 @@ class Engine:
             self._drain_inflight(self._pending_finished)
             cur = self._slot_meta.get(slot)
             if cur is not None and cur[0].request_id == request_id:
+                self._m_aborts.inc()
                 return self._finish(slot, "aborted")
             for i, r in enumerate(self._pending_finished):
                 if r.request_id == request_id:
@@ -1052,6 +1190,12 @@ class Engine:
             s.draft_accepted += m
             s.verify_steps += 1
             self._accept_hist[m] += 1
+            self._m_spec_proposed.inc(n)
+            self._m_spec_accepted.inc(m)
+            self._m_accept_len.observe(float(m))
+            if TRACE.enabled:
+                TRACE.instant("verify_round", tid=s.request_id + 1,
+                              args={"proposed": n, "accepted": m})
             # paged rollback: unmap pages holding only rejected candidates
             self.pool.rollback(i, (s.pos - 1) // psz + 1)
             self._provider.observe(i, emitted)
@@ -1149,6 +1293,12 @@ class Engine:
             s.draft_accepted += m_kept
             s.verify_steps += 1
             self._accept_hist[m_kept] += 1
+            self._m_spec_proposed.inc(bud)
+            self._m_spec_accepted.inc(m_kept)
+            self._m_accept_len.observe(float(m_kept))
+            if TRACE.enabled:
+                TRACE.instant("verify_round", tid=s.request_id + 1,
+                              args={"proposed": bud, "accepted": m_kept})
             if int(topo.spine[m]) != fin:
                 self._offspine_hist[m_kept] += 1
             emitted_by[i] = emitted
@@ -1201,6 +1351,13 @@ class Engine:
             if self.spec.provider == "tree":
                 self._offspine_hist[:] = 0
         return out
+
+    def dump_trace(self, path: str) -> int:
+        """Export the recorded event trace (obs.trace ring) to `path` as
+        Chrome trace-event JSON; returns the number of events written.
+        Recording must have been enabled (`obs.trace.enable()` or
+        `launch/serve.py --trace`) for the ring to hold anything."""
+        return Tr.dump(path)
 
     def drain(self) -> List[Result]:
         """Run step() until the queue and every slot are empty."""

@@ -48,16 +48,24 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import heapq
-import time
 from typing import List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as Om
+from repro.obs.clock import clock
 from repro.serve.api import Request, Result
 from repro.serve.engine import Engine
 from repro.serve.sampling import SamplingSpec
 
 _END = object()  # stream terminator sentinel
+
+# admission-policy outcomes (every timestamp here reads obs.clock so
+# deadline/shed tests can install a FakeClock instead of sleeping)
+_M_SHED = Om.counter("serve_shed_total",
+                     "Requests shed by the bounded admission queue")
+_M_DEADLINE = Om.counter("serve_deadline_expired_total",
+                         "Requests expired by their TTFT deadline")
 
 
 def _empty_result(sess: "StreamSession", reason: str) -> Result:
@@ -91,7 +99,7 @@ class StreamSession:
         self.request_id = request.request_id
         self.priority = priority
         self.seq = seq
-        self.submit_time = time.perf_counter()
+        self.submit_time = clock()
         self.deadline = (
             self.submit_time + deadline_s if deadline_s is not None else None
         )
@@ -205,6 +213,7 @@ class AsyncEngine:
             victim = worst if worst.priority < priority else session
             if victim is not session:
                 del self._queued[victim.request_id]
+            _M_SHED.inc()
             victim._finish(_empty_result(victim, "shed"))
             if victim is session:
                 return session
@@ -237,7 +246,7 @@ class AsyncEngine:
         eng = self._engine
         while True:
             self._apply_aborts()
-            self._expire(time.perf_counter())
+            self._expire(clock())
             self._admit()
             busy = bool(
                 eng._queue
@@ -256,7 +265,7 @@ class AsyncEngine:
                 ]
                 timeout = None
                 if deadlines:
-                    timeout = max(0.0, min(deadlines) - time.perf_counter())
+                    timeout = max(0.0, min(deadlines) - clock())
                 try:
                     await asyncio.wait_for(self._wake.wait(), timeout)
                 except asyncio.TimeoutError:
@@ -280,6 +289,7 @@ class AsyncEngine:
         for rid, sess in list(self._queued.items()):
             if sess.deadline is not None and now >= sess.deadline:
                 del self._queued[rid]
+                _M_DEADLINE.inc()
                 sess._finish(_empty_result(sess, "deadline_exceeded"))
         self._update_space()
         # deadline covers TTFT — and re-arms while a resident sits in the
@@ -292,6 +302,7 @@ class AsyncEngine:
                 and now >= sess.deadline
             ):
                 del self._live[rid]
+                _M_DEADLINE.inc()
                 result = self._engine.abort(rid)
                 if result is not None:
                     result = dataclasses.replace(

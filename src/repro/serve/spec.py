@@ -61,9 +61,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode as Dec
+from repro.obs import metrics as Om
+from repro.obs.clock import clock
 from repro.serve import sampling as Smp
 from repro.serve.batching import pow2_bucket
 from repro.serve.sampling import SamplingSpec
+
+# host-side wall clock a draft provider spends producing candidates per
+# verify round (both linear propose() and tree propose_tree() record it)
+_M_PROPOSE = Om.histogram("serve_draft_propose_seconds",
+                          "Draft proposal wall-clock per verify round")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +175,7 @@ class NGramDraft:
         return []
 
     def propose(self, active, last, budgets):
+        t0 = clock()
         cap = last.shape[0]
         drafts = np.zeros((cap, self.k), np.int32)
         lens = np.zeros((cap,), np.int32)
@@ -179,6 +187,7 @@ class NGramDraft:
             cont = self._lookup(self._hist[i], int(budgets[i]))
             drafts[i, :len(cont)] = cont
             lens[i] = len(cont)
+        _M_PROPOSE.observe(clock() - t0)
         return drafts, lens
 
 
@@ -254,6 +263,7 @@ class ModelDraft:
         self.pos[slot] = self.max_len - 1
 
     def propose(self, active, last, budgets):
+        t0 = clock()
         pos = np.full((self.capacity,), self.max_len - 1, np.int64)
         for i in active:
             pos[i] = self.pos[i]
@@ -263,7 +273,9 @@ class ModelDraft:
         lens = np.zeros((self.capacity,), np.int32)
         for i in active:
             lens[i] = min(self.k, int(budgets[i]))
-        return np.asarray(drafts), lens
+        drafts = np.asarray(drafts)
+        _M_PROPOSE.observe(clock() - t0)
+        return drafts, lens
 
 
 def make_provider(spec: SpecConfig, cfg, capacity: int,
@@ -564,6 +576,7 @@ class TreeDraft:
         stream — required when temperature > 0 so each request's spine
         is an independent q-sample (accept_tree's q-aware rule is only
         lossless against fresh samples)."""
+        t0 = clock()
         B, J = self.capacity, self.depth + 1
         pend = np.zeros((B, J), np.int32)
         plen = np.ones((B,), np.int32)
@@ -597,6 +610,7 @@ class TreeDraft:
                 cand[i, col:col + f] = grp[:f]
                 col += f
         dq = np.asarray(qrows) if qrows is not None else None
+        _M_PROPOSE.observe(clock() - t0)
         return cand, dq
 
 

@@ -1,0 +1,373 @@
+"""Observability layer (repro/obs/): registry semantics, Prometheus text
+rendering, trace ring + Chrome export, per-request timeline completeness
+over a staggered continuous-batching run, the injectable clock, and the
+instrumentation-changes-nothing digest contract.
+
+Registry/trace state is process-global, so every test that touches the
+global REGISTRY / TRACE / clock restores it in a finally block.
+"""
+import json
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import AttentionSpec
+from repro.models import model as M
+from repro.obs import FakeClock, metrics as Om, set_clock, trace as Otr
+from repro.obs.server import MetricsServer
+from repro.serve import Engine, Request, SamplingSpec
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---- metrics registry ----------------------------------------------------
+
+def test_counter_semantics():
+    reg = Om.Registry()
+    c = reg.counter("hits_total", "hits")
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    c.inc(2, shard="a")
+    c.inc(3, shard="b")
+    assert c.value(shard="a") == 2 and c.value(shard="b") == 3
+    assert c.value(shard="unseen") == 0.0
+    assert reg.counter("hits_total") is c          # get-or-create
+    with pytest.raises(AssertionError):
+        reg.gauge("hits_total")                    # kind mismatch
+
+
+def test_gauge_set_dec():
+    reg = Om.Registry()
+    g = reg.gauge("level")
+    g.set(7)
+    g.dec(2)
+    assert g.value() == 5.0
+    g.set(-1.5)
+    assert g.value() == -1.5
+
+
+def test_registry_disable_is_noop_and_reset_keeps_registrations():
+    reg = Om.Registry()
+    c = reg.counter("n_total")
+    reg.enabled = False
+    c.inc(10)
+    assert c.value() == 0.0
+    reg.enabled = True
+    c.inc(1)
+    reg.reset()
+    assert c.value() == 0.0
+    assert reg.get("n_total") is c
+
+
+def test_histogram_bucket_edges_le_semantics():
+    """Prometheus le: a value exactly at a bound lands IN that bucket;
+    values past the last bound count only toward +Inf."""
+    reg = Om.Registry()
+    h = reg.histogram("lat", buckets=(0.001, 0.01, 0.1, 1.0))
+    h.observe(0.001)       # == first bound -> bucket le=0.001
+    h.observe(0.0011)      # -> le=0.01
+    h.observe(1.0)         # == last bound -> le=1.0
+    h.observe(2.0)         # past the last bound -> +Inf only
+    snap = h._snapshot()[0]
+    # snapshot buckets are cumulative [bound, count<=bound]
+    assert snap["buckets"] == [[0.001, 1], [0.01, 2], [0.1, 2], [1.0, 3]]
+    assert snap["count"] == 4
+    assert snap["min"] == 0.001 and snap["max"] == 2.0
+    s = h.summary()
+    assert s["count"] == 4
+    assert s["mean"] == pytest.approx((0.001 + 0.0011 + 1.0 + 2.0) / 4)
+
+
+def test_histogram_quantile_interpolates_and_clamps():
+    reg = Om.Registry()
+    h = reg.histogram("q", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (1.0, 3.0, 3.5, 7.0):
+        h.observe(v)
+    # p50 target=2 obs: covered inside the (2,4] bucket
+    assert 2.0 <= h.quantile(0.5) <= 4.0
+    # quantiles clamp to the observed extremes
+    assert h.quantile(0.0) >= 1.0
+    assert h.quantile(1.0) <= 7.0
+    assert reg.histogram("empty").quantile(0.5) == 0.0
+
+
+def test_prometheus_text_golden():
+    reg = Om.Registry()
+    reg.counter("req_total", "requests").inc(3, reason="stop")
+    reg.gauge("depth").set(2)
+    reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0)).observe(0.5)
+    assert reg.render_prometheus() == (
+        "# TYPE depth gauge\n"
+        "depth 2\n"
+        "# HELP lat_seconds latency\n"
+        "# TYPE lat_seconds histogram\n"
+        'lat_seconds_bucket{le="0.1"} 0\n'
+        'lat_seconds_bucket{le="1"} 1\n'
+        'lat_seconds_bucket{le="+Inf"} 1\n'
+        "lat_seconds_sum 0.5\n"
+        "lat_seconds_count 1\n"
+        "# HELP req_total requests\n"
+        "# TYPE req_total counter\n"
+        'req_total{reason="stop"} 3\n'
+    )
+
+
+def test_values_flat_view_and_jsonl_line():
+    reg = Om.Registry()
+    reg.counter("a_total").inc(2)
+    reg.histogram("h_seconds", buckets=(1.0,)).observe(0.5)
+    flat = reg.values()
+    assert flat == {"a_total": 2.0, "h_seconds_count": 1,
+                    "h_seconds_sum": 0.5}
+    # jsonl_line goes through the GLOBAL registry: merge + valid JSON
+    line = Om.jsonl_line({"step": 7})
+    payload = json.loads(line)
+    assert payload["step"] == 7
+
+
+# ---- trace recorder ------------------------------------------------------
+
+def test_trace_ring_evicts_oldest_first():
+    tr = Otr.TraceRecorder(capacity=4)
+    tr.enable()
+    for i in range(6):
+        tr.instant(f"e{i}", ts=float(i))
+    assert len(tr) == 4
+    assert [e["name"] for e in tr.events()] == ["e2", "e3", "e4", "e5"]
+
+
+def test_trace_disabled_records_nothing():
+    tr = Otr.TraceRecorder()
+    tr.instant("x", ts=0.0)
+    tr.span("y", 0.0, 1.0)
+    assert len(tr) == 0
+
+
+def test_chrome_export_schema(tmp_path):
+    tr = Otr.TraceRecorder()
+    tr.enable()
+    tr.name_thread(1, "req 0")
+    tr.span("request", 1.0, 1.5, tid=1, args={"reason": "stop"})
+    tr.instant("submit", tid=1, ts=1.0)
+    doc = tr.to_chrome()
+    evs = doc["traceEvents"]
+    assert evs[0] == {"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+                      "args": {"name": "req 0"}}
+    x = next(e for e in evs if e["ph"] == "X")
+    assert x["ts"] == pytest.approx(1.0e6)
+    assert x["dur"] == pytest.approx(0.5e6)
+    assert x["args"] == {"reason": "stop"}
+    i = next(e for e in evs if e["ph"] == "i")
+    assert i["s"] == "t" and i["ts"] == pytest.approx(1.0e6)
+    # dump() writes the same doc as valid JSON
+    out = tmp_path / "trace.json"
+    assert tr.dump(str(out)) == 2
+    loaded = json.loads(out.read_text())
+    assert loaded["traceEvents"] == doc["traceEvents"]
+
+
+# ---- injectable clock ----------------------------------------------------
+
+def test_fake_clock_advance_and_restore():
+    from repro.obs import clock, get_clock
+    fc = FakeClock(10.0)
+    set_clock(fc)
+    try:
+        assert clock() == 10.0
+        fc.advance(2.5)
+        assert clock() == 12.5
+    finally:
+        set_clock(None)
+    assert get_clock() is not fc
+    assert clock() > 0.0
+
+
+# ---- engine integration --------------------------------------------------
+
+def _small_cfg(vocab=128, max_seq=256):
+    bb = AttentionSpec(kind="bigbird", causal=True, block_size=8,
+                       num_window_blocks=3, num_global_blocks=1,
+                       num_random_blocks=1)
+    return M.ModelConfig(name="obs-test", d_model=32, num_layers=2,
+                         num_heads=4, num_kv_heads=4, d_ff=64,
+                         vocab_size=vocab, attn=bb, dtype=jnp.float32,
+                         scan_layers=False, remat="none", loss_chunk=32,
+                         max_seq=max_seq)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _small_cfg()
+    params = M.init(cfg, KEY)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (19, 40, 33, 11, 26, 17)]
+    engine = Engine(cfg, params, max_len=64, capacity=3, prefill_chunk=2)
+    return engine, prompts
+
+
+def _staggered_wave(engine, prompts, max_new=8):
+    """2x oversubscribed staggered run: capacity admits 3, the rest queue."""
+    reqs = [Request(prompt=p, max_new_tokens=max_new,
+                    sampling=SamplingSpec(seed=i))
+            for i, p in enumerate(prompts)]
+    for r in reqs[:3]:
+        engine.submit(r)
+    engine.step()
+    for r in reqs[3:]:
+        engine.submit(r)
+    return engine.drain()
+
+
+def test_per_request_timeline_complete(setup):
+    """Every submitted request's timeline closes: a submit instant, an
+    admit instant, a queue_wait span and one closing `request` span per
+    request id, on that request's tid — across a staggered run where
+    half the requests wait in the queue."""
+    engine, prompts = setup
+    Otr.TRACE.enable()
+    Otr.TRACE.clear()
+    try:
+        results = _staggered_wave(engine, prompts)
+        events = Otr.TRACE.events()
+    finally:
+        Otr.TRACE.disable()
+        Otr.TRACE.clear()
+    assert len(results) == len(prompts)
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    rids = {r.request_id for r in results}
+    for name in ("submit", "admit", "queue_wait", "request", "first_token"):
+        tids = {e["tid"] for e in by_name.get(name, [])}
+        assert tids == {rid + 1 for rid in rids}, name
+    # the closing span covers submit..finish and carries the verdict
+    for e in by_name["request"]:
+        assert e["ph"] == "X" and e["dur"] >= 0.0
+        assert e["args"]["reason"] in ("stop", "length")
+        assert e["args"]["tokens"] > 0
+    # engine phase spans land on tid 0
+    assert {e["tid"] for e in by_name["engine_step"]} == {0}
+    assert "prefill" in by_name and "decode" in by_name
+
+
+def test_engine_metrics_recorded(setup):
+    engine, prompts = setup
+    Om.REGISTRY.reset()
+    results = _staggered_wave(engine, prompts)
+    n = len(results)
+    toks = sum(len(r.tokens) for r in results)
+    assert Om.REGISTRY.get("serve_requests_submitted_total").value() == n
+    assert Om.REGISTRY.get(
+        "serve_requests_finished_total").value(reason="length") == n
+    assert Om.REGISTRY.get("serve_tokens_generated_total").value() == toks
+    assert Om.REGISTRY.get("serve_ttft_seconds").summary()["count"] == n
+    assert Om.REGISTRY.get("serve_tpot_seconds").summary()["count"] == n
+    assert Om.REGISTRY.get("serve_queue_wait_seconds").summary()["count"] == n
+    assert Om.REGISTRY.get("serve_step_seconds").summary()["count"] > 0
+    # gauges settle to an idle pool after the drain
+    assert Om.REGISTRY.get("serve_pages_in_use").value() == 0
+    assert Om.REGISTRY.get("serve_queue_depth").value() == 0
+
+
+def test_instrumentation_leaves_outputs_unchanged(setup):
+    """The digest contract: the same wave with metrics+trace on, and with
+    both off, must produce identical token streams."""
+    engine, prompts = setup
+    res_on = _staggered_wave(engine, prompts)
+    Om.disable()
+    try:
+        res_off = _staggered_wave(engine, prompts)
+    finally:
+        Om.enable()
+    stream = lambda rs: sorted(  # noqa: E731
+        (r.request_id % len(prompts), tuple(r.tokens)) for r in rs)
+    assert stream(res_on) == stream(res_off)
+
+
+def test_fake_clock_makes_latency_deterministic(setup):
+    """With an injected frozen clock, ttft_s / queue_wait_s are exact:
+    submit at t=100, advance to t=105, run -> every latency is 5.0 and
+    tpot_s is 0.0 (no wall time passes during decode)."""
+    engine, prompts = setup
+    fc = FakeClock(100.0)
+    set_clock(fc)
+    Om.REGISTRY.reset()
+    try:
+        engine.submit(Request(prompt=prompts[0], max_new_tokens=4,
+                              sampling=SamplingSpec(seed=0)))
+        fc.advance(5.0)
+        results = engine.drain()
+    finally:
+        set_clock(None)
+    (r,) = results
+    assert r.ttft_s == 5.0
+    assert r.queue_wait_s == 5.0
+    assert r.tpot_s == 0.0
+    h = Om.REGISTRY.get("serve_ttft_seconds")
+    assert h.summary()["min"] == h.summary()["max"] == 5.0
+
+
+def test_fake_clock_frontend_deadline_expires_without_sleeping(setup):
+    """The async front-end reads the same injectable clock: a deadline of
+    0 expires on the run loop's first sweep with a frozen FakeClock — no
+    wall time passes, no asyncio sleeps — and the expiry lands in
+    serve_deadline_expired_total."""
+    import asyncio
+
+    from repro.serve import AsyncEngine
+    engine, prompts = setup
+    set_clock(FakeClock(50.0))
+    Om.REGISTRY.reset()
+    try:
+        async def run():
+            front = AsyncEngine(engine)
+            sess = await front.submit(prompts[0], 4, deadline_s=0.0)
+            r = await sess.result()
+            await front.close()
+            return r
+        r = asyncio.run(run())
+    finally:
+        set_clock(None)
+    assert r.finish_reason == "deadline_exceeded"
+    assert r.tokens == []
+    assert Om.REGISTRY.get("serve_deadline_expired_total").value() == 1
+
+
+def test_finish_guards_unset_ttft():
+    """Satellite fix: a Result built without an observed first token must
+    not dereference ttft_time (tpot_s guarded, negatives clamped)."""
+    from repro.serve.batching import SlotState
+    s = SlotState(request_id=0, pos=10, generated=3, max_new=8,
+                  stop_token=None, tokens=[1, 2, 3], prompt_len=8,
+                  admit_step=0)
+    assert s.ttft_time is None           # None until the engine observes it
+
+
+# ---- metrics HTTP server -------------------------------------------------
+
+def test_metrics_server_routes():
+    reg = Om.Registry()
+    reg.counter("probe_total", "probe").inc(4)
+    srv = MetricsServer(port=0, registry=reg).start()
+    try:
+        base = f"http://127.0.0.1:{srv.port}"
+        with urllib.request.urlopen(base + "/metrics", timeout=5) as r:
+            body = r.read().decode()
+            assert r.status == 200
+            assert r.headers["Content-Type"].startswith("text/plain")
+        assert "# TYPE probe_total counter" in body
+        assert "probe_total 4" in body
+        with urllib.request.urlopen(base + "/metrics.json", timeout=5) as r:
+            snap = json.loads(r.read().decode())
+        assert snap["probe_total"]["values"][0]["value"] == 4
+        with urllib.request.urlopen(base + "/healthz", timeout=5) as r:
+            assert r.read() == b"ok\n"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(base + "/nope", timeout=5)
+    finally:
+        srv.shutdown()

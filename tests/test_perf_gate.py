@@ -196,6 +196,37 @@ def test_int8_acceptance_floor_matches_f32_formula():
     assert any("spec_acceptance_rate_int8 dropped" in v for v in bad)
 
 
+# ---- metrics-overhead gate ----------------------------------------------
+
+def _obs(**over):
+    d = _base(continuous_tok_s_metrics_on=320.0,
+              continuous_tok_s_metrics_off=325.0)
+    d.update(over)
+    return d
+
+
+def test_metrics_overhead_band_edges():
+    """Fresh-vs-fresh: on >= off * 0.97, independent of the baseline's
+    own on/off numbers (the baseline only arms the gate)."""
+    f = _obs(continuous_tok_s_metrics_on=97.1,
+             continuous_tok_s_metrics_off=100.0)
+    assert _ok(f, _obs()) == []                 # just inside 3%
+    f = _obs(continuous_tok_s_metrics_on=96.9,
+             continuous_tok_s_metrics_off=100.0)
+    assert any("metrics overhead" in v for v in _ok(f, _obs()))
+
+
+def test_metrics_overhead_fields_missing_from_fresh_fails():
+    bad = _ok(_base(), _obs())
+    assert any("metrics overhead arms missing" in v for v in bad)
+
+
+def test_metrics_overhead_inactive_without_baseline_field():
+    f = _base(continuous_tok_s_metrics_on=50.0,
+              continuous_tok_s_metrics_off=100.0)
+    assert _ok(f, _base()) == []
+
+
 def test_parse_serving_json_prefers_marker_line():
     text = 'noise\nSERVING_JSON {"a": 1}\nmore'
     assert PG.parse_serving_json(text) == {"a": 1}
